@@ -1,0 +1,169 @@
+"""Benchmarks reproducing the paper's experimental axes (§4, Figs 7-11).
+
+Each function returns a list of (name, us_per_call, derived) rows.  Datasets
+are the synthetic stand-ins with the paper's exact |V|/|E|/|Σ| (graphs/
+datasets.py); big-graph rows run at a scale factor recorded in the name.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ilgf, one_shot_filter
+from repro.core.engine import SubgraphQueryEngine
+from repro.graphs import paper_dataset, random_labeled_graph, random_walk_query
+
+
+def _time(fn, *, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_filter_variants(rows: list):
+    """Fig 7 analogue: per-query filtering cost, CNI vs the baselines."""
+    for ds in ("HUMAN", "YEAST", "HPRD"):
+        g = paper_dataset(ds)
+        q = random_walk_query(g, 25, sparse=True, seed=1)
+        for variant in ("cni", "cni_log", "nlf", "mnd_nlf", "label_degree"):
+            res = ilgf(g, q, variant=variant)
+            us = _time(lambda: ilgf(g, q, variant=variant).alive.block_until_ready())
+            alive = int(np.asarray(res.alive).sum())
+            rows.append((
+                f"filter/{ds}/{variant}", us,
+                f"alive={alive}/{g.n_vertices};iters={int(res.iterations)}",
+            ))
+
+
+def bench_pruning_power(rows: list):
+    """The paper's core claim: CNI pruning ≈ NLF pruning at integer-compare
+    cost.  Reports candidate-pairs remaining after one-shot filtering."""
+    for ds in ("HUMAN", "YEAST", "HPRD"):
+        g = paper_dataset(ds)
+        q = random_walk_query(g, 25, sparse=False, seed=2)
+        counts = {}
+        for variant in ("cni", "nlf", "label_degree"):
+            res = one_shot_filter(g, q, variant=variant)
+            counts[variant] = int(np.asarray(res.candidates).sum())
+        rows.append((
+            f"pruning/{ds}", 0.0,
+            f"cni={counts['cni']};nlf={counts['nlf']};"
+            f"label_degree={counts['label_degree']}",
+        ))
+
+
+def bench_query_size(rows: list):
+    """Fig 7 x-axis: total time vs |V(Q)| (sparse + non-sparse)."""
+    g = paper_dataset("YEAST")
+    for n_q in (8, 16, 25, 50, 100):
+        for sparse in (True, False):
+            tag = f"{n_q}{'s' if sparse else 'n'}"
+            try:
+                q = random_walk_query(g, n_q, sparse=sparse, seed=3)
+            except ValueError:
+                continue
+            eng = SubgraphQueryEngine(g)
+            t0 = time.perf_counter()
+            emb, stats = eng.query(q, max_embeddings=1000)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((
+                f"query_size/YEAST/{tag}", us,
+                f"emb={emb.shape[0]};filtered={stats.vertices_after}",
+            ))
+
+
+def bench_label_count(rows: list):
+    """Fig 8: vary |Σ| and distribution on DANIO-RERIO."""
+    for name in ("DANIO-RERIO-32u", "DANIO-RERIO-128u",
+                 "DANIO-RERIO-32g", "DANIO-RERIO-128g"):
+        g = paper_dataset(name)
+        q = random_walk_query(g, 32, sparse=True, seed=4)
+        eng = SubgraphQueryEngine(g)
+        t0 = time.perf_counter()
+        emb, stats = eng.query(q, max_embeddings=1000)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"labels/{name}", us,
+            f"emb={emb.shape[0]};filtered={stats.vertices_after}",
+        ))
+
+
+def bench_data_scale(rows: list):
+    """Fig 11: total time vs |V(G)| (near-linear = the scalability claim)."""
+    for n_v in (20_000, 50_000, 100_000, 200_000):
+        g = random_labeled_graph(n_v, n_v * 6, 64, seed=5)
+        q = random_walk_query(g, 16, sparse=True, seed=6)
+        t0 = time.perf_counter()
+        res = ilgf(g, q)
+        res.alive.block_until_ready()
+        us = (time.perf_counter() - t0) * 1e6
+        alive = int(np.asarray(res.alive).sum())
+        rows.append((
+            f"data_scale/V={n_v}", us,
+            f"alive={alive};iters={int(res.iterations)}",
+        ))
+
+
+def bench_stream(rows: list):
+    """Fig 10 analogue: single-pass stream filtering (edges/s, peak memory)."""
+    import os
+    import tempfile
+
+    from repro.core import stream_filter_file
+    from repro.graphs import write_edge_file
+    from repro.graphs.csr import max_degree
+
+    g = random_labeled_graph(100_000, 600_000, 64, seed=7)
+    q = random_walk_query(g, 16, sparse=True, seed=8)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "g.bin")
+        write_edge_file(path, g, sorted_by_src=True)
+        t0 = time.perf_counter()
+        sr = stream_filter_file(
+            path, np.asarray(g.vlabels), q, chunk_edges=65_536,
+            d_max=max_degree(g), run_ilgf=False,
+        )
+        dt = time.perf_counter() - t0
+    eps = sr.stats.total_edges_seen / dt
+    rows.append((
+        "stream/100k-600k", dt * 1e6,
+        f"edges_per_s={eps:.0f};peak_retained={sr.stats.peak_retained_edges};"
+        f"early_pruned={sr.stats.pruned_during_stream}",
+    ))
+
+
+def bench_khop(rows: list):
+    """Appendix C: hop-2 refinement pruning power + cost."""
+    from repro.core import refine_candidates_khop
+    from repro.graphs.csr import induced_subgraph
+
+    g = paper_dataset("YEAST")
+    q = random_walk_query(g, 16, sparse=False, seed=9)
+    res = ilgf(g, q)
+    alive = np.asarray(res.alive)
+    sub, _ = induced_subgraph(g, alive)
+    cand = np.asarray(res.candidates)[alive]
+    t0 = time.perf_counter()
+    cand2 = refine_candidates_khop(sub, q, cand, k_max=2)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        "khop2/YEAST", us,
+        f"before={int(cand.sum())};after={int(cand2.sum())}",
+    ))
+
+
+def run_all() -> list:
+    rows: list = []
+    bench_filter_variants(rows)
+    bench_pruning_power(rows)
+    bench_query_size(rows)
+    bench_label_count(rows)
+    bench_data_scale(rows)
+    bench_stream(rows)
+    bench_khop(rows)
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness: one section per paper table/figure + roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--section NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+    graph    — the paper's experiments (Figs 7-11 analogues, §4)
+    kernels  — kernel-path microbenchmarks
+    roofline — derived terms from the dry-run artifacts (if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "graph", "kernels", "roofline"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.section in ("all", "graph"):
+        from benchmarks.graph_benches import run_all as graph_all
+
+        _emit(graph_all())
+    if args.section in ("all", "kernels"):
+        from benchmarks.kernel_benches import run_all as kernel_all
+
+        _emit(kernel_all())
+    if args.section in ("all", "roofline"):
+        try:
+            from repro.launch.roofline import analyze_record, load_records
+
+            rows = []
+            for rec in load_records("pod_16x16"):
+                if rec.get("status") != "ok":
+                    continue
+                a = analyze_record(rec)
+                dom_s = max(a["compute_s"], a["memory_s"], a["collective_s"])
+                rows.append((
+                    f"roofline/{rec['arch']}/{rec['shape']}",
+                    dom_s * 1e6,
+                    f"dominant={a['dominant']};frac={a['roofline_fraction']:.3f};"
+                    f"useful={a['useful_ratio']:.2f}",
+                ))
+            _emit(rows)
+        except Exception as e:  # noqa: BLE001 — roofline needs dry-run files
+            print(f"roofline/unavailable,0.0,{e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's CNI subgraph-query engine end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a labeled data graph, extracts a query with a random walk (so at
+least one embedding exists), runs the full pipeline — CNI digests → ILGF
+fixed-point filtering → breadth-first join search — and cross-checks the
+result against the Ullmann DFS oracle.
+"""
+
+import numpy as np
+
+from repro.core import SubgraphQueryEngine, embeddings_equal, host_dfs_search, ilgf
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.graphs.csr import induced_subgraph
+
+
+def main():
+    print("== CNI subgraph-query quickstart ==")
+    data = random_labeled_graph(
+        2_000, 8_000, n_labels=8, n_edge_labels=2, seed=42
+    )
+    query = random_walk_query(data, 6, sparse=True, seed=7)
+    print(f"data graph: {data.n_vertices} vertices / {data.n_edges} edges; "
+          f"query: {query.n_vertices} vertices / {query.n_edges} edges")
+
+    engine = SubgraphQueryEngine(data, filter_variant="cni", khop=2)
+    embeddings, stats = engine.query(query)
+    print(f"ILGF: {stats.vertices_before} -> {stats.vertices_after} vertices "
+          f"in {stats.ilgf_iterations} peeling rounds "
+          f"({stats.filter_seconds*1e3:.1f} ms)")
+    print(f"search: {stats.n_embeddings} embeddings "
+          f"({stats.search_seconds*1e3:.1f} ms)")
+    for row in embeddings[:5]:
+        print("  embedding:", row.tolist())
+
+    # cross-check vs the Ullmann oracle on the filtered graph
+    res = ilgf(data, query)
+    alive = np.asarray(res.alive)
+    sub, old_ids = induced_subgraph(data, alive)
+    truth = old_ids[host_dfs_search(sub, query, np.asarray(res.candidates)[alive])]
+    assert embeddings_equal(truth, embeddings), "engine != oracle!"
+    print("verified against Ullmann DFS oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Batched serving with continuous batching (Orca/vLLM-style slots).
+
+    PYTHONPATH=src python examples/serve_batch.py
+
+Eight requests with different prompt/output lengths share a 4-slot engine;
+finished sequences free their slot immediately so queued requests start
+mid-flight.  Uses the reduced granite config so it runs on the CPU host.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main():
+    cfg = get_config("granite-3-2b").reduced()
+    params, _ = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(
+        params, cfg, ServeConfig(max_batch=4, max_len=96, eos_token=-1)
+    )
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    rids = []
+    for i in range(8):
+        prompt = rng.integers(0, cfg.vocab, size=int(rng.integers(2, 10)))
+        rids.append(eng.submit(prompt, max_new=int(rng.integers(4, 12))))
+    done = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    total = sum(len(t) for _, t in done)
+    print(f"served {len(done)}/{len(rids)} requests, {total} tokens "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s on 1 CPU core)")
+    for rid, toks in sorted(done):
+        print(f"  request {rid}: {len(toks)} tokens -> {toks[:8]}...")
+    assert {r for r, _ in done} == set(rids)
+    print("all requests completed ✓")
+
+
+if __name__ == "__main__":
+    main()

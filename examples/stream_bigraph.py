@@ -1,0 +1,61 @@
+"""Out-of-core subgraph querying: the paper's Algorithm 6 on an edge stream.
+
+    PYTHONPATH=src python examples/stream_bigraph.py
+
+Writes a ~1.2M-edge labeled graph to disk, then answers a subgraph query in
+ONE sequential pass with bounded memory: counts/CNIs accumulate per chunk,
+src-sorted runs let finished vertices be pruned early (watch
+``peak_retained_edges`` stay far below |E|), and the full ILGF + join search
+runs on the small retained remainder.
+"""
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import stream_filter_file
+from repro.core.search import bfs_join_search
+from repro.graphs import random_labeled_graph, random_walk_query, write_edge_file
+from repro.graphs.csr import induced_subgraph, max_degree
+
+
+def main():
+    print("== streaming big-graph query (Algorithm 6) ==")
+    g = random_labeled_graph(200_000, 1_200_000, n_labels=64, seed=11)
+    q = random_walk_query(g, 12, sparse=True, seed=12)
+    print(f"graph: {g.n_vertices} vertices / {g.n_edges} edges "
+          f"(directed records: {g.n_directed_edges}); query: {q.n_vertices}v")
+
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "bigraph.bin")
+        write_edge_file(path, g, sorted_by_src=True)
+        size_mb = os.path.getsize(path) / 1e6
+        print(f"edge file: {size_mb:.0f} MB on disk, streamed in 64k-edge chunks")
+
+        t0 = time.perf_counter()
+        sr = stream_filter_file(
+            path, np.asarray(g.vlabels), q,
+            chunk_edges=65_536, d_max=max_degree(g), sorted_stream=True,
+        )
+        dt = time.perf_counter() - t0
+    st = sr.stats
+    print(f"single pass: {st.total_edges_seen} edge records in {dt:.1f}s "
+          f"({st.total_edges_seen/dt/1e6:.2f} M records/s)")
+    print(f"early-pruned vertices during stream: {st.pruned_during_stream}")
+    print(f"peak retained edges: {st.peak_retained_edges} "
+          f"({100*st.peak_retained_edges/g.n_directed_edges:.1f}% of stream)")
+
+    alive = np.asarray(sr.ilgf_result.alive)
+    print(f"ILGF fixed point: {int(alive.sum())} candidate vertices")
+    sub, old_ids = induced_subgraph(sr.retained, alive)
+    cand = np.asarray(sr.ilgf_result.candidates)[alive]
+    emb = bfs_join_search(sub, q, cand, max_embeddings=100)
+    print(f"embeddings found: {emb.shape[0]} (capped at 100)")
+    assert emb.shape[0] > 0, "query was sampled from the graph; must match"
+    print("ok ✓")
+
+
+if __name__ == "__main__":
+    main()

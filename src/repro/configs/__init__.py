@@ -1,0 +1,6 @@
+"""Architecture registry: exact published configs for the 10 assigned archs
+plus the paper's own engine config.  ``get_config(name)`` / ``--arch <id>``."""
+
+from repro.configs.registry import ARCHITECTURES, get_config, list_architectures
+
+__all__ = ["ARCHITECTURES", "get_config", "list_architectures"]

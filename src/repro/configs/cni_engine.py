@@ -1,0 +1,17 @@
+"""The paper's own workload config: CNI subgraph-query engine presets."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CniEngineConfig:
+    filter_variant: str = "cni"      # cni | cni_log | nlf | label_degree
+    khop: int = 1
+    searcher: str = "join"           # join | dfs
+    stream_chunk_edges: int = 65_536
+    use_kernels: bool = True         # Pallas cni_encode/candidate_filter
+    distributed_axis: str = "data"
+    join_cap_per_shard: int = 8_192
+
+
+CONFIG = CniEngineConfig()

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: CNI encoding + ILGF filtering + search."""
+
+from repro.core.cni import (
+    CniValue,
+    cni_exact_py,
+    cni_from_counts,
+    cni_log_from_counts,
+    default_max_p,
+)
+from repro.core.engine import QueryStats, SubgraphQueryEngine
+from repro.core.filters import (
+    VertexDigest,
+    cni_match,
+    cni_match_log,
+    make_digest,
+    mnd_match,
+    nlf_match,
+)
+from repro.core.ilgf import IlgfResult, ilgf, one_shot_filter, prepare_query
+from repro.core.khop import khop_counts, khop_match, refine_candidates_khop
+from repro.core.labels import LabelMap, build_label_map, counts_matrix, ord_of
+from repro.core.search import bfs_join_search, embeddings_equal, host_dfs_search
+from repro.core.stream import scan_filter, stream_filter_file

@@ -1,0 +1,85 @@
+"""Public API: the end-to-end CNI subgraph-query engine.
+
+Pipeline = (optional stream prefilter) → ILGF fixed point → compaction →
+(optional k-hop refinement) → BFS-join enumeration, i.e. the paper's full
+Figure-1-to-Figure-6 flow as one call.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Literal
+
+import numpy as np
+
+from repro.core.ilgf import ilgf
+from repro.core.khop import refine_candidates_khop
+from repro.core.search import bfs_join_search, host_dfs_search
+from repro.graphs.csr import Graph, induced_subgraph
+
+
+@dataclass
+class QueryStats:
+    filter_seconds: float = 0.0
+    search_seconds: float = 0.0
+    ilgf_iterations: int = 0
+    vertices_before: int = 0
+    vertices_after: int = 0
+    candidate_pairs: int = 0
+    n_embeddings: int = 0
+    extras: dict = field(default_factory=dict)
+
+
+class SubgraphQueryEngine:
+    """CNI-filter + join-search engine over one data graph."""
+
+    def __init__(
+        self,
+        data: Graph,
+        *,
+        filter_variant: Literal["cni", "cni_log", "nlf", "label_degree",
+                                "mnd_nlf"] = "cni",
+        khop: int = 1,
+        searcher: Literal["join", "dfs"] = "join",
+        search_vertex_cap: int = 8192,
+    ):
+        self.data = data
+        self.filter_variant = filter_variant
+        self.khop = khop
+        self.searcher = searcher
+        self.search_vertex_cap = search_vertex_cap
+
+    def query(self, q: Graph, *, max_embeddings: int | None = None):
+        """Returns (embeddings (M, |V(Q)|) int64 over original ids, stats)."""
+        stats = QueryStats(vertices_before=self.data.n_vertices)
+        t0 = time.perf_counter()
+        res = ilgf(self.data, q, variant=self.filter_variant)
+        alive = np.asarray(res.alive)
+        stats.ilgf_iterations = int(res.iterations)
+        stats.vertices_after = int(alive.sum())
+        if stats.vertices_after == 0:
+            stats.filter_seconds = time.perf_counter() - t0
+            return np.zeros((0, q.vlabels.shape[0]), np.int64), stats
+
+        sub, old_ids = induced_subgraph(self.data, alive)
+        cand = np.asarray(res.candidates)[alive]
+        if self.khop > 1 and sub.n_vertices <= self.search_vertex_cap:
+            cand = refine_candidates_khop(sub, q, cand, k_max=self.khop)
+        stats.candidate_pairs = int(cand.sum())
+        stats.filter_seconds = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        if sub.n_vertices > self.search_vertex_cap:
+            raise ValueError(
+                f"filtered graph has {sub.n_vertices} vertices > cap "
+                f"{self.search_vertex_cap}; raise search_vertex_cap or use "
+                "the distributed engine"
+            )
+        if self.searcher == "dfs":
+            emb = host_dfs_search(sub, q, cand, max_embeddings=max_embeddings)
+        else:
+            emb = bfs_join_search(sub, q, cand, max_embeddings=max_embeddings)
+        stats.search_seconds = time.perf_counter() - t1
+        stats.n_embeddings = int(emb.shape[0])
+        return old_ids[emb] if emb.size else emb, stats

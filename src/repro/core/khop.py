@@ -1,0 +1,95 @@
+"""k-hop CNI extension (the paper's Appendix C, Lemmas 7-8).
+
+``cni_k(v)`` applies the same bijection to the labels of vertices at
+shortest-path distance *exactly k* from v.  Frontier extraction uses dense
+boolean matrix powers with visited-masking — appropriate for the small
+post-prefilter graphs where the k-hop refinement is applied (the dense
+(V × V) product is MXU-shaped work on TPU).
+
+Filter chain (Lemma 8): a data vertex that passes the hop-(k) filters is
+still prunable if ``deg^{k+1}(v) < deg^{k+1}(u)`` or, degrees permitting,
+``cni_{k+1}(v) < cni_{k+1}(u)`` — same corrected comparison logic as 1-hop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filters as flt
+from repro.core.cni import default_max_p
+from repro.core.ilgf import prepare_query
+from repro.core.labels import ord_of
+from repro.graphs.csr import Graph
+
+
+def dense_adjacency(g: Graph) -> jnp.ndarray:
+    n = g.n_vertices
+    a = jnp.zeros((n, n), dtype=bool)
+    return a.at[g.src, g.dst].set(True)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_labels"))
+def khop_counts(adj: jnp.ndarray, ords: jnp.ndarray, k: int, n_labels: int):
+    """(V, L) label counts of the exactly-k-hop frontier, ∀ vertices at once."""
+    n = adj.shape[0]
+    visited = jnp.eye(n, dtype=bool) | adj
+    frontier = adj
+    for _ in range(k - 1):
+        nxt = (frontier.astype(jnp.int32) @ adj.astype(jnp.int32)) > 0
+        frontier = nxt & ~visited
+        visited = visited | frontier
+    onehot = jax.nn.one_hot(jnp.maximum(ords - 1, 0), n_labels, dtype=jnp.int32)
+    onehot = onehot * (ords > 0)[:, None]
+    return frontier.astype(jnp.int32) @ onehot  # (V, L)
+
+
+def khop_digests(g: Graph, query: Graph, k: int, d_max_k: int):
+    """Hop-k digests for data and query sides (shared label map)."""
+    from repro.core.labels import build_label_map
+
+    label_map = build_label_map(query)
+    L = label_map.n_labels
+    max_p = default_max_p(d_max_k, L)
+    ords_d = ord_of(label_map, g.vlabels)
+    ords_q = ord_of(label_map, query.vlabels)
+    cnt_d = khop_counts(dense_adjacency(g), ords_d, k, L)
+    cnt_q = khop_counts(dense_adjacency(query), ords_q, k, L)
+    dig_d = flt.make_digest(cnt_d, ords_d, d_max_k, max_p)
+    dig_q = flt.make_digest(cnt_q, ords_q, d_max_k, max_p)
+    return dig_d, dig_q
+
+
+def khop_match(g: Graph, query: Graph, k: int, *, d_max_k: int | None = None):
+    """(V, U) bool — hop-k degree + CNI_k filters (Lemmas 7-8)."""
+    if d_max_k is None:
+        d_max_k = g.n_vertices  # frontier can touch every vertex
+    dig_d, dig_q = khop_digests(g, query, k, d_max_k)
+    # Lemma 7: hop-k degree; Lemma 8: CNI_k — same corrected match structure,
+    # except label equality is the *vertex's own* label (already checked at
+    # 1-hop), so only degree/cni comparisons apply here.
+    dv, du = dig_d.deg[:, None], dig_q.deg[None, :]
+    from repro.core.cni import limb_eq, limb_ge, limb_is_saturated
+
+    vh, vl = dig_d.cni.hi[:, None], dig_d.cni.lo[:, None]
+    uh, ul = dig_q.cni.hi[None, :], dig_q.cni.lo[None, :]
+    ge = limb_ge(vh, vl, uh, ul)
+    eq = limb_eq(vh, vl, uh, ul)
+    sat = limb_is_saturated(vh, vl) | limb_is_saturated(uh, ul)
+    return ((dv > du) & (ge | sat)) | ((dv == du) & (eq | sat))
+
+
+def refine_candidates_khop(
+    g: Graph,
+    query: Graph,
+    candidates,
+    k_max: int = 2,
+) -> np.ndarray:
+    """AND hop-2..k_max filters into an existing (V, U) candidate matrix."""
+    cand = jnp.asarray(candidates)
+    for k in range(2, k_max + 1):
+        cand = cand & khop_match(g, query, k)
+    return np.asarray(cand)

@@ -1,0 +1,65 @@
+"""Query-label ordinal mapping (the paper's ``ord()``).
+
+The CNI bijection operates on positive integers assigned to the *query's*
+label alphabet: ``ord(l) ∈ 1..L`` for ``l ∈ 𝓛(Q)`` and ``ord(l) = 0``
+otherwise, which "systematically prunes the neighbors that do not verify the
+label filter" (§3.1) — vertices labeled outside 𝓛(Q) contribute nothing to
+degrees or CNIs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+
+class LabelMap(NamedTuple):
+    """Sorted unique query labels; ord(raw) = index+1 (0 = not in 𝓛(Q))."""
+
+    sorted_labels: jnp.ndarray  # (L,) int32, ascending raw labels
+
+    @property
+    def n_labels(self) -> int:
+        return int(self.sorted_labels.shape[0])
+
+
+def build_label_map(query: Graph) -> LabelMap:
+    uniq = np.unique(np.asarray(query.vlabels))
+    return LabelMap(sorted_labels=jnp.asarray(uniq.astype(np.int32)))
+
+
+def ord_of(label_map: LabelMap, raw_labels: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized ord(): (…,) raw labels -> (…,) int32 in [0, L]."""
+    pos = jnp.searchsorted(label_map.sorted_labels, raw_labels)
+    pos = jnp.clip(pos, 0, label_map.n_labels - 1)
+    hit = label_map.sorted_labels[pos] == raw_labels
+    return jnp.where(hit, pos.astype(jnp.int32) + 1, 0)
+
+
+def counts_matrix(
+    g: Graph,
+    label_map: LabelMap,
+    alive: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Neighborhood label-count matrix K[v, l] (l = ord-1), int32.
+
+    K is exactly the NLF table restricted to 𝓛(Q); the CNI is a monotone
+    compression of each row.  Only neighbors with in-query labels (and, if
+    ``alive`` is given, only alive neighbors) are counted — matching the
+    paper's ``deg_{𝓛(Q)}`` convention (Fig. 5 dotted vertices).
+    """
+    n = g.n_vertices
+    L = label_map.n_labels
+    ord_v = ord_of(label_map, g.vlabels)  # (V,)
+    ord_dst = ord_v[g.dst]
+    valid = ord_dst > 0
+    if alive is not None:
+        valid = valid & alive[g.dst] & alive[g.src]
+    flat_idx = g.src.astype(jnp.int32) * L + jnp.maximum(ord_dst - 1, 0)
+    k = jnp.zeros((n * L,), dtype=jnp.int32)
+    k = k.at[flat_idx].add(valid.astype(jnp.int32))
+    return k.reshape(n, L)

@@ -1,0 +1,254 @@
+"""Subgraph search over the ILGF-filtered graph (the paper's §3.3).
+
+Two engines:
+
+* ``host_dfs_search`` — Ullmann's recursive DFS (Algorithm 4/5) verbatim,
+  in numpy.  This is the exactness oracle for tests and the faithful
+  reproduction of the paper's search step.
+
+* ``bfs_join_search`` — the TPU-native adaptation (DESIGN.md §3): a
+  breadth-first *vectorized join*.  Partial embeddings live in a
+  (rows × matched-so-far) table; one expansion step joins the table against
+  the next query vertex's candidate list with a single batched
+  adjacency/edge-label/injectivity test (MXU/VPU-friendly), then compacts
+  survivors.  The jitted inner step has fixed shapes; a host loop chunks
+  tables that outgrow the buffer (bounded memory, no recursion).
+
+Both enumerate exactly the same embeddings (tested).  Matching order follows
+the candidate-cardinality greedy rule (smallest |C(u)| first, connected) —
+a global-pruning heuristic consistent with the paper's discussion (§2.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+# ---------------------------------------------------------------------------
+# Host DFS oracle (Ullmann subroutine, Algorithms 4-5).
+# ---------------------------------------------------------------------------
+
+
+def _host_adjacency(g: Graph):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    elab = np.asarray(g.elabels)
+    adj: dict[int, dict[int, int]] = {}
+    for s, t, e in zip(src, dst, elab):
+        adj.setdefault(int(s), {})[int(t)] = int(e)
+    return adj
+
+
+def host_dfs_search(
+    data: Graph,
+    query: Graph,
+    candidates: np.ndarray,
+    *,
+    max_embeddings: int | None = None,
+) -> np.ndarray:
+    """All embeddings (rows = mappings, columns = query vertices).
+
+    ``candidates``: (V, U) bool — C(u) columns from ILGF.
+    """
+    cand = np.asarray(candidates)
+    n_q = query.vlabels.shape[0]
+    d_adj = _host_adjacency(data)
+    q_adj = _host_adjacency(query)
+
+    # matching order: smallest candidate set first, stay connected
+    sizes = cand.sum(axis=0)
+    order: list[int] = [int(np.argmin(sizes))]
+    remaining = set(range(n_q)) - set(order)
+    while remaining:
+        connected = [u for u in remaining if any(w in q_adj.get(u, {}) for w in order)]
+        pool = connected if connected else list(remaining)
+        nxt = min(pool, key=lambda u: sizes[u])
+        order.append(nxt)
+        remaining.remove(nxt)
+
+    results: list[list[int]] = []
+    mapping = [-1] * n_q
+    used: set[int] = set()
+
+    def neighbor_check(u: int, v: int) -> bool:
+        # Algorithm 5: every matched query-neighbor must map to a data
+        # neighbor with a matching edge label.
+        for u2, el in q_adj.get(u, {}).items():
+            v2 = mapping[u2]
+            if v2 >= 0:
+                got = d_adj.get(v, {}).get(v2)
+                if got is None or got != el:
+                    return False
+        return True
+
+    def rec(depth: int) -> bool:
+        if max_embeddings is not None and len(results) >= max_embeddings:
+            return True
+        if depth == n_q:
+            results.append(list(mapping))
+            return False
+        u = order[depth]
+        for v in np.nonzero(cand[:, u])[0]:
+            v = int(v)
+            if v in used:
+                continue
+            if neighbor_check(u, v):
+                mapping[u] = v
+                used.add(v)
+                if rec(depth + 1):
+                    return True
+                used.discard(v)
+                mapping[u] = -1
+        return False
+
+    rec(0)
+    return np.asarray(results, dtype=np.int64).reshape(-1, n_q)
+
+
+# ---------------------------------------------------------------------------
+# TPU breadth-first join engine.
+# ---------------------------------------------------------------------------
+
+
+def _dense_edge_labels(g: Graph, n: int) -> np.ndarray:
+    """(n, n) int32 matrix: edge label, or -1 if no edge."""
+    m = -np.ones((n, n), dtype=np.int32)
+    m[np.asarray(g.src), np.asarray(g.dst)] = np.asarray(g.elabels)
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("n_prev",))
+def _expand_step(
+    table: jnp.ndarray,       # (R, n_prev) int32 partial embeddings
+    row_valid: jnp.ndarray,   # (R,) bool
+    cand_list: jnp.ndarray,   # (C,) int32 candidate data vertices for u_t
+    cand_valid: jnp.ndarray,  # (C,) bool
+    elab_matrix: jnp.ndarray,  # (N, N) int32 data edge labels (-1 = none)
+    q_nbr_pos: jnp.ndarray,   # (J,) int32 positions (<t) of matched q-neighbors
+    q_nbr_lab: jnp.ndarray,   # (J,) int32 required edge labels
+    q_nbr_valid: jnp.ndarray,  # (J,) bool
+    n_prev: int,
+):
+    """One join step: (R × C) validity matrix.
+
+    valid[r, c] ⇔ row r valid ∧ cand c valid
+                  ∧ ∀ matched q-neighbors j: elab(data)[table[r, pos_j], cand_c] == lab_j
+                  ∧ cand_c ∉ table[r, :]        (injectivity)
+    """
+    # adjacency + edge-label checks: gather (R, J) mapped neighbor ids
+    mapped = jnp.take_along_axis(
+        table, jnp.broadcast_to(q_nbr_pos[None, :], (table.shape[0], q_nbr_pos.shape[0])),
+        axis=1,
+    )  # (R, J)
+    got = elab_matrix[mapped[:, :, None], cand_list[None, None, :]]  # (R, J, C)
+    lab_ok = got == q_nbr_lab[None, :, None]
+    lab_ok = lab_ok | ~q_nbr_valid[None, :, None]
+    adj_ok = jnp.all(lab_ok, axis=1)  # (R, C)
+    inj_ok = jnp.all(table[:, :, None] != cand_list[None, None, :], axis=1)
+    valid = adj_ok & inj_ok & row_valid[:, None] & cand_valid[None, :]
+    return valid
+
+
+def bfs_join_search(
+    data: Graph,
+    query: Graph,
+    candidates: np.ndarray,
+    *,
+    chunk_rows: int = 8192,
+    max_embeddings: int | None = None,
+) -> np.ndarray:
+    """Enumerate all embeddings with the vectorized join plan.
+
+    Host-side orchestration keeps the result set (it is host data by
+    definition); every O(R·C·J) validity evaluation is jitted.
+    """
+    cand = np.asarray(candidates)
+    n_q = query.vlabels.shape[0]
+    n_d = data.vlabels.shape[0]
+    q_adj = _host_adjacency(query)
+    elab_matrix = jnp.asarray(_dense_edge_labels(data, n_d))
+
+    sizes = cand.sum(axis=0)
+    order: list[int] = [int(np.argmin(sizes))]
+    remaining = set(range(n_q)) - set(order)
+    while remaining:
+        connected = [u for u in remaining if any(w in q_adj.get(u, {}) for w in order)]
+        pool = connected if connected else list(remaining)
+        nxt = min(pool, key=lambda u: sizes[u])
+        order.append(nxt)
+        remaining.remove(nxt)
+    pos_of = {u: i for i, u in enumerate(order)}
+
+    # seed table with u_0's candidates
+    table = np.nonzero(cand[:, order[0]])[0].astype(np.int32).reshape(-1, 1)
+
+    for t in range(1, n_q):
+        u = order[t]
+        cand_ids = np.nonzero(cand[:, u])[0].astype(np.int32)
+        nbrs = [(pos_of[w], el) for w, el in q_adj.get(u, {}).items() if pos_of[w] < t]
+        j = max(1, len(nbrs))
+        q_pos = np.zeros(j, dtype=np.int32)
+        q_lab = np.zeros(j, dtype=np.int32)
+        q_val = np.zeros(j, dtype=bool)
+        for k, (p, el) in enumerate(nbrs):
+            q_pos[k], q_lab[k], q_val[k] = p, el, True
+
+        if table.shape[0] == 0 or cand_ids.size == 0:
+            return np.zeros((0, n_q), dtype=np.int64)
+
+        new_rows: list[np.ndarray] = []
+        c_pad = int(2 ** np.ceil(np.log2(max(cand_ids.size, 1))))
+        cand_pad = np.zeros(c_pad, dtype=np.int32)
+        cand_pad[: cand_ids.size] = cand_ids
+        cand_ok = np.zeros(c_pad, dtype=bool)
+        cand_ok[: cand_ids.size] = True
+
+        for lo in range(0, table.shape[0], chunk_rows):
+            chunk = table[lo : lo + chunk_rows]
+            r_pad = chunk.shape[0]
+            valid = _expand_step(
+                jnp.asarray(chunk),
+                jnp.ones(r_pad, dtype=bool),
+                jnp.asarray(cand_pad),
+                jnp.asarray(cand_ok),
+                elab_matrix,
+                jnp.asarray(q_pos),
+                jnp.asarray(q_lab),
+                jnp.asarray(q_val),
+                t,
+            )
+            r_idx, c_idx = np.nonzero(np.asarray(valid))
+            if r_idx.size:
+                rows = np.concatenate(
+                    [chunk[r_idx], cand_pad[c_idx][:, None]], axis=1
+                )
+                new_rows.append(rows)
+        table = (
+            np.concatenate(new_rows, axis=0)
+            if new_rows
+            else np.zeros((0, t + 1), dtype=np.int32)
+        )
+        if max_embeddings is not None and table.shape[0] > max_embeddings and t == n_q - 1:
+            table = table[:max_embeddings]
+
+    # columns are in matching order; restore query-vertex order
+    out = np.zeros((table.shape[0], n_q), dtype=np.int64)
+    for i, u in enumerate(order):
+        out[:, u] = table[:, i]
+    return out
+
+
+def embeddings_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    """Set equality of embedding tables (row order independent)."""
+    if a.shape != b.shape:
+        return False
+    if a.size == 0:
+        return True
+    sa = {tuple(r) for r in a.tolist()}
+    sb = {tuple(r) for r in b.tolist()}
+    return sa == sb

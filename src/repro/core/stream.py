@@ -1,0 +1,229 @@
+"""Single-pass stream filtering (the paper's §3.4, Algorithm 6).
+
+The counts matrix is *order-insensitive* (a neighborhood multiset ≡ its count
+vector), so degrees and CNIs accumulate incrementally over any edge-arrival
+order in one sequential pass — exactly the paper's claim.  Two variants:
+
+* ``scan_filter``        — jitted ``lax.scan`` over in-memory chunk arrays
+                           (equivalence oracle for tests).
+* ``stream_filter_file`` — true out-of-core pass over an edge file: each chunk
+  updates counts on device; edges are retained only if both endpoints pass
+  the label filter; with a src-sorted stream, vertices whose edge run has
+  ended are *finalized early* (label+degree+CNI check on their completed
+  counts) so their edges can be dropped — the paper's sorted-stream
+  optimization.  Peak retained-edge count is reported as the memory metric.
+
+Stream-time CNIs count every in-𝓛(Q)-labeled neighbor (no aliveness yet) —
+an upper bound on the post-ILGF digest, hence a *sound* pre-filter (CNI
+monotonicity again); the full ILGF fixed point then runs on the small
+retained subgraph.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filters as flt
+from repro.core.cni import default_max_p
+from repro.core.ilgf import IlgfResult, QueryDigest, ilgf, prepare_query
+from repro.core.labels import ord_of
+from repro.graphs.csr import Graph, build_graph, max_degree
+
+
+class StreamStats(NamedTuple):
+    n_chunks: int
+    peak_retained_edges: int
+    final_retained_edges: int
+    pruned_during_stream: int
+    total_edges_seen: int
+
+
+class StreamResult(NamedTuple):
+    prefilter_alive: np.ndarray  # (V,) bool after the single pass
+    retained: Graph              # filtered subgraph G_Q (Alg. 6 output)
+    ilgf_result: IlgfResult      # full fixed point on the retained graph
+    stats: StreamStats
+
+
+@functools.partial(jax.jit, static_argnames=("n_labels",))
+def _chunk_update(counts, src, dst, valid, ords, n_labels: int):
+    """Accumulate one chunk of directed edge records into K[v, l]."""
+    ord_dst = ords[dst]
+    ok = valid & (ords[src] > 0) & (ord_dst > 0)
+    idx = src.astype(jnp.int32) * n_labels + jnp.maximum(ord_dst - 1, 0)
+    flat = counts.reshape(-1)
+    flat = flat.at[idx].add(ok.astype(jnp.int32))
+    return flat.reshape(counts.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("d_max", "max_p"))
+def _match_any(counts, ords, q: QueryDigest, d_max: int, max_p: int):
+    digest = flt.make_digest(counts, ords, d_max, max_p)
+    return jnp.any(flt.cni_match(digest, q.digest), axis=1)
+
+
+def scan_filter(
+    data: Graph,
+    query: Graph,
+    *,
+    chunk_edges: int = 4096,
+    d_max: int | None = None,
+) -> np.ndarray:
+    """In-memory scan over chunks; returns the single-pass prefilter mask.
+
+    Must equal the one-shot filter computed on the whole graph (tested) —
+    this is the order-insensitivity property that makes Algorithm 6 valid.
+    """
+    if d_max is None:
+        d_max = max(1, max_degree(data))
+    n = data.n_vertices
+    q = prepare_query(query, d_max, default_max_p(d_max, build_n_labels(query)))
+    ords = ord_of(q.label_map, data.vlabels)
+    L = q.label_map.n_labels
+
+    n_edges = data.src.shape[0]
+    pad = (-n_edges) % chunk_edges
+    src = jnp.concatenate([data.src, jnp.zeros(pad, jnp.int32)])
+    dst = jnp.concatenate([data.dst, jnp.zeros(pad, jnp.int32)])
+    valid = jnp.concatenate(
+        [jnp.ones(n_edges, bool), jnp.zeros(pad, bool)]
+    )
+    n_chunks = src.shape[0] // chunk_edges
+
+    def body(counts, xs):
+        s, d, v = xs
+        return _chunk_update(counts, s, d, v, ords, L), None
+
+    counts0 = jnp.zeros((n, L), jnp.int32)
+    counts, _ = jax.lax.scan(
+        body,
+        counts0,
+        (
+            src.reshape(n_chunks, chunk_edges),
+            dst.reshape(n_chunks, chunk_edges),
+            valid.reshape(n_chunks, chunk_edges),
+        ),
+    )
+    max_p = default_max_p(d_max, L)
+    alive = _match_any(counts, ords, q, d_max, max_p) & (ords > 0)
+    return np.asarray(alive)
+
+
+def build_n_labels(query: Graph) -> int:
+    return int(np.unique(np.asarray(query.vlabels)).shape[0])
+
+
+def stream_filter_file(
+    path_or_chunks,
+    vlabels: np.ndarray,
+    query: Graph,
+    *,
+    chunk_edges: int = 65536,
+    d_max: int,
+    sorted_stream: bool = True,
+    run_ilgf: bool = True,
+) -> StreamResult:
+    """Out-of-core Algorithm 6 over an edge file (or a chunk iterator)."""
+    from repro.graphs.io import stream_edge_chunks
+
+    if isinstance(path_or_chunks, str):
+        chunks: Iterator = stream_edge_chunks(path_or_chunks, chunk_edges)
+    else:
+        chunks = iter(path_or_chunks)
+
+    n = int(vlabels.shape[0])
+    q = prepare_query(query, d_max, default_max_p(d_max, build_n_labels(query)))
+    L = q.label_map.n_labels
+    max_p = default_max_p(d_max, L)
+    ords = ord_of(q.label_map, jnp.asarray(vlabels))
+    ords_np = np.asarray(ords)
+
+    counts = jnp.zeros((n, L), jnp.int32)
+    pruned = np.zeros(n, dtype=bool)      # finalized-and-rejected
+    finalized = np.zeros(n, dtype=bool)
+    retained_chunks: list[np.ndarray] = []  # (k, 3) arrays passing label filter
+    peak_retained = 0
+    total_edges = 0
+    n_chunks = 0
+    last_src_prev = -1
+
+    for s_np, d_np, e_np, valid_np in chunks:
+        n_chunks += 1
+        total_edges += int(valid_np.sum())
+        counts = _chunk_update(
+            counts,
+            jnp.asarray(s_np),
+            jnp.asarray(d_np),
+            jnp.asarray(valid_np),
+            ords,
+            L,
+        )
+        # label-filter retention (Alg. 6 lines 15-18)
+        keep = valid_np & (ords_np[s_np] > 0) & (ords_np[d_np] > 0)
+        keep &= ~pruned[s_np] & ~pruned[d_np]
+        retained_chunks.append(
+            np.stack([s_np[keep], d_np[keep], e_np[keep]], axis=1)
+        )
+        if sorted_stream and valid_np.any():
+            # vertices with id < max src of this chunk have complete rows
+            chunk_max_src = int(s_np[valid_np].max())
+            lo, hi = last_src_prev + 1, chunk_max_src  # [lo, hi) complete
+            if hi > lo:
+                complete = np.arange(lo, hi)
+                fresh = complete[~finalized[complete]]
+                if fresh.size:
+                    rows = counts[jnp.asarray(fresh)]
+                    sub_match = _match_any(rows, ords[jnp.asarray(fresh)], q,
+                                           d_max, max_p)
+                    ok = np.asarray(sub_match) & (ords_np[fresh] > 0)
+                    pruned[fresh[~ok]] = True
+                    finalized[fresh] = True
+            last_src_prev = chunk_max_src - 1
+        retained_now = sum(
+            int((~pruned[c[:, 0]] & ~pruned[c[:, 1]]).sum())
+            for c in retained_chunks
+        )
+        peak_retained = max(peak_retained, retained_now)
+
+    # finalize everyone, single-pass prefilter mask
+    alive = np.asarray(_match_any(counts, ords, q, d_max, max_p)) & (ords_np > 0)
+    alive &= ~pruned
+    pruned_during = int(pruned.sum())
+
+    rec = (
+        np.concatenate(retained_chunks, axis=0)
+        if retained_chunks
+        else np.zeros((0, 3), dtype=np.int64)
+    )
+    keep = alive[rec[:, 0]] & alive[rec[:, 1]]
+    rec = rec[keep]
+    retained_graph = build_graph(
+        n, vlabels, rec[:, :2], rec[:, 2]
+    )
+    res = (
+        ilgf(retained_graph, query, d_max=d_max)
+        if run_ilgf
+        else IlgfResult(
+            alive=jnp.asarray(alive),
+            candidates=jnp.zeros((n, query.vlabels.shape[0]), bool),
+            iterations=jnp.asarray(0, jnp.int32),
+        )
+    )
+    stats = StreamStats(
+        n_chunks=n_chunks,
+        peak_retained_edges=peak_retained,
+        final_retained_edges=int(rec.shape[0]) // 2,
+        pruned_during_stream=pruned_during,
+        total_edges_seen=total_edges,
+    )
+    return StreamResult(
+        prefilter_alive=alive,
+        retained=retained_graph,
+        ilgf_result=res,
+        stats=stats,
+    )

@@ -1,0 +1,13 @@
+from repro.data.pipeline import (
+    DataState,
+    GraphPatternFilter,
+    SyntheticLMDataset,
+    make_pipeline,
+)
+
+__all__ = [
+    "DataState",
+    "GraphPatternFilter",
+    "SyntheticLMDataset",
+    "make_pipeline",
+]

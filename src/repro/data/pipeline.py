@@ -1,0 +1,94 @@
+"""Training data pipeline.
+
+Deterministic, checkpointable, shardable: the sampler cursor + RNG seed live
+in ``DataState`` (saved in checkpoints), so restart-resume replays exactly
+(fault-tolerance requirement, DESIGN.md §6).
+
+The CNI engine plugs in here as a *data operator* (``GraphPatternFilter``):
+documents carry small entity graphs; only documents whose graph contains an
+embedding of the query pattern pass — graph-structured corpus selection /
+dedup built on the paper's filter+search pipeline (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+
+@dataclasses.dataclass
+class DataState:
+    seed: int
+    step: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+class SyntheticLMDataset:
+    """Deterministic synthetic token stream (zipf-ish unigram mix) with a
+    stateless index->batch map: batch(i) is pure in (seed, i)."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 seed: int = 0):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        # zipfian unigrams: realistic logit/loss scales without real text
+        ranks = rng.zipf(1.3, size=(self.global_batch, self.seq_len + 1))
+        tokens = np.minimum(ranks - 1, self.vocab - 1).astype(np.int32)
+        return {
+            "tokens": tokens[:, :-1],
+            "labels": tokens[:, 1:].astype(np.int32),
+        }
+
+    def iterate(self, state: DataState) -> Iterator[tuple[dict, DataState]]:
+        step = state.step
+        while True:
+            yield self.batch_at(step), DataState(seed=state.seed, step=step + 1)
+            step += 1
+
+
+class GraphPatternFilter:
+    """CNI-engine data operator: keep documents whose entity graph matches.
+
+    ``docs`` are (tokens, Graph) pairs; the filter runs the full
+    ILGF -> join pipeline per document graph (they are tiny), so this is
+    the paper's engine doing corpus curation.
+    """
+
+    def __init__(self, query: Graph, *, max_embeddings: int = 1):
+        from repro.core.engine import SubgraphQueryEngine
+
+        self.query = query
+        self._engine_cls = SubgraphQueryEngine
+        self.max_embeddings = max_embeddings
+
+    def matches(self, doc_graph: Graph) -> bool:
+        eng = self._engine_cls(doc_graph)
+        emb, _ = eng.query(self.query, max_embeddings=self.max_embeddings)
+        return emb.shape[0] > 0
+
+    def filter(self, docs):
+        for tokens, g in docs:
+            if self.matches(g):
+                yield tokens, g
+
+
+def make_pipeline(vocab: int, seq_len: int, global_batch: int, *,
+                  seed: int = 0, state: Optional[DataState] = None):
+    ds = SyntheticLMDataset(vocab, seq_len, global_batch, seed)
+    st = state or DataState(seed=seed, step=0)
+    return ds, st

@@ -1,0 +1,36 @@
+from repro.graphs.csr import (
+    Graph,
+    PaddedGraph,
+    build_graph,
+    symmetrize,
+    to_padded,
+    induced_subgraph,
+    adjacency_bitmap,
+    max_degree,
+)
+from repro.graphs.generators import (
+    random_labeled_graph,
+    power_law_graph,
+    random_walk_query,
+)
+from repro.graphs.datasets import paper_dataset, PAPER_DATASETS
+from repro.graphs.io import write_edge_file, stream_edge_chunks, read_edge_file
+
+__all__ = [
+    "Graph",
+    "PaddedGraph",
+    "build_graph",
+    "symmetrize",
+    "to_padded",
+    "induced_subgraph",
+    "adjacency_bitmap",
+    "max_degree",
+    "random_labeled_graph",
+    "power_law_graph",
+    "random_walk_query",
+    "paper_dataset",
+    "PAPER_DATASETS",
+    "write_edge_file",
+    "stream_edge_chunks",
+    "read_edge_file",
+]

@@ -1,0 +1,184 @@
+"""Graph data structures.
+
+Two complementary representations are used throughout the engine:
+
+* ``Graph`` — an edge-list PyTree (vertex labels + symmetrized directed edge
+  arrays).  All vectorized filtering (counts matrices, CNI digests, ILGF
+  peeling) runs on this form via ``segment_sum``-style scatter ops, which keeps
+  memory at O(V·L + E) regardless of the degree distribution (no max-degree
+  padding blow-up on power-law hubs).
+
+* ``PaddedGraph`` — dense (V, D_max) neighbor tables, built only for *small*
+  graphs (queries, post-ILGF filtered graphs) where the breadth-first join
+  search needs random-access adjacency.
+
+Both are plain NamedTuples of jnp arrays so they traverse jit/shard_map
+boundaries as PyTrees.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Graph(NamedTuple):
+    """Undirected vertex+edge labeled graph in symmetrized edge-list form.
+
+    ``src``/``dst``/``elabels`` hold *both* directions of every undirected
+    edge (2·|E| entries) so that per-vertex neighborhood reductions are a
+    single segment-sum over ``src``.
+    """
+
+    vlabels: jnp.ndarray  # (V,) int32 raw vertex labels
+    src: jnp.ndarray      # (2E,) int32
+    dst: jnp.ndarray      # (2E,) int32
+    elabels: jnp.ndarray  # (2E,) int32 raw edge labels
+
+    @property
+    def n_vertices(self) -> int:
+        return int(self.vlabels.shape[0])
+
+    @property
+    def n_directed_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def n_edges(self) -> int:
+        return self.n_directed_edges // 2
+
+
+class PaddedGraph(NamedTuple):
+    """Dense neighbor-table form; pad value -1."""
+
+    vlabels: jnp.ndarray      # (V,) int32
+    nbr: jnp.ndarray          # (V, D) int32, -1 padded
+    nbr_elabels: jnp.ndarray  # (V, D) int32, -1 padded
+    deg: jnp.ndarray          # (V,) int32
+
+    @property
+    def n_vertices(self) -> int:
+        return int(self.vlabels.shape[0])
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.nbr.shape[1])
+
+
+def symmetrize(edges: np.ndarray, elabels: np.ndarray):
+    """(E,2) undirected edges -> both-direction arrays, deduplicated."""
+    edges = np.asarray(edges, dtype=np.int64)
+    elabels = np.asarray(elabels, dtype=np.int64)
+    # canonicalize + dedup undirected edges, drop self loops
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    keep = lo != hi
+    lo, hi, elabels = lo[keep], hi[keep], elabels[keep]
+    key = lo.astype(np.int64) * (hi.max() + 1 if hi.size else 1) + hi
+    _, first = np.unique(key, return_index=True)
+    lo, hi, elabels = lo[first], hi[first], elabels[first]
+    src = np.concatenate([lo, hi])
+    dst = np.concatenate([hi, lo])
+    elab = np.concatenate([elabels, elabels])
+    order = np.argsort(src, kind="stable")
+    return src[order], dst[order], elab[order]
+
+
+def build_graph(n_vertices: int, vlabels, edges, elabels=None) -> Graph:
+    """Build a ``Graph`` from host arrays; symmetrizes and dedups edges."""
+    vlabels = np.asarray(vlabels, dtype=np.int32)
+    assert vlabels.shape == (n_vertices,)
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if elabels is None:
+        elabels = np.zeros(edges.shape[0], dtype=np.int64)
+    src, dst, elab = symmetrize(edges, elabels)
+    return Graph(
+        vlabels=jnp.asarray(vlabels, dtype=jnp.int32),
+        src=jnp.asarray(src, dtype=jnp.int32),
+        dst=jnp.asarray(dst, dtype=jnp.int32),
+        elabels=jnp.asarray(elab, dtype=jnp.int32),
+    )
+
+
+def max_degree(g: Graph) -> int:
+    if g.n_directed_edges == 0:
+        return 0
+    deg = np.bincount(np.asarray(g.src), minlength=g.n_vertices)
+    return int(deg.max())
+
+
+def to_padded(g: Graph, d_max: int | None = None) -> PaddedGraph:
+    """Densify to (V, D) neighbor tables.  Host-side; for small graphs."""
+    n = g.n_vertices
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    elab = np.asarray(g.elabels)
+    deg = np.bincount(src, minlength=n)
+    d = int(deg.max()) if deg.size and deg.max() > 0 else 1
+    if d_max is not None:
+        d = max(d, d_max)
+    nbr = np.full((n, d), -1, dtype=np.int32)
+    nbe = np.full((n, d), -1, dtype=np.int32)
+    cursor = np.zeros(n, dtype=np.int64)
+    for s, t, e in zip(src, dst, elab):
+        nbr[s, cursor[s]] = t
+        nbe[s, cursor[s]] = e
+        cursor[s] += 1
+    return PaddedGraph(
+        vlabels=jnp.asarray(np.asarray(g.vlabels), dtype=jnp.int32),
+        nbr=jnp.asarray(nbr),
+        nbr_elabels=jnp.asarray(nbe),
+        deg=jnp.asarray(deg.astype(np.int32)),
+    )
+
+
+def induced_subgraph(g: Graph, keep_mask) -> tuple[Graph, np.ndarray]:
+    """Induced subgraph on ``keep_mask`` vertices.
+
+    Returns (subgraph, old_ids) where ``old_ids[new_id] = old vertex id``.
+    Host-side compaction (used after filtering, where the graph is small).
+    """
+    keep = np.asarray(keep_mask, dtype=bool)
+    old_ids = np.nonzero(keep)[0]
+    remap = -np.ones(g.n_vertices, dtype=np.int64)
+    remap[old_ids] = np.arange(old_ids.size)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    elab = np.asarray(g.elabels)
+    emask = keep[src] & keep[dst]
+    new_src = remap[src[emask]]
+    new_dst = remap[dst[emask]]
+    new_elab = elab[emask]
+    vlab = np.asarray(g.vlabels)[old_ids]
+    sub = Graph(
+        vlabels=jnp.asarray(vlab.astype(np.int32)),
+        src=jnp.asarray(new_src.astype(np.int32)),
+        dst=jnp.asarray(new_dst.astype(np.int32)),
+        elabels=jnp.asarray(new_elab.astype(np.int32)),
+    )
+    return sub, old_ids
+
+
+def adjacency_bitmap(g: Graph) -> jnp.ndarray:
+    """Dense bit-packed adjacency: (V, ceil(V/32)) uint32.
+
+    ``bit (v, w)`` set iff edge (v, w).  Used by the BFS-join search for O(1)
+    vectorized adjacency tests on the (small) filtered graph.
+    """
+    n = g.n_vertices
+    words = max(1, (n + 31) // 32)
+    bits = np.zeros((n, words), dtype=np.uint32)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    np.bitwise_or.at(bits, (src, dst // 32), (np.uint32(1) << (dst % 32).astype(np.uint32)))
+    return jnp.asarray(bits)
+
+
+def edge_label_lookup(g: Graph) -> dict[tuple[int, int], int]:
+    """Host dict (u, v) -> edge label (both directions present)."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    elab = np.asarray(g.elabels)
+    return {(int(s), int(t)): int(e) for s, t, e in zip(src, dst, elab)}

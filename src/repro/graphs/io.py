@@ -1,0 +1,86 @@
+"""Edge-file IO: sequential single-pass access (paper §3.4 access model).
+
+A data graph on disk is a sequence of ``src dst elabel`` records.  The stream
+reader yields fixed-size chunks so the filtering scan (core/stream.py) sees
+exactly the access pattern of the paper's Algorithm 6: one sequential pass,
+no random access, bounded memory.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterator
+
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+_HEADER_DTYPE = np.int64
+
+
+def write_edge_file(path: str, g: Graph, *, sorted_by_src: bool = True) -> None:
+    """Serialize a graph: vlabels block + directed-edge records."""
+    vlab = np.asarray(g.vlabels, dtype=np.int64)
+    src = np.asarray(g.src, dtype=np.int64)
+    dst = np.asarray(g.dst, dtype=np.int64)
+    elab = np.asarray(g.elabels, dtype=np.int64)
+    if sorted_by_src:
+        order = np.argsort(src, kind="stable")
+    else:
+        order = np.random.default_rng(0).permutation(src.size)
+    rec = np.stack([src[order], dst[order], elab[order]], axis=1)
+    with open(path, "wb") as f:
+        np.array([vlab.size, rec.shape[0]], dtype=_HEADER_DTYPE).tofile(f)
+        vlab.tofile(f)
+        rec.tofile(f)
+
+
+def read_edge_file(path: str) -> Graph:
+    with open(path, "rb") as f:
+        n_v, n_rec = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
+        vlab = np.fromfile(f, dtype=np.int64, count=int(n_v))
+        rec = np.fromfile(f, dtype=np.int64, count=int(n_rec) * 3).reshape(-1, 3)
+    import jax.numpy as jnp
+
+    return Graph(
+        vlabels=jnp.asarray(vlab.astype(np.int32)),
+        src=jnp.asarray(rec[:, 0].astype(np.int32)),
+        dst=jnp.asarray(rec[:, 1].astype(np.int32)),
+        elabels=jnp.asarray(rec[:, 2].astype(np.int32)),
+    )
+
+
+def stream_edge_chunks(
+    path: str, chunk_edges: int
+) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """Yield (src, dst, elabel, valid) chunks of exactly ``chunk_edges`` rows.
+
+    The last chunk is padded (valid=0 rows) so downstream jitted scans see a
+    fixed shape.  One sequential pass over the file; O(chunk) memory.
+    """
+    with open(path, "rb") as f:
+        n_v, n_rec = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
+        # skip the label block
+        f.seek(int(n_v) * 8, os.SEEK_CUR)
+        remaining = int(n_rec)
+        while remaining > 0:
+            take = min(chunk_edges, remaining)
+            rec = np.fromfile(f, dtype=np.int64, count=take * 3).reshape(-1, 3)
+            remaining -= take
+            valid = np.ones(take, dtype=bool)
+            if take < chunk_edges:
+                pad = chunk_edges - take
+                rec = np.concatenate([rec, np.zeros((pad, 3), dtype=np.int64)], axis=0)
+                valid = np.concatenate([valid, np.zeros(pad, dtype=bool)])
+            yield (
+                rec[:, 0].astype(np.int32),
+                rec[:, 1].astype(np.int32),
+                rec[:, 2].astype(np.int32),
+                valid,
+            )
+
+
+def read_vertex_labels(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        n_v, _ = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
+        return np.fromfile(f, dtype=np.int64, count=int(n_v)).astype(np.int32)

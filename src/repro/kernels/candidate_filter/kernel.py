@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused cniMatch candidate grid.
+
+One pass produces the (V × U) candidate bitmask the ILGF round consumes.
+The data-vertex axis is blocked into VMEM tiles; the query digest (a few
+hundred scalars) is resident.  The fused compare chain (label ∧ degree ∧ CNI)
+is exactly the paper's O(1)-per-pair claim realized as one vectorized VPU op
+per (block × U) tile — this is the op that replaces the O(L)-per-pair NLF
+inner loop of CFL-match/TurboISO.
+
+Output is int8 (bool is awkward across Mosaic versions); the wrapper casts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _candidate_filter_kernel(
+    ord_d_ref, deg_d_ref, cni_d_ref,
+    ord_q_ref, deg_q_ref, cni_q_ref,
+    out_ref,
+    *,
+    eps: float,
+):
+    od = ord_d_ref[...]          # (BV,)
+    dd = deg_d_ref[...]
+    cd = cni_d_ref[...]
+    oq = ord_q_ref[...]          # (U,)
+    dq = deg_q_ref[...]
+    cq = cni_q_ref[...]
+    lab = (od[:, None] == oq[None, :]) & (od[:, None] > 0)
+    dv, du = dd[:, None], dq[None, :]
+    cv, cu = cd[:, None], cq[None, :]
+    tol = eps * jnp.maximum(1.0, jnp.abs(cu))
+    ge = cv >= cu - tol
+    eq = jnp.abs(cv - cu) <= tol
+    both_empty = (dv == 0) & (du == 0)
+    match = lab & (((dv > du) & ge) | ((dv == du) & (eq | both_empty)))
+    out_ref[...] = match.astype(jnp.int8)
+
+
+def candidate_filter_pallas(
+    ord_d, deg_d, cni_d, ord_q, deg_q, cni_q,
+    *,
+    block_v: int = 512,
+    eps: float = 1e-4,
+    interpret: bool = False,
+):
+    v = ord_d.shape[0]
+    u = ord_q.shape[0]
+    assert v % block_v == 0
+    grid = (v // block_v,)
+    kernel = functools.partial(_candidate_filter_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v,), lambda i: (i,)),
+            pl.BlockSpec((block_v,), lambda i: (i,)),
+            pl.BlockSpec((block_v,), lambda i: (i,)),
+            pl.BlockSpec((u,), lambda i: (0,)),
+            pl.BlockSpec((u,), lambda i: (0,)),
+            pl.BlockSpec((u,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_v, u), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, u), jnp.int8),
+        interpret=interpret,
+    )(ord_d, deg_d, cni_d, ord_q, deg_q, cni_q)

@@ -1,0 +1,37 @@
+"""Jit'd wrapper: pad, dispatch kernel/ref, cast mask to bool."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.candidate_filter.kernel import candidate_filter_pallas
+from repro.kernels.candidate_filter.ref import candidate_filter_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "use_kernel"))
+def candidate_filter(
+    ord_d, deg_d, cni_d, ord_q, deg_q, cni_q,
+    *,
+    block_v: int = 512,
+    use_kernel: bool = True,
+):
+    """(V, U) bool candidate mask via the fused cniMatch kernel."""
+    if not use_kernel:
+        return candidate_filter_ref(ord_d, deg_d, cni_d, ord_q, deg_q, cni_q)
+    v = ord_d.shape[0]
+    pad = (-v) % block_v
+    pad_i = lambda x: jnp.pad(x, (0, pad))
+    mask = candidate_filter_pallas(
+        pad_i(ord_d), pad_i(deg_d), pad_i(cni_d.astype(jnp.float32)),
+        ord_q, deg_q, cni_q.astype(jnp.float32),
+        block_v=block_v,
+        interpret=not _on_tpu(),
+    )
+    return mask[:v].astype(bool)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused candidate filter."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def candidate_filter_ref(
+    ord_d: jnp.ndarray,     # (V,) int32
+    deg_d: jnp.ndarray,     # (V,) int32
+    cni_d: jnp.ndarray,     # (V,) f32 log-space
+    ord_q: jnp.ndarray,     # (U,) int32
+    deg_q: jnp.ndarray,     # (U,) int32
+    cni_q: jnp.ndarray,     # (U,) f32
+    eps: float = 1e-4,
+):
+    """Corrected cniMatch on log digests -> (V, U) bool."""
+    lab = (ord_d[:, None] == ord_q[None, :]) & (ord_d[:, None] > 0)
+    dv, du = deg_d[:, None], deg_q[None, :]
+    cv, cu = cni_d[:, None], cni_q[None, :]
+    tol = eps * jnp.maximum(1.0, jnp.abs(cu))
+    ge = cv >= cu - tol
+    eq = jnp.abs(cv - cu) <= tol
+    both_empty = (dv == 0) & (du == 0)
+    return lab & (((dv > du) & ge) | ((dv == du) & (eq | both_empty)))

@@ -1,0 +1,50 @@
+"""Jit'd public wrapper for the cni_encode kernel (padding + table mgmt).
+
+On CPU the kernel executes in Pallas ``interpret`` mode (bit-accurate body
+semantics); on TPU it compiles to Mosaic.  ``use_kernel=False`` falls back to
+the pure-jnp oracle — the ILGF driver exposes this as a config knob.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cni import log_hbar_table
+from repro.kernels.cni_encode.kernel import cni_encode_pallas
+from repro.kernels.cni_encode.ref import cni_encode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d_max", "max_p", "block_v", "use_kernel")
+)
+def cni_encode(
+    counts: jnp.ndarray,
+    *,
+    d_max: int,
+    max_p: int,
+    block_v: int = 256,
+    use_kernel: bool = True,
+):
+    """Digest every count row: returns (cni_log (V,) f32, deg (V,) int32)."""
+    if not use_kernel:
+        return cni_encode_ref(counts, d_max, max_p)
+    v = counts.shape[0]
+    pad = (-v) % block_v
+    padded = jnp.pad(counts, ((0, pad), (0, 0)))
+    table = log_hbar_table(d_max, max_p)
+    log_out, deg_out = cni_encode_pallas(
+        padded,
+        table,
+        d_max=d_max,
+        max_p=max_p,
+        block_v=block_v,
+        interpret=not _on_tpu(),
+    )
+    return log_out[:v], deg_out[:v]

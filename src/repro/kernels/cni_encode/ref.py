@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the cni_encode kernel: log-space CNI digests from a
+label-count matrix.  Delegates to the core implementation (itself validated
+against the arbitrary-precision host oracle in tests/test_cni.py)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cni import cni_log_from_counts
+
+
+def cni_encode_ref(counts: jnp.ndarray, d_max: int, max_p: int):
+    """counts: (V, L) int32 -> (cni_log (V,) f32, deg (V,) int32)."""
+    deg = counts.sum(axis=-1).astype(jnp.int32)
+    return cni_log_from_counts(counts, d_max, max_p), deg

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Streaming-softmax over KV blocks (FlashAttention-style, IO-aware): the
+(Sq × Skv) score matrix never materializes.  Tiling: per grid step one
+(bq × D) query tile is VMEM-resident; the kernel loops over (bk × D) KV
+tiles with a running (m, l, acc) rescale.  MXU work is the two matmuls per
+tile pair; bq/bk default to 128 to match MXU alignment.
+
+Grid: (batch, q_heads, Sq/bq).  GQA is handled in the index maps — the KV
+block index maps query head h to KV head h // group, so no repeat/broadcast
+copy of K/V ever happens (saves Hq/Hkv × KV bytes of HBM traffic versus the
+naive jnp.repeat formulation — that delta is visible in §Perf).
+
+Supports causal masking, optional sliding window, and a query-position
+offset so the same kernel serves chunked prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, bq, D)
+    k_ref,  # (1, 1, Skv, D)
+    v_ref,  # (1, 1, Skv, D)
+    o_ref,  # (1, 1, bq, D)
+    *,
+    block_k: int,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    sm_scale: float,
+    kv_len: int | None,
+):
+    bq, d = q_ref.shape[2], q_ref.shape[3]
+    skv = k_ref.shape[2]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale  # (bq, D)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0) + q_offset
+
+    n_kb = skv // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = k_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1
+        )
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        if kv_len is not None:
+            mask &= k_pos < kv_len  # exclude padded keys
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Skv, D)
+    v: jnp.ndarray,  # (B, Hkv, Skv, D)
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    interpret: bool = False,
+):
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    assert sq % block_q == 0 and skv % block_k == 0
+    sm_scale = float(1.0 / (d ** 0.5))
+    grid = (b, hq, sq // block_q)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        sm_scale=sm_scale,
+        kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, h, i: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, skv, d), lambda bb, h, i: (bb, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, skv, d), lambda bb, h, i: (bb, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bb, h, i: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,78 @@
+"""Jit'd flash-attention wrapper: padding, backend dispatch, custom_vjp.
+
+Forward runs the Pallas kernel (interpret mode off-TPU); backward uses the
+rematerialized reference (standard practice for fwd-only flash kernels —
+training steps wrap layers in remat anyway, and the dry-run/roofline path
+only ever lowers the forward+reference-VJP pair).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(
+    q, k, v,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_kernel: bool = True,
+):
+    """(B, Hq, Sq, D) × (B, Hkv, Skv, D)² -> (B, Hq, Sq, D)."""
+    if not use_kernel:
+        return mha_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pad_q = (-sq) % bq
+    pad_k = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        block_q=bq,
+        block_k=bk,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        kv_len=skv if pad_k else None,
+        interpret=not _on_tpu(),
+    )
+    return out[:, :, :sq, :]
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k, use_kernel):
+    out = flash_attention(q, k, v, causal, window, q_offset, block_q, block_k,
+                          use_kernel)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, q_offset, block_q, block_k, use_kernel, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: mha_ref(
+            q_, k_, v_, causal=causal, window=window, q_offset=q_offset
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

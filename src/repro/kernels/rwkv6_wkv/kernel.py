@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: RWKV-6 WKV recurrence, chunk-tiled with carried state.
+
+Layout (DESIGN.md §7): grid = (B·H, T/bt).  TPU grid steps execute in order,
+so the (Dk × Dv) f32 state lives in VMEM *scratch carried across grid steps*
+along the time axis — the canonical Pallas recurrence pattern.  Each step
+streams a (bt × D) tile of r/k/v/w through VMEM and emits the (bt × Dv)
+output tile; HBM traffic is exactly one read of the inputs and one write of
+the outputs, which is the roofline floor for this memory-bound op.
+
+Inside a tile the recurrence is stepped sequentially (bt small); each step is
+a rank-1 update + row-reduction on the VPU.  The chunked *matmul* form (used
+by the training path in models/layers/rwkv.py) trades this for MXU GEMMs —
+the kernel here is the decode/long-context engine where state locality wins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(
+    r_ref,   # (1, bt, Dk)
+    k_ref,   # (1, bt, Dk)
+    v_ref,   # (1, bt, Dv)
+    w_ref,   # (1, bt, Dk)
+    u_ref,   # (1, Dk)
+    s0_ref,  # (1, Dk, Dv)
+    o_ref,   # (1, bt, Dv)
+    sf_ref,  # (1, Dk, Dv)
+    state,   # VMEM scratch (Dk, Dv) f32, carried across time-grid steps
+    *,
+    block_t: int,
+    n_tiles: int,
+):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)
+
+    def step(t, out):
+        s = state[...]
+        k_t = k[t]                       # (Dk,)
+        v_t = v[t]                       # (Dv,)
+        kv = k_t[:, None] * v_t[None, :]  # (Dk, Dv) rank-1
+        s_eff = s + u[:, None] * kv
+        o_t = jnp.sum(r[t][:, None] * s_eff, axis=0)  # (Dv,)
+        state[...] = w[t][:, None] * s + kv
+        return out.at[t].set(o_t)
+
+    out = jax.lax.fori_loop(
+        0, block_t, step, jnp.zeros((block_t, v.shape[-1]), jnp.float32)
+    )
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    @pl.when(ti == n_tiles - 1)
+    def _fin():
+        sf_ref[0] = state[...].astype(sf_ref.dtype)
+
+
+def wkv6_pallas(
+    r: jnp.ndarray,   # (BH, T, Dk)
+    k: jnp.ndarray,   # (BH, T, Dk)
+    v: jnp.ndarray,   # (BH, T, Dv)
+    w: jnp.ndarray,   # (BH, T, Dk)
+    u: jnp.ndarray,   # (BH, Dk)
+    state0: jnp.ndarray,  # (BH, Dk, Dv)
+    *,
+    block_t: int = 64,
+    interpret: bool = False,
+):
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    assert t % block_t == 0
+    n_tiles = t // block_t
+    grid = (bh, n_tiles)
+    kernel = functools.partial(_wkv6_kernel, block_t=block_t, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_t, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_t, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_t, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state0)

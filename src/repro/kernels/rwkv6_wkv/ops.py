@@ -1,0 +1,63 @@
+"""Jit'd WKV6 wrapper: (B, H, T, D) public layout, padding, backend dispatch.
+
+Backward: rematerialized-reference VJP (same policy as flash_attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import wkv6_pallas
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def wkv6(
+    r, k, v, w, u, state0,
+    block_t: int = 64,
+    use_kernel: bool = True,
+):
+    """RWKV-6 WKV.  r/k/w: (B,H,T,Dk), v: (B,H,T,Dv), u: (H,Dk),
+    state0: (B,H,Dk,Dv).  Returns (o (B,H,T,Dv), state (B,H,Dk,Dv))."""
+    if not use_kernel:
+        return wkv6_ref(r, k, v, w, u, state0)
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    f = lambda x: jnp.pad(
+        x, ((0, 0), (0, 0), (0, pad), (0, 0))
+    ).reshape(b * h, t + pad, x.shape[-1])
+    wp = jnp.pad(
+        w, ((0, 0), (0, 0), (0, pad), (0, 0)), constant_values=1.0
+    ).reshape(b * h, t + pad, dk)  # identity decay on padded steps
+    u_flat = jnp.broadcast_to(u[None], (b, h, dk)).reshape(b * h, dk)
+    o, s_fin = wkv6_pallas(
+        f(r), f(k), f(v), wp, u_flat,
+        state0.reshape(b * h, dk, dv).astype(jnp.float32),
+        block_t=bt,
+        interpret=not _on_tpu(),
+    )
+    o = o.reshape(b, h, t + pad, dv)[:, :, :t]
+    return o, s_fin.reshape(b, h, dk, dv)
+
+
+def _fwd(r, k, v, w, u, state0, block_t, use_kernel):
+    out = wkv6(r, k, v, w, u, state0, block_t, use_kernel)
+    return out, (r, k, v, w, u, state0)
+
+
+def _bwd(block_t, use_kernel, res, g):
+    r, k, v, w, u, state0 = res
+    _, vjp = jax.vjp(lambda *a: wkv6_ref(*a), r, k, v, w, u, state0)
+    return vjp(g)
+
+
+wkv6.defvjp(_fwd, _bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle: RWKV-6 "Finch" WKV recurrence (data-dependent decay).
+
+Per head with state S ∈ ℝ^{Dk×Dv}:
+
+    o_t = rᵗ_t (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+where w_t ∈ (0,1)^{Dk} is the *per-timestep, per-channel* decay (the Finch
+novelty vs RWKV-5's static decay) and u is the bonus for the current token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jnp.ndarray,  # (B, H, T, Dk)
+    k: jnp.ndarray,  # (B, H, T, Dk)
+    v: jnp.ndarray,  # (B, H, T, Dv)
+    w: jnp.ndarray,  # (B, H, T, Dk) decay in (0, 1)
+    u: jnp.ndarray,  # (H, Dk)
+    state0: jnp.ndarray | None = None,  # (B, H, Dk, Dv)
+):
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t, u_h = xs  # (B,H,Dk) ×3, (B,H,Dk), (H,Dk)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,Dk,Dv)
+        s_eff = s + u_h[None, :, :, None] * kv
+        o_t = jnp.einsum("bhk,bhkd->bhd", r_t.astype(jnp.float32),
+                         s_eff.astype(jnp.float32))
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, o_t
+
+    xs = (
+        jnp.moveaxis(r, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(k, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(v, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(w, 2, 0).astype(jnp.float32),
+        jnp.broadcast_to(u.astype(jnp.float32), (t, h, dk)),
+    )
+    s_fin, o = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    o = jnp.moveaxis(o, 0, 2)  # (B, H, T, Dv)
+    return o.astype(r.dtype), s_fin

@@ -1,0 +1,436 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh and record memory/cost/collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results cache to results/dryrun/<mesh>/<arch>__<shape>.json; the roofline
+report (launch/roofline.py, benchmarks) reads from there.
+
+NOTE: the XLA_FLAGS assignment above MUST stay the first statement — jax
+locks the device count at first init.  Do not import repro.* above it.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import (
+    SHAPES,
+    ShapeSpec,
+    frontend_len,
+    get_config,
+    list_architectures,
+    shape_applicable,
+)
+from repro.launch.mesh import make_policy, make_production_mesh
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingPolicy, resolve_tree, use_policy
+from repro.optim.adamw import adamw_init, adamw_state_specs, adamw_update
+from repro.utils.hlo_parse import collective_bytes, op_histogram
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# input specs (assignment requirement: ShapeDtypeStruct stand-ins only)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.mode == "train":
+        out = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+        if cfg.frontend != "none":
+            out["frontend"] = sds((b, frontend_len(cfg, s), cfg.d_model),
+                                  PARAM_DTYPE)
+        return out
+    if shape.mode == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.frontend != "none":
+            out["frontend"] = sds((b, frontend_len(cfg, s), cfg.d_model),
+                                  PARAM_DTYPE)
+        return out
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": sds((b, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def batch_shardings(cfg, shape: ShapeSpec, specs: dict, pol: ShardingPolicy):
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = pol.sharding_for((), ())
+        elif k == "frontend":
+            out[k] = pol.sharding_for(v.shape, ("batch", None, None))
+        else:
+            out[k] = pol.sharding_for(v.shape, ("batch", None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, factored: bool, micro_batches: int = 1):
+    def train_step(params, opt_state, batch):
+        if micro_batches > 1:
+            mb = micro_batches
+            split = jax.tree.map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch
+            )
+
+            def acc(carry, micro):
+                g_acc, l_acc = carry
+                loss, g = jax.value_and_grad(
+                    lambda p: M.loss_fn(p, cfg, micro)[0]
+                )(params)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + loss), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            # unroll with the layer scan so cost analysis sees every pass
+            (g_sum, l_sum), _ = jax.lax.scan(
+                acc, (zero, 0.0), split, unroll=mb if cfg.unroll_scan else 1
+            )
+            grads = jax.tree.map(lambda g: g / mb, g_sum)
+            loss = l_sum / mb
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch)[0]
+            )(params)
+        new_params, new_state = adamw_update(
+            params, grads, opt_state, lr=1e-4, factored=factored
+        )
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = M.forward(
+            params, cfg, batch["tokens"], frontend=batch.get("frontend"),
+            last_only=True,
+        )
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        logits, new_cache = M.decode_step(
+            params, cfg, cache, batch["tokens"], batch["pos"]
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# the dry run proper
+# ---------------------------------------------------------------------------
+
+
+def _lower_for(cfg: ModelConfig, shape: ShapeSpec, pol: ShardingPolicy,
+               micro_batches: int = 1):
+    """Build the jitted step for one cfg variant and lower it (no compile)."""
+    factored = cfg.total_params > 100e9  # deepseek: factored 2nd moment
+    key = jax.random.PRNGKey(0)
+    captured: dict = {}
+
+    def _init(k):
+        p, s = M.init_params(k, cfg, PARAM_DTYPE)
+        captured["specs"] = s
+        return p
+
+    params_shape = jax.eval_shape(_init, key)
+    specs = captured["specs"]
+    p_shardings = resolve_tree(specs, pol, params_shape)
+    ins = input_specs(cfg, shape)
+    in_batch_shardings = batch_shardings(cfg, shape, ins, pol)
+
+    if shape.mode == "train":
+        opt_shape = jax.eval_shape(
+            functools.partial(adamw_init, factored=factored), params_shape
+        )
+        opt_specs = adamw_state_specs(specs, params_shape, factored=factored)
+        o_shardings = resolve_tree(opt_specs, pol, opt_shape)._replace(
+            step=pol.sharding_for((), ())
+        )
+        jfn = jax.jit(
+            make_train_step(cfg, factored, micro_batches),
+            in_shardings=(p_shardings, o_shardings, in_batch_shardings),
+            out_shardings=(p_shardings, o_shardings, pol.sharding_for((), ())),
+            donate_argnums=(0, 1),
+        )
+        return jfn.lower(params_shape, opt_shape, ins)
+    if shape.mode == "prefill":
+        jfn = jax.jit(
+            make_prefill_step(cfg),
+            in_shardings=(p_shardings, in_batch_shardings),
+        )
+        return jfn.lower(params_shape, ins)
+    enc_len = frontend_len(cfg, shape.seq_len) if cfg.n_encoder_layers else 0
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             PARAM_DTYPE, enc_memory_len=enc_len)[0]
+    )
+    cache_specs = M.init_cache(
+        cfg, 1, 8, PARAM_DTYPE, enc_memory_len=min(enc_len, 8)
+    )[1]
+    c_shardings = resolve_tree(cache_specs, pol, cache_shape)
+    jfn = jax.jit(
+        make_decode_step(cfg),
+        in_shardings=(p_shardings, c_shardings, in_batch_shardings),
+        out_shardings=(None, c_shardings),
+        donate_argnums=(1,),
+    )
+    return jfn.lower(params_shape, cache_shape, ins)
+
+
+def _compiled_costs(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    out = {
+        k: float(v)
+        for k, v in cost.items()
+        if isinstance(v, (int, float)) and k in (
+            "flops", "bytes accessed", "transcendentals",
+        )
+    }
+    hlo = compiled.as_text()
+    out["collectives"] = collective_bytes(hlo)
+    out["op_histogram"] = op_histogram(hlo)
+    return out
+
+
+def _stack_counts(cfg: ModelConfig) -> dict:
+    counts = {"layers": cfg.n_layers - cfg.first_k_dense}
+    if cfg.first_k_dense:
+        counts["dense_layers"] = cfg.first_k_dense
+    if cfg.n_encoder_layers:
+        counts["encoder"] = cfg.n_encoder_layers
+    return counts
+
+
+def _with_counts(cfg: ModelConfig, counts: dict) -> ModelConfig:
+    return dataclasses.replace(
+        cfg,
+        n_layers=counts["layers"] + counts.get("dense_layers", 0),
+        first_k_dense=counts.get("dense_layers", 0),
+        n_encoder_layers=counts.get("encoder", 0),
+        unroll_scan=True,  # cost analysis must see each layer body
+    )
+
+
+def scaled_costs(cfg: ModelConfig, shape: ShapeSpec, pol: ShardingPolicy,
+                 micro_batches: int = 1):
+    """Exact whole-model cost via layer-count deltas.
+
+    XLA's cost analysis counts a scanned layer body ONCE (while-loop trip
+    counts are not folded in), so we lower 1-layer and 2-layer variants per
+    stack and scale: total = base + Σ_s (count_s - 1)·(cost(2_s) - cost(base)).
+    Differencing is exact for scan-homogeneous stacks (incl. remat recompute).
+    """
+    true_counts = _stack_counts(cfg)
+    base_counts = {k: 1 for k in true_counts}
+    variants = {"base": base_counts}
+    for k in true_counts:
+        v = dict(base_counts)
+        v[k] = 2
+        variants[k] = v
+
+    costs = {}
+    for name, counts in variants.items():
+        cfg_v = _with_counts(cfg, counts)
+        compiled = _lower_for(cfg_v, shape, pol, micro_batches).compile()
+        costs[name] = _compiled_costs(compiled)
+
+    def scale(metric_fn):
+        base = metric_fn(costs["base"])
+        total = base
+        for k, n in true_counts.items():
+            delta = metric_fn(costs[k]) - base
+            total += (n - 1) * delta
+        return total
+
+    out = {
+        "flops_per_device": scale(lambda c: c.get("flops", 0.0)),
+        "bytes_per_device": scale(lambda c: c.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": scale(
+            lambda c: float(c["collectives"].get("total", 0))
+        ),
+    }
+    for kind in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                 "collective-permute"):
+        out[f"coll_{kind}"] = scale(
+            lambda c, k=kind: float(c["collectives"].get(k, 0))
+        )
+    out["per_layer"] = {
+        k: {
+            "flops": costs[k].get("flops", 0.0) - costs["base"].get("flops", 0.0),
+            "coll": float(costs[k]["collectives"].get("total", 0))
+            - float(costs["base"]["collectives"].get("total", 0)),
+        }
+        for k in true_counts
+    }
+    out["base_op_histogram"] = costs["base"]["op_histogram"]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    skip = shape_applicable(cfg, shape)
+    record: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "mode": shape.mode,
+        "model_total_params": cfg.total_params,
+        "model_active_params": cfg.active_params_per_token,
+    }
+    if skip:
+        record["status"] = "skipped"
+        record["skip_reason"] = skip
+        if save:
+            _save(record)
+        return record
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = make_policy(cfg, mesh)
+
+    with use_policy(pol), mesh:
+        # 1) FULL model: lower + compile = the dry-run proof; memory report.
+        lowered = _lower_for(cfg, shape, pol)
+        record["lower_seconds"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_seconds"] = round(time.time() - t1, 1)
+        record["memory_analysis"] = _mem_to_dict(compiled.memory_analysis())
+        record["cost_analysis_raw"] = _compiled_costs(compiled)
+        record["hlo_size_chars"] = len(compiled.as_text())
+        record["n_devices"] = mesh.size
+        # 2) exact scaled costs via layer-count deltas (roofline inputs).
+        # The roofline table is single-pod only (assignment); the multi-pod
+        # pass is the compile proof, so skip the variant compiles there.
+        if not multi_pod:
+            record["scaled"] = scaled_costs(cfg, shape, pol)
+        record["status"] = "ok"
+
+    if save:
+        _save(record)
+    return record
+
+
+def _mem_to_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(mem)[:2000]
+    return out
+
+
+def _save(record: dict):
+    d = os.path.abspath(os.path.join(RESULTS_DIR, record["mesh"]))
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{record['arch']}__{record['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
+
+
+def cell_done(arch, shape_name, multi_pod) -> bool:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    path = os.path.abspath(
+        os.path.join(RESULTS_DIR, mesh_name, f"{arch}__{shape_name}.json")
+    )
+    if not os.path.exists(path):
+        return False
+    with open(path) as f:
+        rec = json.load(f)
+    return rec.get("status") in ("ok", "skipped")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = list_architectures() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} × {shape} × {'multi' if mp else 'single'}"
+                if not args.force and cell_done(arch, shape, mp):
+                    print(f"[cached ] {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mp)
+                    if rec["status"] == "skipped":
+                        print(f"[skipped] {tag}: {rec['skip_reason']}")
+                    else:
+                        sc = rec.get("scaled")
+                        extra = (
+                            f"flops/dev={sc['flops_per_device']:.3e} "
+                            f"coll/dev={sc['collective_bytes_per_device']:.3e}B"
+                            if sc else "compile-proof only"
+                        )
+                        print(
+                            f"[ok     ] {tag}: "
+                            f"compile={rec['compile_seconds']}s {extra}"
+                        )
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((tag, str(e)))
+                    print(f"[FAIL   ] {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures")
+        raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver (§Perf): re-lowers a dry-run cell under named
+experiment variants (sharding-rule overrides, config overrides) and records
+the roofline-term deltas.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell starcoder2-15b:train_4k \
+        --variant fsdp_pure
+
+Results land in results/perf/<arch>__<shape>__<variant>.json; the
+EXPERIMENTS.md §Perf tables are generated from these.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs.registry import SHAPES, get_config
+from repro.launch.dryrun import (
+    PARAM_DTYPE,
+    _compiled_costs,
+    _lower_for,
+    _mem_to_dict,
+    scaled_costs,
+)
+from repro.launch.mesh import make_policy, make_production_mesh
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.models.sharding import use_policy
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "perf"
+)
+
+
+# Named experiment variants: (sharding-rule overrides, config overrides,
+# policy tweaks).  Composable via comma-separated --variant lists.
+VARIANTS: dict[str, dict] = {
+    "baseline": {},
+    # pure FSDP: retire tensor parallelism; batch shards over every axis and
+    # weights shard over (data, model).  Kills per-layer activation
+    # all-reduces in exchange for weight all-gathers.
+    "fsdp_pure": {
+        "rules": {
+            "batch": ("pod", "data", "model"),
+            "heads": None, "kv_heads": None, "ff": None, "vocab": None,
+            "experts": None, "fsdp": ("data", "model"),
+        },
+        "force_fsdp": True,
+    },
+    # sequence-parallel-ish: keep TP but shard the long activation dims less
+    # aggressively; batch additionally over model for norm-local work.
+    "remat_dots": {"cfg": {"remat": "dots"}},
+    "remat_none": {"cfg": {"remat": "none"}},
+    # MoE: bigger groups (fewer, fatter all_to_alls), higher capacity
+    "moe_group_2048": {"cfg_moe": {"group_size": 2048}},
+    "moe_group_128": {"cfg_moe": {"group_size": 128}},
+    # decode: keep KV cache sequence-sharded over data (SP decode)
+    "kv_seq_sharded": {"rules": {"kv_seq": "data"}},
+    "kv_seq_replicated": {"rules": {"kv_seq": None}},
+    # attention TP for archs whose head count doesn't divide: pad heads is a
+    # config change; here we instead shard attention over ff-style dims
+    "mla_absorbed": {"cfg": {"mla_absorb": True}},
+    # stream the CE over vocab chunks (vp/8 each): no (B,S,V) logits tensor
+    "ce_chunk8": {"cfg_fn": "ce_chunk8"},
+    # scatter/gather MoE slot plan: dispatch one-hot never materializes
+    "moe_gather": {"cfg_moe": {"dispatch": "gather"}},
+    # Megatron-style sequence parallelism: residual activations stay
+    # seq-sharded over the model axis between layers (ARs -> RS/AG pairs)
+    "seq_parallel": {"rules": {"seq": "model"}},
+    # decode: shard the KV/latent cache sequence over the *model* axis
+    # (free when attention heads don't divide the TP degree)
+    "kv_seq_model": {"rules": {"kv_seq": "model"}},
+    # gradient accumulation: 8 sequential microbatches per step
+    "microbatch8": {"micro_batches": 8},
+}
+
+
+def _apply_cfg_fn(cfg, name: str):
+    if name == "ce_chunk8":
+        from repro.models.model import vocab_padded
+
+        return dataclasses.replace(cfg, ce_chunk=vocab_padded(cfg) // 8)
+    raise KeyError(name)
+
+
+def apply_variant(cfg, pol, names: list[str]):
+    mb = 1
+    for name in names:
+        v = VARIANTS[name]
+        if "rules" in v:
+            pol.rules.update(v["rules"])
+        if v.get("force_fsdp"):
+            pol.enable_fsdp = True
+        if "cfg" in v:
+            cfg = dataclasses.replace(cfg, **v["cfg"])
+        if "cfg_moe" in v and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, **v["cfg_moe"])
+            )
+        if "cfg_fn" in v:
+            cfg = _apply_cfg_fn(cfg, v["cfg_fn"])
+        mb = max(mb, v.get("micro_batches", 1))
+    return cfg, pol, mb
+
+
+def run_variant(arch: str, shape_name: str, variant: str) -> dict:
+    names = variant.split(",")
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    pol = make_policy(cfg, mesh)
+    cfg, pol, mb = apply_variant(cfg, pol, names)
+
+    rec = {"arch": arch, "shape": shape_name, "variant": variant}
+    t0 = time.time()
+    with use_policy(pol), mesh:
+        compiled = _lower_for(cfg, shape, pol, mb).compile()
+        rec["compile_seconds"] = round(time.time() - t0, 1)
+        rec["memory_analysis"] = _mem_to_dict(compiled.memory_analysis())
+        rec["scaled"] = scaled_costs(cfg, shape, pol, mb)
+    sc = rec["scaled"]
+    rec["terms"] = {
+        "compute_s": sc["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": sc["bytes_per_device"] / HBM_BW,
+        "collective_s": sc["collective_bytes_per_device"] / ICI_BW,
+    }
+    rec["dominant"] = max(rec["terms"], key=rec["terms"].get)
+    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
+    path = os.path.join(
+        os.path.abspath(RESULTS_DIR),
+        f"{arch}__{shape_name}__{variant.replace(',', '+')}.json",
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    rec = run_variant(arch, shape, args.variant)
+    t = rec["terms"]
+    print(
+        f"{args.cell} [{args.variant}]: compute={t['compute_s']:.3e}s "
+        f"memory={t['memory_s']:.3e}s collective={t['collective_s']:.3e}s "
+        f"dominant={rec['dominant']} "
+        f"temp_mem={rec['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.1f}GB"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Roofline analysis from dry-run artifacts (assignment §ROOFLINE).
+
+Terms per (arch × shape), single-pod mesh, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device / 197e12            [s]
+    memory     = HLO_bytes_per_device / 819e9             [s]
+    collective = collective_bytes_per_device / 50e9       [s]
+
+(the per-device numbers already equal global/chips — the SPMD module is the
+per-device program).  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE);
+the MODEL_FLOPS/HLO_FLOPs ratio exposes remat/redundancy overhead.
+
+Caveats recorded with the table: XLA's "bytes accessed" counts logical
+operand+output bytes per op — an *upper bound* on HBM traffic (VMEM reuse
+inside fusions is not discounted), so memory terms are pessimistic.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+
+def _tokens(rec: dict) -> int:
+    from repro.configs.registry import SHAPES
+
+    shape = SHAPES[rec["shape"]]
+    if rec["mode"] == "decode":
+        return shape.global_batch  # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+def analyze_record(rec: dict) -> dict:
+    sc = rec["scaled"]
+    n_dev = rec["n_devices"]
+    compute_t = sc["flops_per_device"] / PEAK_FLOPS
+    memory_t = sc["bytes_per_device"] / HBM_BW
+    coll_t = sc["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    tokens = _tokens(rec)
+    model_flops = 6.0 * rec["model_active_params"] * tokens
+    if rec["mode"] != "train":
+        model_flops /= 3.0  # forward only (no 4·N·D backward)
+    hlo_flops_global = sc["flops_per_device"] * n_dev
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per second at the bound vs peak
+    achievable_flops = model_flops / n_dev / max(bound, 1e-12)
+    roofline_frac = achievable_flops / PEAK_FLOPS
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": useful,
+        "roofline_fraction": roofline_frac,
+        "tokens": tokens,
+    }
+
+
+_SUGGESTIONS = {
+    ("compute", True): "compute-bound: cut remat recompute (useful_ratio "
+                       "<1 means HLO does non-model work) or lift MXU "
+                       "utilization via larger per-device matmuls",
+    ("memory", True): "memory-bound: fuse the CE/logits block, widen "
+                      "activation dtype discipline (bf16), raise arithmetic "
+                      "intensity with bigger microbatch per device",
+    ("collective", True): "collective-bound: move TP all-reduces to "
+                          "reduce-scatter+all-gather (SP), overlap grad "
+                          "all-reduce with backward, or compress gradients",
+    ("compute", False): "compute-bound decode: batch more sequences per chip",
+    ("memory", False): "memory-bound decode (expected: weights+KV stream); "
+                       "shrink KV (MLA/GQA already) or quantize cache",
+    ("collective", False): "collective-bound decode: keep KV model-local, "
+                           "replicate small weights to kill per-step "
+                           "all-reduces",
+}
+
+
+def load_records(mesh: str = "pod_16x16") -> list[dict]:
+    out = []
+    for path in sorted(
+        glob.glob(os.path.join(os.path.abspath(RESULTS_DIR), mesh, "*.json"))
+    ):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def make_table(mesh: str = "pod_16x16") -> str:
+    rows = []
+    header = (
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | useful | roofline_frac | next lever |"
+    )
+    rows.append(header)
+    rows.append("|" + "---|" * 10)
+    for rec in load_records(mesh):
+        if rec.get("status") == "skipped":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped | — "
+                f"| — | — | {rec['skip_reason'][:60]} |"
+            )
+            continue
+        if rec.get("status") != "ok":
+            continue
+        a = analyze_record(rec)
+        lever = _SUGGESTIONS[(a["dominant"], rec["mode"] == "train")]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {a['compute_s']:.3e} | "
+            f"{a['memory_s']:.3e} | {a['collective_s']:.3e} | "
+            f"{a['dominant']} | {a['model_flops']:.3e} | "
+            f"{a['useful_ratio']:.2f} | {a['roofline_fraction']:.3f} | "
+            f"{lever[:80]} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod_16x16")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    table = make_table(args.mesh)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,539 @@
+"""Functional model layers (params = pytrees of arrays, specs = parallel
+pytrees of logical-axis tuples consumed by models/sharding.py).
+
+Attention has three interchangeable math paths:
+  * ``kernel``     — the Pallas flash kernel (TPU target)
+  * ``xla_flash``  — the same streaming-softmax algorithm written as a
+                     ``lax.scan`` over KV blocks: compiles to compact HLO with
+                     no S² score materialization.  This is what the 512-device
+                     dry-run lowers (Mosaic kernels don't lower on the CPU
+                     stand-in backend) and what the roofline terms reflect.
+  * ``ref``        — materializing reference (small tests only)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+from repro.models.sharding import shard
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, logical, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if in_axis is not None else 1
+    w = jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(max(fan_in, 1)))
+    return w, tuple(logical)
+
+
+def zeros_init(shape, logical, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), tuple(logical)
+
+
+# ---------------------------------------------------------------------------
+# norms + rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, D) with D even; positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention maths
+# ---------------------------------------------------------------------------
+
+
+def xla_flash_attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, kv_len=None,
+    block_k: int = 512,
+):
+    """Streaming-softmax attention as a lax.scan over KV blocks.
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D).  ``q_offset``/``kv_len`` may be
+    traced scalars (decode path).  GQA handled by reshaping q to
+    (B, Hkv, G, Sq, D) — no KV repeat materialization.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
+    bk = min(block_k, skv)
+    pad = (-skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_len is None:
+            kv_len = skv
+    n_blocks = (skv + pad) // bk
+    kb = jnp.moveaxis(k.reshape(b, hkv, n_blocks, bk, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, n_blocks, bk, d), 2, 0)
+    q_pos = jnp.arange(sq) + q_offset  # (Sq,) maybe traced offset
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = xs
+        s = jnp.einsum(
+            "bkgqd,bkcd->bkgqc", qr, k_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        k_pos = blk_idx * bk + jnp.arange(bk)
+        mask = jnp.ones((sq, bk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p, v_blk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kb, vb, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attention_math(q, k, v, impl: str, **kw):
+    if impl == "kernel":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(
+            q, k, v, kw.get("causal", True), kw.get("window"),
+            kw.get("q_offset", 0), 128, 128, True,
+        )
+    if impl == "xla_flash":
+        return xla_flash_attention(q, k, v, **kw)
+    from repro.kernels.flash_attention.ref import mha_ref
+
+    return mha_ref(
+        q, k, v, causal=kw.get("causal", True), window=kw.get("window"),
+        q_offset=kw.get("q_offset", 0),
+    )
+
+
+def resolve_attn_impl(cfg: ModelConfig) -> str:
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    return "kernel" if jax.default_backend() == "tpu" else "xla_flash"
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, h, hd), ("fsdp", "heads", None), 0, dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], (d, hkv, hd), ("fsdp", "kv_heads", None), 0, dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], (d, hkv, hd), ("fsdp", "kv_heads", None), 0, dtype)
+    p["wo"], s["wo"] = dense_init(ks[3], (h, hd, d), ("heads", None, "fsdp"), None, dtype)
+    p["wo"] = p["wo"] / math.sqrt(h * hd)
+    return p, s
+
+
+def gqa_apply(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions=None,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    causal: bool = True,
+    impl: str = "ref",
+):
+    b, sq, d = x.shape
+    if positions is None:
+        positions = jnp.arange(sq)
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "heads", None, None)
+    new_cache = None
+    if cache is not None:
+        # decode: insert this step's K/V at cache_pos, attend over prefix
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, cache_pos, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, cache_pos, 0)
+        )
+        new_cache = {"k": ck, "v": cv}
+        out = attention_math(
+            q, ck, cv, impl, causal=True, window=cfg.window,
+            q_offset=cache_pos, kv_len=cache_pos + sq,
+        )
+    else:
+        out = attention_math(q, k, v, impl, causal=causal, window=cfg.window)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "seq", None), new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hd = cfg.head_dim
+    shape = (batch, cfg.n_kv_heads, max_len, hd)
+    spec = ("batch", "kv_heads", "kv_seq", None)
+    return (
+        {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+        {"k": spec, "v": spec},
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["w_dq"], s["w_dq"] = dense_init(ks[0], (d, m.q_lora_rank), ("fsdp", None), 0, dtype)
+    p["q_norm"], s["q_norm"] = zeros_init((m.q_lora_rank,), (None,), dtype)
+    p["q_norm"] += 1.0
+    p["w_uq"], s["w_uq"] = dense_init(ks[1], (m.q_lora_rank, h, qk), (None, "heads", None), 0, dtype)
+    p["w_dkv"], s["w_dkv"] = dense_init(ks[2], (d, m.kv_lora_rank), ("fsdp", None), 0, dtype)
+    p["kv_norm"], s["kv_norm"] = zeros_init((m.kv_lora_rank,), (None,), dtype)
+    p["kv_norm"] += 1.0
+    p["w_kr"], s["w_kr"] = dense_init(ks[3], (d, m.qk_rope_head_dim), ("fsdp", None), 0, dtype)
+    p["w_uk"], s["w_uk"] = dense_init(ks[4], (m.kv_lora_rank, h, m.qk_nope_head_dim), (None, "heads", None), 0, dtype)
+    p["w_uv"], s["w_uv"] = dense_init(ks[5], (m.kv_lora_rank, h, m.v_head_dim), (None, "heads", None), 0, dtype)
+    p["wo"], s["wo"] = dense_init(ks[6], (h, m.v_head_dim, d), ("heads", None, "fsdp"), None, dtype)
+    p["wo"] = p["wo"] / math.sqrt(h * m.v_head_dim)
+    return p, s
+
+
+def mla_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions=None,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    causal: bool = True,
+    impl: str = "ref",
+):
+    m: MLAConfig = cfg.mla
+    b, sq, d = x.shape
+    if positions is None:
+        positions = jnp.arange(sq)
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bhsk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_kr"])[:, None], positions, cfg.rope_theta
+    )  # (B, 1, S, rope)
+
+    new_cache = None
+    if cache is not None:
+        # compressed cache: latent + shared rope key (the MLA memory win)
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0)
+        )
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
+            (0, cache_pos, 0),
+        )
+        new_cache = {"ckv": cc, "k_rope": cr}
+        if cfg.mla_absorb:
+            return (
+                _mla_absorbed_decode(
+                    p, cfg, q_nope, q_rope, cc, cr, cache_pos + sq, cache_pos,
+                    impl,
+                ),
+                new_cache,
+            )
+        ckv_all, k_rope_all = cc, cr[:, None]
+        kv_len = cache_pos + sq
+        q_offset = cache_pos
+    else:
+        ckv_all, k_rope_all = ckv, k_rope
+        kv_len = None
+        q_offset = 0
+
+    k_nope = jnp.einsum("bsr,rhk->bhsk", ckv_all, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bhsk", ckv_all, p["w_uv"])
+    skv = k_nope.shape[2]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all, (b, cfg.n_heads, skv, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad V head dim up to QK dim so one attention call serves both
+    pad_v = q_full.shape[-1] - m.v_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad_v)))
+    out = attention_math(
+        q_full, k_full, v_pad, impl, causal=causal, window=cfg.window,
+        q_offset=q_offset, kv_len=kv_len,
+    )[..., : m.v_head_dim]
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "seq", None), new_cache
+
+
+def _mla_absorbed_decode(p, cfg, q_nope, q_rope, ckv_cache, k_rope_cache,
+                         kv_len, q_offset, impl):
+    """Absorbed MLA decode: attention runs entirely in the latent space.
+
+    scores_h(s) = (W_uk_hᵀ q_nope_h)·ckv_s + q_rope_h·k_rope_s — i.e. MQA
+    with head-specific queries against ONE shared latent stream; the value
+    is the latent itself, expanded through W_uv only after the weighted sum.
+    Per-step work drops from O(S·H·d_head) to O(S·(r+rope)).
+
+    Split-stream: the rope and nope score terms are computed against the two
+    cache tensors *directly* (streaming softmax over blocks) — no
+    concat/pad copies of the multi-GB latent cache (§Perf iteration 2).
+    """
+    import math as _math
+
+    m = cfg.mla
+    b, h, sq, _ = q_nope.shape
+    r = m.kv_lora_rank
+    d_orig = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = 1.0 / _math.sqrt(d_orig)
+    q_abs = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["w_uk"]).astype(jnp.float32)
+    q_rope32 = q_rope.astype(jnp.float32)
+    s_max = ckv_cache.shape[1]
+    bk = min(1024, s_max)
+    pad = (-s_max) % bk
+    ckv = jnp.pad(ckv_cache, ((0, 0), (0, pad), (0, 0)))
+    krp = jnp.pad(k_rope_cache, ((0, 0), (0, pad), (0, 0)))
+    n_blocks = (s_max + pad) // bk
+    ckv_b = jnp.moveaxis(ckv.reshape(b, n_blocks, bk, r), 1, 0)
+    krp_b = jnp.moveaxis(krp.reshape(b, n_blocks, bk, -1), 1, 0)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        ckv_blk, krp_blk, blk = xs
+        s = (
+            jnp.einsum("bhsr,bcr->bhsc", q_abs, ckv_blk.astype(jnp.float32))
+            + jnp.einsum("bhsk,bck->bhsc", q_rope32, krp_blk.astype(jnp.float32))
+        ) * scale
+        k_pos = blk * bk + jnp.arange(bk)
+        mask = k_pos[None, None, None, :] < kv_len
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        pr = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + pr.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhsc,bcr->bhsr", pr, ckv_blk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, h, sq), -1e30, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+        jnp.zeros((b, h, sq, r), jnp.float32),
+    )
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, init, (ckv_b, krp_b, jnp.arange(n_blocks))
+    )
+    out_lat = (acc / jnp.maximum(l_f, 1e-30)[..., None]).astype(q_nope.dtype)
+    out = jnp.einsum("bhsr,rhk->bhsk", out_lat, p["w_uv"])  # expand once
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return shard(y, "batch", "seq", None)
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return (
+        {
+            "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        },
+        {
+            "ckv": ("batch", "kv_seq", None),
+            "k_rope": ("batch", "kv_seq", None),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLPs + MoE
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32, prefix=""):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w_gate"], s["w_gate"] = dense_init(ks[0], (d, d_ff), ("fsdp", "ff"), 0, dtype)
+    p["w_up"], s["w_up"] = dense_init(ks[1], (d, d_ff), ("fsdp", "ff"), 0, dtype)
+    p["w_down"], s["w_down"] = dense_init(ks[2], (d_ff, d), ("ff", "fsdp"), 0, dtype)
+    return p, s
+
+
+def swiglu_apply(p: Params, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", None, "ff")
+    return h @ p["w_down"]
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    mo: MoEConfig = cfg.moe
+    d, e, de = cfg.d_model, mo.n_experts, mo.d_expert
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["w_router"], s["w_router"] = dense_init(ks[0], (d, e), (None, None), 0, dtype)
+    if mo.router_aux_free_bias:
+        p["router_bias"], s["router_bias"] = zeros_init((e,), (None,), jnp.float32)
+    p["w_gate"], s["w_gate"] = dense_init(ks[1], (e, d, de), ("experts", "fsdp", None), 1, dtype)
+    p["w_up"], s["w_up"] = dense_init(ks[2], (e, d, de), ("experts", "fsdp", None), 1, dtype)
+    p["w_down"], s["w_down"] = dense_init(ks[3], (e, de, d), ("experts", None, "fsdp"), 1, dtype)
+    if mo.n_shared:
+        sp, ss = swiglu_init(ks[4], d, de * mo.n_shared, dtype)
+        p["shared"], s["shared"] = sp, ss
+    return p, s
+
+
+def moe_apply(p: Params, x, cfg: ModelConfig):
+    """Grouped GShard capacity dispatch (DESIGN.md §6).
+
+    Tokens are split into groups of ``group_size`` (sharded over DP axes);
+    capacity is per (group × expert) so the dispatch one-hot (G, Tg, E, C)
+    stays ~10MB/device at 10⁶ tokens.  Experts shard over the model axis
+    (EP); the (g-sharded → e-sharded) einsum is the all_to_all.
+    """
+    mo: MoEConfig = cfg.moe
+    b, sq, d = x.shape
+    t = b * sq
+    e = mo.n_experts
+    if sq == 1:
+        # decode: one group, dropless capacity (a dropped token would
+        # silently corrupt a user's next-token logits)
+        tg, cap = t, t
+    else:
+        tg = mo.group_size
+        while t % tg:
+            tg //= 2
+        cap = max(1, -(-int(tg * mo.capacity_factor * mo.top_k) // e))
+    g = t // tg
+    xt = x.reshape(g, tg, d)
+    xt = shard(xt, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["w_router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = probs + p["router_bias"] if mo.router_aux_free_bias else probs
+    _, idx = jax.lax.top_k(select, mo.top_k)  # (G, Tg, K)
+    gates = jnp.take_along_axis(probs, idx, axis=-1)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # scatter-built routing mask/positions — no (Tg × K × E) one-hot
+    gi = jnp.arange(g)[:, None, None]
+    ti = jnp.arange(tg)[None, :, None]
+    mask = jnp.zeros((g, tg, e), jnp.float32).at[gi, ti, idx].add(1.0)
+    pos = jnp.cumsum(mask, axis=1) * mask - 1.0               # (G, Tg, E)
+    keep = (pos >= 0) & (pos < cap)
+    gate_e = jnp.zeros((g, tg, e), jnp.float32).at[gi, ti, idx].add(gates)
+
+    def expert_ffn(ein):  # (E, G, C, d) -> (E, G, C, d)
+        h = jax.nn.silu(
+            jnp.einsum("egcd,edf->egcf", ein, p["w_gate"])
+        ) * jnp.einsum("egcd,edf->egcf", ein, p["w_up"])
+        return jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+
+    if mo.dispatch == "gather":
+        # slot plan: indices only, the dispatch one-hot never materializes
+        sel_pos = jnp.take_along_axis(pos, idx, axis=-1)      # (G, Tg, K)
+        valid = (sel_pos >= 0) & (sel_pos < cap)
+        slot = idx * cap + jnp.maximum(sel_pos, 0).astype(jnp.int32)
+        slot = jnp.where(valid, slot, e * cap)                # scratch slot
+        tok = jnp.broadcast_to(jnp.arange(tg)[None, :, None], (g, tg, mo.top_k))
+        slot_tok = jnp.zeros((g, e * cap + 1), jnp.int32)
+        slot_tok = slot_tok.at[gi[..., 0], slot.reshape(g, -1)].set(
+            tok.reshape(g, -1) + 1
+        )
+        occupied = slot_tok[:, : e * cap] > 0
+        gidx = jnp.maximum(slot_tok[:, : e * cap] - 1, 0)     # (G, E·C)
+        ein = jnp.take_along_axis(xt, gidx[..., None], axis=1)
+        ein = ein * occupied[..., None].astype(x.dtype)
+        ein = ein.reshape(g, e, cap, d).transpose(1, 0, 2, 3)
+        ein = shard(ein, "experts", "batch", None, None)      # EP all_to_all
+        eout = expert_ffn(ein)
+        eout = shard(eout, "experts", "batch", None, None)
+        eout_g = eout.transpose(1, 0, 2, 3).reshape(g, e * cap, d)
+        sel = jnp.where(valid, slot, 0).reshape(g, tg * mo.top_k)
+        vals = jnp.take_along_axis(eout_g, sel[..., None], axis=1)
+        vals = vals.reshape(g, tg, mo.top_k, d)
+        w_tok = (gates * valid.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("gtkd,gtk->gtd", vals, w_tok)
+    else:
+        pos_oh = jax.nn.one_hot(
+            jnp.where(keep, pos, cap).astype(jnp.int32), cap,
+            dtype=jnp.float32,
+        )                                                     # (G, Tg, E, C)
+        dispatch = (pos_oh * keep[..., None]).astype(x.dtype)
+        combine = dispatch * gate_e[..., None].astype(x.dtype)
+        ein = jnp.einsum("gtec,gtd->egcd", dispatch, xt)
+        ein = shard(ein, "experts", "batch", None, None)      # EP all_to_all
+        eout = expert_ffn(ein)
+        eout = shard(eout, "experts", "batch", None, None)
+        out = jnp.einsum("gtec,egcd->gtd", combine, eout)
+
+    if mo.n_shared:
+        out = out + swiglu_apply(p["shared"], xt.reshape(t, d)).reshape(g, tg, d)
+    aux = {
+        "router_probs_mean": probs.mean((0, 1)),
+        "dropped_frac": 1.0 - keep.sum() / jnp.maximum(mask.sum(), 1.0),
+    }
+    return out.reshape(b, sq, d), aux

@@ -1,0 +1,518 @@
+"""Model assembly: init / forward / decode for every assigned family.
+
+Layers are scanned (params stacked on a leading layer axis) so the HLO stays
+one-layer-sized regardless of depth — essential for compiling 61-layer
+deepseek-v3 on the CPU dry-run host.  Remat policy wraps the scan body.
+
+Vocab tables are internally padded to a multiple of 128 ("vocab_pad") so
+vocab-parallel sharding always divides; padded logit columns are pinned to
+-1e30 and never win an argmax / contribute to the CE loss.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+VOCAB_MULTIPLE = 128
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab // VOCAB_MULTIPLE) * VOCAB_MULTIPLE
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply dispatch
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dtype):
+    """kind in {dense, moe, hybrid, rwkv, encoder, decoder_cross}."""
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.zeros_init((cfg.d_model,), (None,), dtype)
+    p["norm1"] += 1.0
+    p["norm2"], s["norm2"] = L.zeros_init((cfg.d_model,), (None,), dtype)
+    p["norm2"] += 1.0
+    if kind == "rwkv":
+        p["rwkv"], s["rwkv"] = S.rwkv6_init(ks[0], cfg, dtype)
+        return p, s
+    attn_init = L.mla_init if cfg.mla is not None else L.gqa_init
+    p["attn"], s["attn"] = attn_init(ks[0], cfg, dtype)
+    if kind == "hybrid":
+        p["mamba"], s["mamba"] = S.mamba_init(ks[1], cfg, dtype)
+    if kind == "decoder_cross":
+        p["xattn"], s["xattn"] = L.gqa_init(ks[2], cfg, dtype)
+        p["norm_x"], s["norm_x"] = L.zeros_init((cfg.d_model,), (None,), dtype)
+        p["norm_x"] += 1.0
+    if kind == "moe":
+        p["ffn"], s["ffn"] = L.moe_init(ks[3], cfg, dtype)
+    else:
+        p["ffn"], s["ffn"] = L.swiglu_init(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+def _layer_apply(
+    p,
+    x,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    impl: str,
+    positions=None,
+    cache=None,
+    cache_pos=None,
+    causal=True,
+    memory=None,  # encoder output for decoder_cross
+):
+    new_cache = {}
+    aux = {}
+    if kind == "rwkv":
+        h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        tm_out, wkv_state, tm_prev = S.rwkv6_time_mix(
+            p["rwkv"], h, cfg,
+            wkv_state=cache["wkv"] if cache else jnp.zeros(
+                (x.shape[0], cfg.d_model // cfg.rwkv.head_dim,
+                 cfg.rwkv.head_dim, cfg.rwkv.head_dim), jnp.float32),
+            x_prev=cache["tm_prev"] if cache else jnp.zeros(
+                (x.shape[0], cfg.d_model), x.dtype),
+            use_kernel=(impl == "kernel"),
+        )
+        x = x + tm_out
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        cm_out, cm_prev = S.rwkv6_channel_mix(
+            p["rwkv"], h2,
+            x_prev=cache["cm_prev"] if cache else jnp.zeros(
+                (x.shape[0], cfg.d_model), x.dtype),
+        )
+        x = x + cm_out
+        if cache is not None:
+            new_cache = {"wkv": wkv_state, "tm_prev": tm_prev, "cm_prev": cm_prev}
+        return x, new_cache, aux
+
+    attn_apply = L.mla_apply if cfg.mla is not None else L.gqa_apply
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    attn_cache = cache.get("attn") if cache else None
+    a_out, a_cache = attn_apply(
+        p["attn"], h, cfg, positions=positions, cache=attn_cache,
+        cache_pos=cache_pos, causal=causal, impl=impl,
+    )
+    if kind == "hybrid":
+        m_out, m_state = S.mamba_apply(
+            p["mamba"], h, cfg, state=cache.get("mamba") if cache else None
+        )
+        a_out = 0.5 * (a_out + m_out)  # hymba: fused parallel heads
+        if cache is not None:
+            new_cache["mamba"] = m_state
+    x = x + a_out
+    if cache is not None and a_cache is not None:
+        new_cache["attn"] = a_cache
+
+    if kind == "decoder_cross":
+        hx = L.rms_norm(x, p["norm_x"], cfg.norm_eps)
+        # cross-attention: queries from decoder, K/V from encoder memory
+        xa, _ = _cross_attention(p["xattn"], hx, memory, cfg, impl)
+        x = x + xa
+
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        f_out, moe_aux = L.moe_apply(p["ffn"], h2, cfg)
+        aux.update(moe_aux)
+    else:
+        f_out = L.swiglu_apply(p["ffn"], h2)
+    x = x + f_out
+    return x, new_cache, aux
+
+
+def _cross_attention(p, xq, memory, cfg: ModelConfig, impl: str):
+    """GQA params reused for cross-attn: q from xq, k/v from memory."""
+    b, sq, d = xq.shape
+    q = jnp.einsum("bsd,dhk->bhsk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", memory, p["wv"])
+    out = L.attention_math(q, k, v, impl, causal=False, window=None)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"]), None
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int, dtype):
+    keys = jax.random.split(key, n)
+    p0, s0 = _layer_init(keys[0], cfg, kind, dtype)
+    if n == 1:
+        stacked = jax.tree.map(lambda a: a[None], p0)
+        return stacked, s0
+    ps = [p0] + [_layer_init(k, cfg, kind, dtype)[0] for k in keys[1:]]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ps)
+    return stacked, s0
+
+
+def _spec_add_layer_axis(specs):
+    return jax.tree.map(
+        lambda s: (None, *s),
+        specs,
+        is_leaf=lambda s: isinstance(s, tuple)
+        and all(isinstance(e, (str, type(None))) for e in s),
+    )
+
+
+def _stack_apply(stacked, x, cfg, kind, *, impl, positions=None, cache=None,
+                 cache_pos=None, causal=True, memory=None):
+    """lax.scan over stacked layer params (+ per-layer cache)."""
+
+    def body(carry, xs):
+        h = carry
+        if cache is not None:
+            lp, lc = xs
+        else:
+            lp, lc = xs, None
+        h, new_c, aux = _layer_apply(
+            lp, h, cfg, kind, impl=impl, positions=positions, cache=lc,
+            cache_pos=cache_pos, causal=causal, memory=memory,
+        )
+        h = h.astype(carry.dtype)  # keep the scan carry dtype-stable (bf16)
+        out_aux = aux.get("dropped_frac", jnp.zeros((), jnp.float32))
+        return h, (new_c, out_aux) if cache is not None else (None, out_aux)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    xs = (stacked, cache) if cache is not None else stacked
+    x, (new_cache, aux_stack) = jax.lax.scan(
+        body, x, xs, unroll=True if cfg.unroll_scan else 1
+    )
+    return x, new_cache, aux_stack
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    """Returns (params, specs) — specs mirror params with logical axes."""
+    vp = vocab_padded(cfg)
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = L.dense_init(
+        ks[0], (vp, cfg.d_model), ("vocab", "embed"), 1, dtype
+    )
+    if cfg.frontend != "none":
+        p["frontend_adapter"], s["frontend_adapter"] = L.dense_init(
+            ks[1], (cfg.d_model, cfg.d_model), ("fsdp", None), 0, dtype
+        )
+    if cfg.n_encoder_layers:
+        enc_p, enc_s = _stack_init(ks[2], cfg, "encoder", cfg.n_encoder_layers, dtype)
+        p["encoder"], s["encoder"] = enc_p, _spec_add_layer_axis(enc_s)
+        p["enc_norm"], s["enc_norm"] = L.zeros_init((cfg.d_model,), (None,), dtype)
+        p["enc_norm"] += 1.0
+
+    kind = _main_kind(cfg)
+    n_main = cfg.n_layers - cfg.first_k_dense
+    if cfg.first_k_dense:
+        dp_, ds_ = _stack_init(ks[3], cfg, "dense", cfg.first_k_dense, dtype)
+        p["dense_layers"], s["dense_layers"] = dp_, _spec_add_layer_axis(ds_)
+    mp_, ms_ = _stack_init(ks[4], cfg, kind, n_main, dtype)
+    p["layers"], s["layers"] = mp_, _spec_add_layer_axis(ms_)
+
+    p["final_norm"], s["final_norm"] = L.zeros_init((cfg.d_model,), (None,), dtype)
+    p["final_norm"] += 1.0
+    if not cfg.tie_embeddings:
+        p["unembed"], s["unembed"] = L.dense_init(
+            ks[5], (cfg.d_model, vp), ("embed", "vocab"), 0, dtype
+        )
+    if cfg.mtp:
+        mtp_p, mtp_s = _layer_init(ks[6], cfg, "dense", dtype)
+        p["mtp_layer"], s["mtp_layer"] = mtp_p, mtp_s
+        p["mtp_proj"], s["mtp_proj"] = L.dense_init(
+            ks[7], (2 * cfg.d_model, cfg.d_model), ("fsdp", None), 0, dtype
+        )
+    return p, s
+
+
+def _main_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "rwkv":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "encdec":
+        return "decoder_cross"
+    return "dense"
+
+
+def _embed(p, cfg, tokens):
+    e = p["embed"][tokens]
+    return shard(e, "batch", "seq", None)
+
+
+def _logits(p, cfg, h):
+    vp = vocab_padded(cfg)
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+    logits = shard(logits, "batch", None, "vocab")
+    if vp != cfg.vocab:
+        neg = jnp.full((vp,), -1e30, jnp.float32).at[: cfg.vocab].set(0.0)
+        logits = logits + neg
+    return logits
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,           # (B, S) int32
+    *,
+    frontend: Optional[jnp.ndarray] = None,  # (B, S_f, d) stub embeddings
+    last_only: bool = False,       # prefill: unembed only the final position
+    return_hidden: bool = False,   # chunked-CE path: skip the unembed
+):
+    """Training/prefill forward -> (logits (B, S|1, V_pad), aux)."""
+    impl = L.resolve_attn_impl(cfg)
+    x = _embed(params, cfg, tokens)
+    memory = None
+    if cfg.n_encoder_layers:
+        assert frontend is not None, "enc-dec needs frontend frames"
+        m = frontend @ params["frontend_adapter"]
+        m, _, _ = _stack_apply(
+            params["encoder"], m, cfg, "encoder", impl=impl, causal=False
+        )
+        memory = L.rms_norm(m, params["enc_norm"], cfg.norm_eps)
+    elif cfg.frontend != "none":
+        assert frontend is not None, "vlm needs patch embeddings"
+        prefix = frontend @ params["frontend_adapter"]
+        x = jnp.concatenate([prefix, x], axis=1)
+
+    positions = jnp.arange(x.shape[1])
+    kind = _main_kind(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.first_k_dense:
+        x, _, aux0 = _stack_apply(
+            params["dense_layers"], x, cfg, "dense", impl=impl,
+            positions=positions, memory=memory,
+        )
+        aux_total += aux0.sum()
+    x, _, aux1 = _stack_apply(
+        params["layers"], x, cfg, kind, impl=impl, positions=positions,
+        memory=memory,
+    )
+    aux_total += aux1.sum()
+    if cfg.frontend == "vision":
+        x = x[:, frontend.shape[1]:]  # text positions only
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    if return_hidden:
+        return h, {"moe_dropped": aux_total}
+    logits = _logits(params, cfg, h)
+    out_aux = {"moe_dropped": aux_total}
+    if cfg.mtp and not last_only:  # MTP is a training-time head
+        mtp_h = _mtp_hidden(params, cfg, h, tokens, impl, positions)
+        out_aux["mtp_logits"] = _logits(params, cfg, mtp_h)
+    return logits, out_aux
+
+
+def _mtp_hidden(params, cfg: ModelConfig, h, tokens, impl, positions):
+    """DeepSeek-style MTP trunk: predict token t+2 from [h_t; emb(t+1)]."""
+    emb = _embed(params, cfg, tokens)
+    emb_next = jnp.concatenate(
+        [emb[:, 1:], jnp.zeros_like(emb[:, :1])], axis=1
+    )
+    mtp_in = jnp.concatenate([h, emb_next], axis=-1) @ params["mtp_proj"]
+    mtp_h, _, _ = _layer_apply(
+        params["mtp_layer"], mtp_in, cfg, "dense", impl=impl,
+        positions=positions,
+    )
+    return L.rms_norm(mtp_h, params["final_norm"], cfg.norm_eps)
+
+
+def _chunked_ce(params, cfg: ModelConfig, h, labels):
+    """Streaming CE: scan the unembed over vocab chunks with a running
+    (max, sumexp, gold) triple — the (B,S,V) logits tensor never exists.
+    The scan body is rematerialized so backward recomputes chunk logits."""
+    vp = vocab_padded(cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    vc = cfg.ce_chunk
+    n_chunks = vp // vc
+    assert vp % vc == 0, "vocab_padded must divide ce_chunk"
+    lab = jnp.maximum(labels, 0)
+
+    @jax.checkpoint
+    def body(carry, chunk_idx):
+        m_run, s_run, gold = carry
+        w_c = jax.lax.dynamic_slice(w, (0, chunk_idx * vc), (w.shape[0], vc))
+        lg = jnp.einsum("bsd,dv->bsv", h, w_c).astype(jnp.float32)
+        if vp != cfg.vocab:  # mask padded vocab columns
+            col = chunk_idx * vc + jnp.arange(vc)
+            lg = jnp.where(col[None, None, :] < cfg.vocab, lg, -1e30)
+        m_c = jnp.max(lg, axis=-1)
+        m_new = jnp.maximum(m_run, m_c)
+        s_run = s_run * jnp.exp(m_run - m_new) + jnp.sum(
+            jnp.exp(lg - m_new[..., None]), axis=-1
+        )
+        # gold logit if the label lands in this chunk
+        in_chunk = (lab >= chunk_idx * vc) & (lab < (chunk_idx + 1) * vc)
+        idx = jnp.clip(lab - chunk_idx * vc, 0, vc - 1)
+        g_c = jnp.take_along_axis(lg, idx[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, g_c, gold)
+        return (m_new, s_run, gold), None
+
+    b, s = labels.shape
+    init = (
+        jnp.full((b, s), -1e30, jnp.float32),
+        jnp.zeros((b, s), jnp.float32),
+        jnp.full((b, s), -1e30, jnp.float32),
+    )
+    (m, s_sum, gold), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    lse = m + jnp.log(jnp.maximum(s_sum, 1e-30))
+    return lse, gold
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jnp.ndarray, dict]:
+    """Next-token CE (+ MTP auxiliary)."""
+    labels = batch["labels"]
+    if cfg.ce_chunk:
+        # run the trunk only (skip _logits), then stream the CE
+        h, aux = forward(
+            params, cfg, batch["tokens"], frontend=batch.get("frontend"),
+            return_hidden=True,
+        )
+        lse, gold = _chunked_ce(params, cfg, h, labels)
+        if cfg.mtp:
+            impl = L.resolve_attn_impl(cfg)
+            positions = jnp.arange(batch["tokens"].shape[1])
+            mtp_h = _mtp_hidden(params, cfg, h, batch["tokens"], impl,
+                                positions)
+            lbl2 = jnp.concatenate(
+                [labels[:, 1:], -jnp.ones_like(labels[:, :1])], axis=1
+            )
+            lse2, gold2 = _chunked_ce(params, cfg, mtp_h, lbl2)
+            m2 = (lbl2 >= 0).astype(jnp.float32)
+            mtp_loss = ((lse2 - gold2) * m2).sum() / jnp.maximum(m2.sum(), 1.0)
+            aux = dict(aux)
+            aux["_mtp_loss_precomputed"] = mtp_loss
+    else:
+        logits, aux = forward(
+            params, cfg, batch["tokens"], frontend=batch.get("frontend")
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1
+        )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"loss": loss, "moe_dropped": aux.get("moe_dropped", 0.0)}
+    if "_mtp_loss_precomputed" in aux:
+        mtp_loss = aux["_mtp_loss_precomputed"]
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    if cfg.mtp and "mtp_logits" in aux:
+        l2 = aux["mtp_logits"]
+        lbl2 = jnp.concatenate(
+            [labels[:, 1:], -jnp.ones_like(labels[:, :1])], axis=1
+        )
+        lse2 = jax.nn.logsumexp(l2, axis=-1)
+        gold2 = jnp.take_along_axis(
+            l2, jnp.maximum(lbl2, 0)[..., None], axis=-1
+        )[..., 0]
+        m2 = (lbl2 >= 0).astype(jnp.float32)
+        mtp_loss = ((lse2 - gold2) * m2).sum() / jnp.maximum(m2.sum(), 1.0)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               enc_memory_len: int = 0):
+    """Stacked per-layer cache pytree (+ spec tree)."""
+    kind = _main_kind(cfg)
+
+    def one_layer():
+        c, s = {}, {}
+        if kind == "rwkv":
+            st, ss = S.rwkv6_state_init(cfg, batch, dtype)
+            return st, ss
+        if cfg.mla is not None:
+            c["attn"], s["attn"] = L.mla_cache_init(cfg, batch, max_len, dtype)
+        else:
+            c["attn"], s["attn"] = L.gqa_cache_init(cfg, batch, max_len, dtype)
+        if kind == "hybrid":
+            c["mamba"], s["mamba"] = S.mamba_state_init(cfg, batch, dtype)
+        return c, s
+
+    c0, s0 = one_layer()
+    n = cfg.n_layers - cfg.first_k_dense
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), c0
+    )
+    out = {"layers": stacked}
+    spec = {"layers": _spec_add_layer_axis(s0)}
+    if cfg.first_k_dense:
+        ds = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.first_k_dense, *a.shape)), c0
+        )
+        out["dense_layers"] = ds
+        spec["dense_layers"] = _spec_add_layer_axis(s0)
+    if cfg.n_encoder_layers:
+        out["memory"] = jnp.zeros((batch, enc_memory_len, cfg.d_model), dtype)
+        spec["memory"] = ("batch", None, None)
+    return out, spec
+
+
+def prefill_encoder(params, cfg: ModelConfig, frontend, cache):
+    """Enc-dec: run the encoder once, store memory in the cache."""
+    impl = L.resolve_attn_impl(cfg)
+    m = frontend @ params["frontend_adapter"]
+    m, _, _ = _stack_apply(params["encoder"], m, cfg, "encoder", impl=impl,
+                           causal=False)
+    memory = L.rms_norm(m, params["enc_norm"], cfg.norm_eps)
+    return {**cache, "memory": memory.astype(cache["memory"].dtype)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One-token decode: tokens (B, 1), pos scalar int32 (current length).
+
+    Returns (logits (B, 1, V_pad), new_cache)."""
+    impl = L.resolve_attn_impl(cfg)
+    x = _embed(params, cfg, tokens)
+    positions = pos + jnp.arange(tokens.shape[1])
+    kind = _main_kind(cfg)
+    memory = cache.get("memory")
+    new_cache = dict(cache)
+    if cfg.first_k_dense:
+        x, nc, _ = _stack_apply(
+            params["dense_layers"], x, cfg, "dense", impl=impl,
+            positions=positions, cache=cache["dense_layers"], cache_pos=pos,
+            memory=memory,
+        )
+        new_cache["dense_layers"] = nc
+    x, nc, _ = _stack_apply(
+        params["layers"], x, cfg, kind, impl=impl, positions=positions,
+        cache=cache["layers"], cache_pos=pos, memory=memory,
+    )
+    new_cache["layers"] = nc
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, h), new_cache

@@ -1,0 +1,149 @@
+"""Logical-axis sharding: the single place where DP/FSDP/TP/EP/SP decisions
+live (DESIGN.md §6).
+
+Tensors are annotated with *logical* axis names; ``resolve_spec`` maps them to
+mesh axes with automatic divisibility fallback (an axis that does not divide
+evenly is replicated instead — e.g. hymba's 25 query heads or granite's
+49155-row vocab simply degrade to replication on a 16-way TP axis rather than
+failing, and the roofline table shows the cost).
+
+Rules (overridable per-arch in the config):
+    batch   -> ("pod", "data")     data parallel
+    fsdp    -> "data"              weight sharding (ZeRO-3-style), >=8B params
+    heads   -> "model"             tensor parallel attention
+    kv_heads-> "model"             (falls back to replicated when kv < tp)
+    ff      -> "model"             tensor parallel MLP hidden
+    vocab   -> "model"             vocab-parallel embedding/logits
+    experts -> "model"             expert parallel (MoE all_to_all)
+    kv_seq  -> "data"              sequence-parallel KV cache (long-context)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": None,
+    # KV/latent cache sequence shards over the *model* axis: batch consumes
+    # the data axis, and for most assigned archs the model axis is otherwise
+    # idle at decode (kv_heads < 16) — this is what fits a 32k cache in
+    # 16GB/chip (§Perf, minicpm3 hillclimb iteration 3).
+    "kv_seq": "model",
+    "seq": None,
+    "qk": None,
+    "state": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    """Resolves logical axes against a concrete mesh."""
+
+    mesh: Optional[Mesh] = None
+    rules: dict[str, Any] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+    enable_fsdp: bool = False
+
+    def mesh_axes(self, logical: str):
+        ax = self.rules.get(logical)
+        if logical == "fsdp" and not self.enable_fsdp:
+            return None
+        return ax
+
+    def resolve_spec(self, shape: tuple[int, ...], logical_axes) -> P:
+        """Logical names -> PartitionSpec with divisibility fallback."""
+        if self.mesh is None:
+            return P()
+        entries = []
+        used: set[str] = set()
+        for dim, name in zip(shape, logical_axes):
+            ax = self.mesh_axes(name) if name else None
+            if ax is None:
+                entries.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            axes = tuple(a for a in axes if a in self.mesh.shape and a not in used)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                entries.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                entries.append(None)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, shape, logical_axes) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.resolve_spec(shape, logical_axes))
+
+
+_ACTIVE: list[ShardingPolicy] = []
+
+
+class use_policy:
+    """Context manager installing the active sharding policy."""
+
+    def __init__(self, policy: ShardingPolicy):
+        self.policy = policy
+
+    def __enter__(self):
+        _ACTIVE.append(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+
+
+def current_policy() -> ShardingPolicy:
+    return _ACTIVE[-1] if _ACTIVE else ShardingPolicy(mesh=None)
+
+
+def shard(x: jnp.ndarray, *logical_axes) -> jnp.ndarray:
+    """with_sharding_constraint under the active policy (no-op meshless)."""
+    pol = current_policy()
+    if pol.mesh is None:
+        return x
+    spec = pol.resolve_spec(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Param-spec trees: init functions return (params, specs) where specs mirrors
+# params with tuples of logical axis names; dryrun/train resolve them.
+# ---------------------------------------------------------------------------
+
+
+def resolve_tree(specs, policy: ShardingPolicy, params_shape):
+    """Map a logical-spec tree + shape tree -> NamedSharding tree."""
+
+    def one(spec, shaped):
+        return NamedSharding(
+            policy.mesh, policy.resolve_spec(shaped.shape, spec)
+        )
+
+    return jax.tree.map(
+        one, specs, params_shape,
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            isinstance(e, (str, type(None))) for e in s
+        ),
+    )

@@ -1,0 +1,237 @@
+"""State-space layers: Mamba selective scan (hymba's parallel head branch)
+and the RWKV-6 "Finch" block (token-shift + data-dependent decay WKV).
+
+Training/prefill paths are associative-scan / chunked-scan based (compact
+HLO, O(T) state); decode paths carry O(1) recurrent state — which is what
+makes these the two `long_500k`-capable families of the assignment pool.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, RWKVConfig, SSMConfig
+from repro.models.layers import dense_init, rms_norm, zeros_init
+from repro.models.sharding import shard
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, diagonal A) — hymba attention-parallel branch
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    sc: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    ed = sc.expand * d
+    n = sc.state_dim
+    dt_rank = sc.dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = dense_init(ks[0], (d, 2 * ed), ("fsdp", "ff"), 0, dtype)
+    p["conv_w"], s["conv_w"] = dense_init(ks[1], (sc.conv_width, ed), (None, "ff"), 0, dtype)
+    p["conv_b"], s["conv_b"] = zeros_init((ed,), ("ff",), dtype)
+    p["w_bcdt"], s["w_bcdt"] = dense_init(ks[2], (ed, 2 * n + dt_rank), ("ff", None), 0, dtype)
+    p["w_dt"], s["w_dt"] = dense_init(ks[3], (dt_rank, ed), (None, "ff"), 0, dtype)
+    p["dt_bias"], s["dt_bias"] = zeros_init((ed,), ("ff",), dtype)
+    a_init = -jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (ed, n))
+    p["a_log"], s["a_log"] = jnp.log(-a_init), ("ff", None)
+    p["d_skip"], s["d_skip"] = zeros_init((ed,), ("ff",), dtype)
+    p["d_skip"] += 1.0
+    p["w_out"], s["w_out"] = dense_init(ks[4], (ed, d), ("ff", "fsdp"), 0, dtype)
+    return p, s
+
+
+def _mamba_core(p, xc, dt_rank, n):
+    """xc: (B, T, ED) post-conv activations -> scan inputs."""
+    bcdt = xc @ p["w_bcdt"]  # (B, T, 2n + dt_rank)
+    b_mat = bcdt[..., :n]
+    c_mat = bcdt[..., n : 2 * n]
+    dt = jax.nn.softplus(bcdt[..., 2 * n :] @ p["w_dt"] + p["dt_bias"])  # (B,T,ED)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (ED, n)
+    da = jnp.exp(dt[..., None] * a)               # (B,T,ED,n) decay
+    dbx = dt[..., None] * b_mat[..., None, :] * xc[..., None]  # (B,T,ED,n)
+    return da, dbx, c_mat
+
+
+def mamba_apply(
+    p,
+    x,  # (B, T, d)
+    cfg: ModelConfig,
+    *,
+    state: Optional[dict] = None,
+):
+    """Returns (y (B,T,d), new_state).  state = {'h': (B,ED,n), 'conv': (B,W-1,ED)}."""
+    sc: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    ed = sc.expand * d
+    n = sc.state_dim
+    dt_rank = sc.dt_rank or max(1, d // 16)
+    bsz, t, _ = x.shape
+
+    xz = x @ p["w_in"]
+    xs, z = xz[..., :ed], xz[..., ed:]
+
+    # causal depthwise conv over time
+    w = sc.conv_width
+    if state is not None:
+        hist = jnp.concatenate([state["conv"], xs], axis=1)  # (B, W-1+T, ED)
+    else:
+        hist = jnp.pad(xs, ((0, 0), (w - 1, 0), (0, 0)))
+    xc = sum(
+        hist[:, i : i + t] * p["conv_w"][i] for i in range(w)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = hist[:, -(w - 1):] if w > 1 else hist[:, :0]
+
+    da, dbx, c_mat = _mamba_core(p, xc, dt_rank, n)
+
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((bsz, ed, n), jnp.float32)
+    )
+    if t == 1:
+        h = da[:, 0] * h0 + dbx[:, 0]
+        y = jnp.einsum("ben,bn->be", h, c_mat[:, 0])[:, None]
+        h_fin = h
+    else:
+        # associative scan over time: (a, b) ∘ (a', b') = (a·a', a'·b + b')
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        da_t = jnp.moveaxis(da, 1, 0).astype(jnp.float32)
+        dbx_t = jnp.moveaxis(dbx, 1, 0).astype(jnp.float32)
+        # fold initial state into the first element
+        dbx_t = dbx_t.at[0].add(da_t[0] * h0)
+        a_cum, h_all = jax.lax.associative_scan(combine, (da_t, dbx_t))
+        y = jnp.einsum("tben,btn->bte", h_all, c_mat)
+        h_fin = h_all[-1]
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype) @ p["w_out"]).astype(x.dtype)
+    out = shard(out, "batch", "seq", None)
+    return out, {"h": h_fin, "conv": new_conv}
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype):
+    sc = cfg.ssm
+    ed = sc.expand * cfg.d_model
+    return (
+        {
+            "h": jnp.zeros((batch, ed, sc.state_dim), jnp.float32),
+            "conv": jnp.zeros((batch, sc.conv_width - 1, ed), dtype),
+        },
+        {"h": ("batch", "ff", None), "conv": ("batch", None, "ff")},
+    )
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    rc: RWKVConfig = cfg.rwkv
+    d = cfg.d_model
+    n_heads = d // rc.head_dim
+    ks = jax.random.split(key, 12)
+    p, s = {}, {}
+    # time-mix interpolation params (static mu + low-rank data-dependent)
+    for i, nm in enumerate(["mu_r", "mu_k", "mu_v", "mu_w", "mu_g", "mu_x"]):
+        p[nm], s[nm] = zeros_init((d,), (None,), dtype)
+        p[nm] += 0.5
+    p["w_mix_a"], s["w_mix_a"] = dense_init(ks[0], (d, rc.mix_lora * 5), ("fsdp", None), 0, dtype)
+    p["w_mix_b"], s["w_mix_b"] = dense_init(ks[1], (5, rc.mix_lora, d), (None, None, "fsdp"), 1, dtype)
+    for i, nm in enumerate(["w_r", "w_k", "w_v", "w_g"]):
+        p[nm], s[nm] = dense_init(ks[2 + i], (d, d), ("fsdp", "heads"), 0, dtype)
+    p["w_decay_a"], s["w_decay_a"] = dense_init(ks[6], (d, rc.decay_lora), ("fsdp", None), 0, dtype)
+    p["w_decay_b"], s["w_decay_b"] = dense_init(ks[7], (rc.decay_lora, d), (None, "fsdp"), 0, dtype)
+    p["decay_base"], s["decay_base"] = zeros_init((d,), (None,), jnp.float32)
+    p["decay_base"] += -4.0  # w = exp(-exp(·)) ≈ 0.982 at init
+    p["u_bonus"], s["u_bonus"] = zeros_init((n_heads, rc.head_dim), (None, None), jnp.float32)
+    p["ln_x_scale"], s["ln_x_scale"] = zeros_init((d,), (None,), dtype)
+    p["ln_x_scale"] += 1.0
+    p["w_o"], s["w_o"] = dense_init(ks[8], (d, d), ("heads", "fsdp"), 0, dtype)
+    # channel-mix
+    p["cm_mu_k"], s["cm_mu_k"] = zeros_init((d,), (None,), dtype)
+    p["cm_mu_k"] += 0.5
+    p["cm_wk"], s["cm_wk"] = dense_init(ks[9], (d, cfg.d_ff), ("fsdp", "ff"), 0, dtype)
+    p["cm_wv"], s["cm_wv"] = dense_init(ks[10], (cfg.d_ff, d), ("ff", "fsdp"), 0, dtype)
+    return p, s
+
+
+def _token_shift(x, prev):
+    """shift(x)[t] = x[t-1]; position 0 takes ``prev`` (decode carry)."""
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, wkv_state, x_prev, use_kernel):
+    rc: RWKVConfig = cfg.rwkv
+    d = cfg.d_model
+    hd = rc.head_dim
+    nh = d // hd
+    b, t, _ = x.shape
+    xx = _token_shift(x, x_prev)
+    delta = xx - x
+    # data-dependent mixing (the Finch "dynamic token shift")
+    mix_lora = jnp.tanh(x @ p["w_mix_a"]).reshape(b, t, 5, rc.mix_lora)
+    dyn = jnp.einsum("btfl,fld->btfd", mix_lora, p["w_mix_b"])  # (B,T,5,d)
+    xr = x + delta * (p["mu_r"] + dyn[:, :, 0])
+    xk = x + delta * (p["mu_k"] + dyn[:, :, 1])
+    xv = x + delta * (p["mu_v"] + dyn[:, :, 2])
+    xw = x + delta * (p["mu_w"] + dyn[:, :, 3])
+    xg = x + delta * (p["mu_g"] + dyn[:, :, 4])
+
+    r = (xr @ p["w_r"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p["w_k"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p["w_v"]).reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["w_g"])
+    decay_inner = p["decay_base"] + jnp.tanh(xw @ p["w_decay_a"]) @ p["w_decay_b"]
+    w = jnp.exp(-jnp.exp(decay_inner.astype(jnp.float32)))  # (B,T,d) in (0,1)
+    w = w.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+
+    from repro.kernels.rwkv6_wkv.ops import wkv6
+
+    o, new_state = wkv6(r, k, v, w, p["u_bonus"], wkv_state, 64, use_kernel)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    # per-head group norm
+    og = o.reshape(b, t, nh, hd)
+    mu = og.mean(-1, keepdims=True)
+    var = og.var(-1, keepdims=True)
+    og = (og - mu) * jax.lax.rsqrt(var + 64e-5)
+    o = (og.reshape(b, t, d) * p["ln_x_scale"]).astype(x.dtype)
+    out = ((o * g.astype(x.dtype)) @ p["w_o"]).astype(x.dtype)
+    return shard(out, "batch", "seq", None), new_state, x[:, -1]
+
+
+def rwkv6_channel_mix(p, x, *, x_prev):
+    xx = _token_shift(x, x_prev)
+    xk = x + (xx - x) * p["cm_mu_k"]
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    h = shard(h, "batch", None, "ff")
+    return h @ p["cm_wv"], x[:, -1]
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int, dtype):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    nh = d // rc.head_dim
+    return (
+        {
+            "wkv": jnp.zeros((batch, nh, rc.head_dim, rc.head_dim), jnp.float32),
+            "tm_prev": jnp.zeros((batch, d), dtype),
+            "cm_prev": jnp.zeros((batch, d), dtype),
+        },
+        {
+            "wkv": ("batch", "heads", None, None),
+            "tm_prev": ("batch", None),
+            "cm_prev": ("batch", None),
+        },
+    )

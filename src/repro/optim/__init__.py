@@ -1,0 +1,26 @@
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+)
+from repro.optim.grad_utils import (
+    clip_by_global_norm,
+    compress_int8,
+    decompress_int8,
+    global_norm,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "make_optimizer",
+    "clip_by_global_norm",
+    "global_norm",
+    "compress_int8",
+    "decompress_int8",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,135 @@
+"""AdamW with an optional Adafactor-style factored second moment.
+
+Factored mode stores row/col second-moment statistics for matrices instead of
+a full fp32 tensor — the difference between deepseek-v3-671b's optimizer
+fitting in 16GB/chip or not (see EXPERIMENTS.md §Perf, deepseek hillclimb).
+Optimizer state inherits the parameter's logical sharding (ZeRO-3 by
+construction: params are FSDP-sharded, so m/v are too).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any          # pytree like params (fp32 or bf16)
+    v: Any          # full, or (row, col) tuples for factored leaves
+
+
+def _should_factor(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def adamw_init(params, *, factored: bool = False) -> AdamWState:
+    m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def v_init(p):
+        if factored and _should_factor(p.shape):
+            return (
+                jnp.zeros(p.shape[:-1], jnp.float32),        # row stats
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+            )
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    v = jax.tree.map(v_init, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def adamw_state_specs(param_specs, params_shape, *, factored: bool = False):
+    """Logical-axis spec tree for the optimizer state (mirrors params)."""
+    is_spec = lambda s: isinstance(s, tuple) and all(
+        isinstance(e, (str, type(None))) for e in s
+    )
+    m_specs = param_specs
+
+    def v_spec(spec, shaped):
+        if factored and _should_factor(shaped.shape):
+            return (tuple(spec[:-1]), tuple(spec[:-2]) + tuple(spec[-1:]))
+        return spec
+
+    v_specs = jax.tree.map(v_spec, param_specs, params_shape, is_leaf=is_spec)
+    return AdamWState(step=(), m=m_specs, v=v_specs)
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    factored: bool = False,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        if isinstance(v, tuple):
+            vr, vc = v
+            g2 = g32 * g32
+            vr_new = b2 * vr + (1 - b2) * g2.mean(axis=-1)
+            vc_new = b2 * vc + (1 - b2) * g2.mean(axis=-2)
+            # rank-1 reconstruction (Adafactor): v ≈ vr·vc / mean(vr)
+            denom = jnp.maximum(vr_new.mean(axis=-1, keepdims=True), 1e-30)
+            v_hat = (
+                vr_new[..., :, None] * vc_new[..., None, :] / denom[..., None]
+            )
+            v_new = (vr_new, vc_new)
+        else:
+            v_hat = b2 * v + (1 - b2) * g32 * g32
+            v_new = v_hat
+        m_hat = m_new / bc1
+        v_c = (v_hat if not isinstance(v, tuple) else v_hat) / bc2
+        update = m_hat / (jnp.sqrt(v_c) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def make_optimizer(*, lr_fn, factored: bool = False, weight_decay: float = 0.1,
+                   clip_norm: Optional[float] = 1.0):
+    """Bundled (init, update) closures used by the trainer."""
+    from repro.optim.grad_utils import clip_by_global_norm
+
+    def init(params):
+        return adamw_init(params, factored=factored)
+
+    def update(params, grads, state):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            from repro.optim.grad_utils import global_norm
+
+            gnorm = global_norm(grads)
+        lr = lr_fn(state.step)
+        new_p, new_s = adamw_update(
+            params, grads, state, lr=lr, weight_decay=weight_decay,
+            factored=factored,
+        )
+        return new_p, new_s, {"grad_norm": gnorm, "lr": lr}
+
+    return init, update

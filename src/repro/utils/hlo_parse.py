@@ -1,0 +1,89 @@
+"""Post-optimization HLO analysis: collective-traffic accounting.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+compiled module text and sum the *output* byte sizes of every collective op
+(the assignment's prescribed method).  all-reduce logically moves ~2× its
+output per ring pass; we record raw output bytes per op kind so the roofline
+can weight them explicitly.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_OP_TOKEN_RE = re.compile(
+    r"=.*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_kind: bytes, ..., 'total': bytes, 'count': n_ops}.
+
+    Output bytes are parsed from the shape(s) on the left of the op token
+    (robust to layout annotations like ``f32[8,128]{1,0}`` and to tuple
+    shapes of async ``-start`` ops).  Each logical collective is counted
+    once: ``-done`` lines are skipped.
+    """
+    out: dict = defaultdict(int)
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _OP_TOKEN_RE.search(line)
+        if not m:
+            continue
+        if m.group(2) == "-done":
+            continue  # counted at -start
+        kind = m.group(1)
+        left = line[: m.start(1)]
+        # left looks like "  %name = <output shape(s)> " — the name itself
+        # contains the op word but no shape brackets, so shape parse is safe.
+        b = _shape_bytes(left)
+        if m.group(2) == "-start":
+            # async start outputs (operand, result[, context]) tuples; halve
+            # the double-counted payload by preferring the result entry:
+            b = b // 2 if b else 0
+        out[kind] += b
+        n_ops += 1
+    out["total"] = sum(v for k, v in out.items() if k in _COLLECTIVES)
+    out["count"] = n_ops
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "custom-call", "convolution",
+                                     "dot", "scatter", "gather")) -> dict:
+    hist: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line:
+                hist[op] += 1
+    return dict(hist)

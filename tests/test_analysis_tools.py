@@ -1,0 +1,114 @@
+"""Unit tests for the dry-run analysis tooling (HLO parsing, roofline math)."""
+
+import numpy as np
+import pytest
+
+from repro.utils.hlo_parse import _shape_bytes, collective_bytes, op_histogram
+
+
+class TestHloParse:
+    def test_shape_bytes(self):
+        assert _shape_bytes("f32[8,16]") == 8 * 16 * 4
+        assert _shape_bytes("bf16[128]{0}") == 256
+        assert _shape_bytes("(f32[4], u32[2])") == 16 + 8
+        assert _shape_bytes("pred[10]") == 10
+        assert _shape_bytes("token[]") == 0  # unknown dtype ignored
+
+    def test_collectives_with_layouts(self):
+        hlo = """
+  %x = f32[1,1024]{1,0} all-reduce(%y), channel_id=1, to_apply=%add
+  %z = bf16[2048,7168]{1,0} all-gather(%w), dimensions={0}
+  %t = f32[8,8]{1,0} add(%a, %b)
+"""
+        out = collective_bytes(hlo)
+        assert out["all-reduce"] == 1024 * 4
+        assert out["all-gather"] == 2048 * 7168 * 2
+        assert out["total"] == out["all-reduce"] + out["all-gather"]
+        assert out["count"] == 2
+
+    def test_async_pairs_counted_once(self):
+        hlo = """
+  %s = (f32[64]{0}, f32[64]{0}) all-gather-start(%a), dimensions={0}
+  %d = f32[64]{0} all-gather-done(%s)
+"""
+        out = collective_bytes(hlo)
+        assert out["count"] == 1
+        # -start outputs (operand, result) tuples; we halve the double count
+        assert out["all-gather"] == 64 * 4
+
+    def test_non_collective_lines_ignored(self):
+        hlo = "%a = f32[2]{0} add(%x, %y)\n%b = f32[2]{0} multiply(%a, %a)"
+        out = collective_bytes(hlo)
+        assert out["total"] == 0 and out["count"] == 0
+
+    def test_op_histogram(self):
+        hlo = "%a = f32[2] fusion(%x), kind=kLoop\n%b = f32[2,2] dot(%a, %a)"
+        h = op_histogram(hlo)
+        assert h.get("fusion") == 1 and h.get("dot") == 1
+
+
+class TestRooflineMath:
+    def _rec(self, flops, bytes_, coll, mode="train", n_dev=256):
+        return {
+            "scaled": {
+                "flops_per_device": flops,
+                "bytes_per_device": bytes_,
+                "collective_bytes_per_device": coll,
+            },
+            "n_devices": n_dev,
+            "mode": mode,
+            "shape": "train_4k" if mode == "train" else "decode_32k",
+            "model_active_params": 1e9,
+        }
+
+    def test_terms_and_dominance(self):
+        from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, analyze_record
+
+        a = analyze_record(self._rec(197e12, 819e9, 50e9))
+        # each term exactly 1 second
+        assert abs(a["compute_s"] - 1.0) < 1e-9
+        assert abs(a["memory_s"] - 1.0) < 1e-9
+        assert abs(a["collective_s"] - 1.0) < 1e-9
+
+        b = analyze_record(self._rec(1e12, 819e9 * 5, 1e9))
+        assert b["dominant"] == "memory"
+
+    def test_useful_ratio_train(self):
+        from repro.launch.roofline import analyze_record
+
+        # model flops = 6e9 * (4096*256 tokens) ; make HLO match exactly
+        tokens = 4096 * 256
+        model = 6 * 1e9 * tokens
+        rec = self._rec(model / 256, 1e9, 0)
+        a = analyze_record(rec)
+        assert abs(a["useful_ratio"] - 1.0) < 1e-6
+
+    def test_decode_uses_forward_flops(self):
+        from repro.launch.roofline import analyze_record
+
+        rec = self._rec(1e9, 1e9, 0, mode="decode")
+        a = analyze_record(rec)
+        # 2·N·B = 2e9*128; /3 of the 6·N·D train formula
+        assert abs(a["model_flops"] - 2 * 1e9 * 128) < 1
+
+
+class TestScaledCostsLinearity:
+    """The layer-delta method must reproduce a hand-built linear cost."""
+
+    def test_delta_scaling_formula(self):
+        # emulate: cost(counts) = base + Σ counts_s * per_s
+        per = {"layers": 7.0, "dense_layers": 3.0}
+        base_fixed = 11.0
+
+        def cost(counts):
+            return base_fixed + sum(counts[k] * per[k] for k in counts)
+
+        true_counts = {"layers": 58, "dense_layers": 3}
+        base_counts = {k: 1 for k in true_counts}
+        c_base = cost(base_counts)
+        total = c_base
+        for k, n in true_counts.items():
+            v = dict(base_counts)
+            v[k] = 2
+            total += (n - 1) * (cost(v) - c_base)
+        assert abs(total - cost(true_counts)) < 1e-9

@@ -1,0 +1,124 @@
+"""Filter soundness + ILGF fixed-point properties (Algorithms 1-3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    build_label_map,
+    counts_matrix,
+    host_dfs_search,
+    ilgf,
+    one_shot_filter,
+    ord_of,
+)
+from repro.graphs import random_labeled_graph, random_walk_query
+
+
+def _truth_on_unfiltered(g, q):
+    lm = build_label_map(q)
+    od = np.asarray(ord_of(lm, g.vlabels))
+    oq = np.asarray(ord_of(lm, q.vlabels))
+    cand = (od[:, None] == oq[None, :]) & (od[:, None] > 0)
+    return host_dfs_search(g, q, cand)
+
+
+GRAPH_SEEDS = [(0, 1), (5, 6), (10, 11), (20, 21)]
+
+
+@pytest.mark.parametrize("gs,qs", GRAPH_SEEDS)
+def test_ilgf_never_prunes_true_embedding(gs, qs):
+    """Soundness: every ground-truth embedding survives every filter round."""
+    g = random_labeled_graph(250, 800, 5, n_edge_labels=2, seed=gs)
+    q = random_walk_query(g, 5, sparse=True, seed=qs)
+    truth = _truth_on_unfiltered(g, q)
+    res = ilgf(g, q)
+    alive = np.asarray(res.alive)
+    cand = np.asarray(res.candidates)
+    for row in truth:
+        for u, v in enumerate(row):
+            assert alive[v], f"ILGF pruned matched data vertex {v}"
+            assert cand[v, u], f"ILGF dropped true candidate ({v},{u})"
+
+
+@pytest.mark.parametrize("variant", ["cni", "cni_log", "nlf", "label_degree",
+                                     "mnd_nlf"])
+def test_all_variants_sound(variant):
+    g = random_labeled_graph(200, 700, 4, n_edge_labels=1, seed=2)
+    q = random_walk_query(g, 4, sparse=True, seed=3)
+    truth = _truth_on_unfiltered(g, q)
+    res = ilgf(g, q, variant=variant)
+    cand = np.asarray(res.candidates)
+    for row in truth:
+        for u, v in enumerate(row):
+            assert cand[v, u], f"{variant} dropped true candidate"
+
+
+def test_cni_prunes_at_least_label_degree():
+    """The paper's pruning-power ordering: CNI ⊇ label+degree filtering."""
+    g = random_labeled_graph(300, 1000, 6, seed=7)
+    q = random_walk_query(g, 6, sparse=False, seed=8)
+    r_cni = one_shot_filter(g, q, variant="cni")
+    r_ld = one_shot_filter(g, q, variant="label_degree")
+    c_cni = np.asarray(r_cni.candidates)
+    c_ld = np.asarray(r_ld.candidates)
+    # every CNI-candidate is a label/degree candidate (CNI filter is stricter)
+    assert not np.any(c_cni & ~c_ld)
+    assert c_cni.sum() <= c_ld.sum()
+
+
+def test_ilgf_iterations_monotone_shrink():
+    """Each round only removes vertices (peeling): candidates shrink or stop."""
+    g = random_labeled_graph(300, 900, 5, seed=9)
+    q = random_walk_query(g, 5, sparse=True, seed=10)
+    res1 = one_shot_filter(g, q)
+    res_fix = ilgf(g, q)
+    a1 = np.asarray(res1.alive)
+    af = np.asarray(res_fix.alive)
+    assert not np.any(af & ~a1), "fixed point must be subset of one-shot"
+    assert int(res_fix.iterations) >= 1
+
+
+def test_running_example_structure():
+    """Figure 1/6 style check: a path query A-B-C with distinct labels."""
+    from repro.graphs.csr import build_graph
+
+    # data: two disjoint paths, one matching labels, one not
+    vlab = [0, 1, 2, 0, 1, 1]
+    edges = [(0, 1), (1, 2), (3, 4), (4, 5)]
+    g = build_graph(6, vlab, edges)
+    q = build_graph(3, [0, 1, 2], [(0, 1), (1, 2)])
+    res = ilgf(g, q)
+    alive = np.asarray(res.alive)
+    assert alive[:3].all(), "matching path must survive"
+    assert not alive[3:].any(), "non-matching path must be fully pruned"
+    emb = host_dfs_search(g, q, np.asarray(res.candidates))
+    assert emb.shape[0] == 1 and list(emb[0]) == [0, 1, 2]
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=20, deadline=None)
+def test_property_random_graphs_sound(seed):
+    g = random_labeled_graph(120, 420, 4, n_edge_labels=2, seed=seed)
+    try:
+        q = random_walk_query(g, 4, sparse=True, seed=seed + 1)
+    except ValueError:
+        return
+    truth = _truth_on_unfiltered(g, q)
+    cand = np.asarray(ilgf(g, q).candidates)
+    for row in truth:
+        for u, v in enumerate(row):
+            assert cand[v, u]
+
+
+def test_edge_labels_respected():
+    from repro.graphs.csr import build_graph
+
+    # same topology, different edge labels — only one embedding is valid
+    g = build_graph(4, [0, 1, 0, 1], [(0, 1), (2, 3)], elabels=[7, 9])
+    q = build_graph(2, [0, 1], [(0, 1)], elabels=[7])
+    res = ilgf(g, q)
+    emb = host_dfs_search(g, q, np.asarray(res.candidates))
+    assert emb.shape[0] == 1
+    assert list(emb[0]) == [0, 1]

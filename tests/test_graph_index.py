@@ -1,0 +1,72 @@
+"""Graph-database CNI index (§5 future work): soundness + pruning power."""
+
+import numpy as np
+import pytest
+
+from repro.core.graph_index import GraphDatabaseIndex
+from repro.graphs import random_labeled_graph, random_walk_query
+
+
+@pytest.fixture(scope="module")
+def db():
+    graphs = [
+        random_labeled_graph(120 + 20 * i, 400 + 60 * i, 5, seed=100 + i)
+        for i in range(8)
+    ]
+    return GraphDatabaseIndex(graphs)
+
+
+def test_index_sound_never_prunes_containing_graph(db):
+    """A query extracted from graph i must keep graph i as a candidate."""
+    for i in range(len(db.graphs)):
+        q = random_walk_query(db.graphs[i], 4, sparse=True, seed=i)
+        cands = db.candidates(q)
+        assert i in cands, f"index pruned the source graph {i}"
+
+
+def test_index_prunes_weak_graphs():
+    """A path-only graph cannot host a star query: the digest-dominance
+    test must prune it without touching its edges."""
+    from repro.graphs.csr import build_graph
+
+    # graph 0: a 40-vertex path (max degree 2); graph 1: contains a 6-star
+    path_edges = [(i, i + 1) for i in range(39)]
+    g_path = build_graph(40, [i % 3 for i in range(40)], path_edges)
+    star_edges = [(0, i) for i in range(1, 7)] + [(i, i + 1) for i in range(7, 20)]
+    g_star = build_graph(21, [i % 3 for i in range(21)], star_edges)
+    db2 = GraphDatabaseIndex([g_path, g_star])
+    # query: the 6-star itself
+    q = build_graph(7, [0, 1, 2, 0, 1, 2, 0], [(0, i) for i in range(1, 7)])
+    # align labels with g_star's star center (vertex 0 has label 0)
+    q = build_graph(
+        7, [0] + [i % 3 for i in range(1, 7)], [(0, i) for i in range(1, 7)]
+    )
+    cands = db2.candidates(q)
+    assert 0 not in cands, "path graph must be pruned by the digest test"
+    assert 1 in cands
+
+
+def test_full_query_agrees_with_engine(db):
+    from repro.core.engine import SubgraphQueryEngine
+
+    q = random_walk_query(db.graphs[3], 4, sparse=True, seed=7)
+    via_index = db.query(q)
+    # brute force over every graph
+    expected = {}
+    for i, g in enumerate(db.graphs):
+        emb, _ = SubgraphQueryEngine(g).query(q)
+        if emb.shape[0]:
+            expected[i] = emb
+    assert set(via_index) == set(expected)
+    for i in expected:
+        assert via_index[i].shape == expected[i].shape
+
+
+def test_disjoint_labels_pruned_entirely(db):
+    from repro.graphs.csr import Graph
+    import jax.numpy as jnp
+
+    q = random_walk_query(db.graphs[0], 3, seed=1)
+    q_shift = Graph(vlabels=q.vlabels + 10_000, src=q.src, dst=q.dst,
+                    elabels=q.elabels)
+    assert db.candidates(q_shift) == []

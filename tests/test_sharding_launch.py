@@ -1,0 +1,148 @@
+"""Sharding-policy resolution unit tests + a live (subprocess) dry-run cell."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+class TestPolicyResolution:
+    def _policy(self, shape=(16, 16), axes=("data", "model")):
+        import numpy as np
+
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.models.sharding import ShardingPolicy
+
+        # fake mesh over 1 device is impossible; resolve_spec only needs
+        # mesh.shape, so build a Mesh stub via namespace
+        class _MeshStub:
+            def __init__(self, shape_map):
+                self.shape = shape_map
+
+        pol = ShardingPolicy(mesh=_MeshStub(dict(zip(axes, shape))))
+        return pol
+
+    def test_divisible_dims_shard(self):
+        pol = self._policy()
+        spec = pol.resolve_spec((256, 1024), ("batch", "ff"))
+        assert tuple(spec) == ("data", "model")
+
+    def test_nondivisible_falls_back_to_replication(self):
+        pol = self._policy()
+        # hymba's 25 heads on a 16-way model axis must replicate, not crash
+        spec = pol.resolve_spec((2048, 25, 64), ("fsdp", "heads", None))
+        assert tuple(spec) in ((), (None,), (None, None))  # fsdp off, heads drop
+
+    def test_axis_used_once(self):
+        pol = self._policy()
+        # batch takes 'data'; kv_seq must not reuse it in the same spec
+        spec = pol.resolve_spec((16, 8, 32768, 128),
+                                ("batch", "kv_heads", "kv_seq", None))
+        flat = []
+        for e in spec:
+            if isinstance(e, tuple):
+                flat.extend(e)
+            elif e is not None:
+                flat.append(e)
+        assert len(flat) == len(set(flat))
+
+    def test_fsdp_gated(self):
+        pol = self._policy()
+        pol.enable_fsdp = False
+        assert tuple(pol.resolve_spec((4096, 4096), ("fsdp", "ff"))) in (
+            (None, "model"),
+        )
+        pol.enable_fsdp = True
+        assert tuple(pol.resolve_spec((4096, 4096), ("fsdp", "ff"))) == (
+            "data", "model",
+        )
+
+
+class TestDryRunArtifacts:
+    """Validate the committed dry-run results (produced by launch/dryrun.py)."""
+
+    RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+    def _load(self, mesh):
+        d = os.path.join(self.RESULTS, mesh)
+        if not os.path.isdir(d):
+            pytest.skip("dry-run artifacts not generated yet")
+        out = {}
+        for name in os.listdir(d):
+            with open(os.path.join(d, name)) as f:
+                rec = json.load(f)
+            out[(rec["arch"], rec["shape"])] = rec
+        return out
+
+    @pytest.mark.parametrize("mesh", ["pod_16x16", "multipod_2x16x16"])
+    def test_all_40_cells_accounted(self, mesh):
+        from repro.configs.registry import all_cells
+
+        recs = self._load(mesh)
+        for arch, shape, skip in all_cells():
+            assert (arch, shape) in recs, f"missing cell {arch}×{shape}"
+            rec = recs[(arch, shape)]
+            if skip:
+                assert rec["status"] == "skipped"
+            else:
+                assert rec["status"] == "ok", (arch, shape, rec.get("error"))
+
+    def test_single_pod_has_roofline_inputs(self):
+        recs = self._load("pod_16x16")
+        for rec in recs.values():
+            if rec["status"] != "ok":
+                continue
+            sc = rec["scaled"]
+            assert sc["flops_per_device"] > 0
+            assert sc["bytes_per_device"] > 0
+            assert rec["memory_analysis"].get("temp_size_in_bytes", 0) >= 0
+
+    def test_memory_fits_hbm(self):
+        """args+temp per device must fit 16GB on every non-skipped cell."""
+        recs = self._load("pod_16x16")
+        over = []
+        for (arch, shape), rec in recs.items():
+            if rec["status"] != "ok":
+                continue
+            m = rec["memory_analysis"]
+            total = m.get("argument_size_in_bytes", 0) + m.get(
+                "temp_size_in_bytes", 0
+            )
+            if total > 16e9:
+                over.append((arch, shape, total / 1e9))
+        # report, tolerate known-documented offenders (EXPERIMENTS.md §Perf:
+        # every train_4k cell needs hoisted-prefetch microbatching or the
+        # multi-pod mesh to fit 16GB at 1M tokens/step on 256 chips; the
+        # deepseek/minicpm 32k-prefill + deepseek decode are MLA-latent
+        # buffers tracked in the Cell-1/Cell-3 logs)
+        documented = {(a, "train_4k") for a in (
+            "granite-3-2b", "granite-3-8b", "starcoder2-15b", "minicpm3-4b",
+            "internvl2-26b", "hymba-1.5b", "rwkv6-7b",
+            "seamless-m4t-large-v2", "qwen3-moe-30b-a3b", "deepseek-v3-671b",
+        )} | {("deepseek-v3-671b", "prefill_32k"),
+              ("deepseek-v3-671b", "decode_32k"),
+              ("minicpm3-4b", "prefill_32k")}
+        undocumented = [o for o in over if (o[0], o[1]) not in documented]
+        assert not undocumented, f"cells over 16GB: {undocumented}"
+
+
+@pytest.mark.slow
+def test_live_dryrun_one_cell(tmp_path):
+    """End-to-end: lower+compile granite-3-2b × decode_32k on 512 fake
+    devices in a subprocess (proves the launcher works from a clean env)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "granite-3-2b",
+         "--shape", "decode_32k", "--mesh", "single", "--force"],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=os.path.dirname(SRC),
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "[ok" in out.stdout
