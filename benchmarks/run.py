@@ -1,11 +1,14 @@
 """Benchmark harness: one section per paper table/figure + roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--section NAME]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--section NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     graph    — the paper's experiments (Figs 7-11 analogues, §4)
+    batch    — batched multi-query + serving throughput (batch_engine)
     kernels  — kernel-path microbenchmarks
     roofline — derived terms from the dry-run artifacts (if present)
+
+``--smoke`` runs one tiny batched bench (a jit-regression canary for CI).
 """
 
 from __future__ import annotations
@@ -22,10 +25,21 @@ def _emit(rows):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "graph", "kernels", "roofline"])
+                    choices=["all", "graph", "batch", "kernels", "roofline"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny batched bench only (CI jit-regression canary)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        from benchmarks.batch_benches import run_all as batch_all
+
+        _emit(batch_all(smoke=True))
+        return
+    if args.section in ("all", "batch"):
+        from benchmarks.batch_benches import run_all as batch_all
+
+        _emit(batch_all())
     if args.section in ("all", "graph"):
         from benchmarks.graph_benches import run_all as graph_all
 

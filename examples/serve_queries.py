@@ -1,0 +1,59 @@
+"""Continuous-batching subgraph-query serving demo.
+
+    PYTHONPATH=src python examples/serve_queries.py
+
+Sixteen random-walk queries with mixed sizes share a 4-slot
+``GraphQueryService``: every tick runs ONE batched ILGF peeling round for
+all active slots; queries that reach their fixed point dispatch search,
+return, and free their slot mid-flight — so deep and shallow queries
+coexist in the same round dispatch (the graph analogue of serve_batch.py's
+token-level continuous batching).
+"""
+
+import time
+
+import numpy as np
+
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.serve import GraphQueryService, GraphServiceConfig
+
+
+def main():
+    g = random_labeled_graph(2_000, 8_000, 6, n_edge_labels=2, seed=0)
+    svc = GraphQueryService(
+        g,
+        GraphServiceConfig(max_slots=4, max_query_vertices=16,
+                           max_query_labels=8),
+    )
+    rng = np.random.default_rng(0)
+    rids = []
+    for i in range(16):
+        q = random_walk_query(
+            g, int(rng.integers(4, 9)), sparse=bool(i % 2), seed=1000 + i
+        )
+        rids.append(svc.submit(q, max_embeddings=500))
+
+    t0 = time.perf_counter()
+    done = []
+    ticks = 0
+    while len(done) < len(rids):
+        finished = svc.tick()
+        ticks += 1
+        for rid, emb, stats in finished:
+            done.append(rid)
+            print(
+                f"  tick {ticks:3d}: request {rid:2d} done — "
+                f"{emb.shape[0]} embeddings, {stats.ilgf_iterations} rounds, "
+                f"{stats.vertices_after}/{stats.vertices_before} alive"
+            )
+    dt = time.perf_counter() - t0
+    print(
+        f"served {len(done)} queries in {ticks} ticks / {dt:.2f}s "
+        f"({len(done) / dt:.1f} queries/s on one host device)"
+    )
+    assert sorted(done) == sorted(rids)
+    print("all requests completed ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,14 @@ class CniEngineConfig:
     use_kernels: bool = True         # Pallas cni_encode/candidate_filter
     distributed_axis: str = "data"
     join_cap_per_shard: int = 8_192
+    # Batched multi-query engine (core/batch_engine.py): queries are bucketed
+    # by (d_max, |L(Q)|, |V(Q)|) rounded to powers of two; max_batch bounds
+    # the padded batch dim of one fused ILGF dispatch.
+    max_batch: int = 32
+    # Serving front-end (serve/graph_service.py): static slot shapes.
+    service_slots: int = 8
+    service_max_query_vertices: int = 16
+    service_max_query_labels: int = 16
 
 
 CONFIG = CniEngineConfig()

@@ -1,5 +1,12 @@
 """The paper's primary contribution: CNI encoding + ILGF filtering + search."""
 
+from repro.core.batch_engine import (
+    BatchedQueries,
+    BatchQueryEngine,
+    batched_ilgf_fixed_point,
+    batched_ilgf_round,
+    stack_queries,
+)
 from repro.core.cni import (
     CniValue,
     cni_exact_py,
@@ -7,7 +14,7 @@ from repro.core.cni import (
     cni_log_from_counts,
     default_max_p,
 )
-from repro.core.engine import QueryStats, SubgraphQueryEngine
+from repro.core.engine import QueryStats, SubgraphQueryEngine, search_filtered
 from repro.core.filters import (
     VertexDigest,
     cni_match,

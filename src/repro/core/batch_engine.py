@@ -1,0 +1,475 @@
+"""Batched multi-query subsystem: one fused ILGF fixed point for N queries.
+
+A vertex's neighborhood distills into a single integer (the CNI), so the
+filtering stage is pure data-parallel arithmetic — which means N concurrent
+queries over the *same* data graph can share one device dispatch instead of
+N tiny ones.  This module stacks N query digests into padded ``(B, …)``
+arrays and runs the ILGF peeling loop vectorized across the batch axis:
+
+* **Bucketing.**  Queries are grouped by ``(d_max, |𝓛(Q)|↑, |V(Q)|↑)`` where
+  ``↑`` rounds up to the next power of two; every bucket maps to one set of
+  static jit shapes, so traces are reused across requests instead of
+  recompiling per query.  Padded label columns hold zero counts and padded
+  query vertices hold ord 0, both of which are exact no-ops for the CNI
+  encoding and the match matrix (label 0 never matches).
+
+* **Shared tables.**  The Pascal / log-ħ tables are host-cached per
+  ``(d_max, max_p)`` (cni.py), so every query in a bucket — and every round —
+  reuses the same constants inside one trace.
+
+* **One while_loop.**  The batched fixed point runs until *every* query in
+  the batch converges; extra rounds for already-converged queries are
+  idempotent (the peeling operator is monotone), so the result per query is
+  the same fixed point the sequential engine reaches.
+
+* **Per-query search.**  Enumeration is irregular host-side work; it is
+  dispatched per query on the *compacted* surviving subgraphs via the same
+  ``search_filtered`` path as the sequential engine, so reported embeddings
+  are identical (up to row order).
+
+``batched_ilgf_round`` exposes a single peeling round over the batch — the
+serving front-end (serve/graph_service.py) calls it once per scheduler tick
+with its fixed slot shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from collections import defaultdict
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cni_engine import CONFIG as ENGINE_CONFIG
+from repro.core import filters as flt
+from repro.core.cni import (
+    SAT64,
+    _log_hbar_np,
+    _pascal_table_np,
+    default_max_p,
+)
+from repro.core.engine import QueryStats, search_filtered
+from repro.core.ilgf import match_matrix
+from repro.core.labels import counts_matrix_from_ords
+from repro.graphs.csr import Graph, max_degree, to_host
+
+
+class BatchedQueries(NamedTuple):
+    """Padded (B, …) stack of query digests sharing one jit-trace bucket.
+
+    Field names mirror ``ilgf.QueryDigest`` (``counts``/``digest``/``mnd``)
+    so ``match_matrix`` accepts either, with ``ords`` carried alongside
+    because every query induces its own ord() view of the data vertices.
+    """
+
+    ords: jnp.ndarray       # (B, V) int32 — per-query ord() of data vertices
+    counts: jnp.ndarray     # (B, U, L) int32 — query NLF counts
+    digest: flt.VertexDigest  # all fields (B, U)
+    mnd: jnp.ndarray        # (B, U) int32
+
+
+def ceil_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def bucket_key(query: Graph, d_max: int) -> tuple[int, int, int]:
+    """Static-shape bucket: queries with equal keys share one jit trace."""
+    n_labels = int(np.unique(np.asarray(query.vlabels)).size)
+    return (d_max, ceil_pow2(n_labels), ceil_pow2(query.n_vertices))
+
+
+def prepare_padded_query(
+    query: Graph,
+    data_vlabels,
+    d_max: int,
+    max_p: int,
+    u_pad: int,
+    l_pad: int,
+):
+    """One query's digest, padded to the bucket's (u_pad, l_pad) shape.
+
+    Runs entirely in numpy on the host: query sides are tiny (U ≤ u_pad
+    vertices), and eager per-query device dispatches were the dominant cost
+    of batch assembly.  The CNI accumulation mirrors the device semantics
+    *exactly* — same saturated Pascal table, same ``min(p, max_p)`` clip,
+    same sticky ``min(acc + term, SAT64)`` saturating add — so host query
+    digests compare correctly against device data digests.
+
+    Padding label columns are appended *after* the real alphabet (they hold
+    zero counts, hence never alter the descending expansion that feeds the
+    CNI bijection) and padding query vertices carry ord 0 (never matched).
+    Returns numpy rows (ords_data, counts, VertexDigest, mnd).
+    """
+    vlab_q = np.asarray(query.vlabels)
+    u_q = query.n_vertices
+    uniq = np.unique(vlab_q)
+    l_q = int(uniq.size)
+    if u_q > u_pad:
+        raise ValueError(f"query has {u_q} vertices > pad {u_pad}")
+    if l_q > l_pad:
+        raise ValueError(f"query has {l_q} labels > pad {l_pad}")
+
+    data_vlabels = np.asarray(data_vlabels)
+    pos = np.clip(np.searchsorted(uniq, data_vlabels), 0, l_q - 1)
+    ords_data = np.where(
+        uniq[pos] == data_vlabels, pos + 1, 0
+    ).astype(np.int32)
+
+    q_ord = np.zeros(u_pad, np.int32)
+    q_ord[:u_q] = np.searchsorted(uniq, vlab_q) + 1
+    counts = np.zeros((u_pad, l_pad), np.int32)
+    src = np.asarray(query.src)
+    dst = np.asarray(query.dst)
+    if src.size:
+        np.add.at(counts, (src, q_ord[dst] - 1), 1)
+    deg = counts.sum(axis=1).astype(np.int32)
+
+    table = _pascal_table_np(d_max, max_p)      # uint64, saturated at SAT64
+    log_t = _log_hbar_np(d_max, max_p)
+    sat = int(SAT64)
+
+    # vectorized descending expansion across all rows (the numpy twin of
+    # cni._descending_positions): label at position j = first ccum bin > j
+    desc = counts[:, ::-1]
+    ccum = np.cumsum(desc, axis=1)                              # (U, L)
+    posr = np.arange(d_max)
+    idx = (ccum[:, None, :] <= posr[None, :, None]).sum(-1)     # (U, D)
+    lab = np.maximum(l_pad - idx, 0)
+    valid = posr[None, :] < deg[:, None]
+    lab = np.where(valid, lab, 0)
+    prefix = np.minimum(np.cumsum(lab, axis=1), max_p)          # (U, D)
+    q_idx = np.arange(1, d_max + 1)
+    terms = np.where(valid, table[q_idx[None, :], prefix], 0)   # uint64
+
+    shadow = np.cumsum(terms.astype(np.float64), axis=1)
+    if shadow.size == 0 or shadow[:, -1].max(initial=0.0) < float(SAT64) * 0.5:
+        # fast path: no saturating add can trigger, plain uint64 sum is the
+        # exact device result
+        cni_u64 = terms.sum(axis=1, dtype=np.uint64)
+    else:
+        # near/over saturation: replay the device's sticky saturating adds
+        cni_u64 = np.zeros(u_pad, np.uint64)
+        for v in range(u_q):
+            acc = 0
+            for j in range(1, min(int(deg[v]), d_max) + 1):
+                acc = min(acc + int(table[j, prefix[v, j - 1]]), sat)
+            cni_u64[v] = acc
+
+    log_terms = np.where(valid, log_t[q_idx[None, :], prefix], -np.inf)
+    log_terms = log_terms.astype(np.float32)
+    m = log_terms.max(axis=1, initial=-np.inf)
+    m_safe = np.where(np.isfinite(m), m, np.float32(0.0))
+    s = np.sum(
+        np.where(valid, np.exp(log_terms - m_safe[:, None]), 0.0),
+        axis=1, dtype=np.float32,
+    )
+    cni_log = np.where(
+        deg > 0,
+        m_safe + np.log(np.maximum(s, np.float32(1e-30))),
+        -np.inf,
+    ).astype(np.float32)
+
+    mnd = np.zeros(u_pad, np.int32)
+    if src.size:
+        np.maximum.at(mnd, src, deg[dst])
+
+    digest = flt.VertexDigest(
+        ord_label=q_ord,
+        deg=deg,
+        cni=flt.CniValue(
+            hi=(cni_u64 >> np.uint64(32)).astype(np.uint32),
+            lo=(cni_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+        ),
+        cni_log=cni_log,
+    )
+    return ords_data, counts, digest, mnd
+
+
+def stack_queries(
+    queries: Sequence[Graph],
+    data: Graph,
+    d_max: int,
+    max_p: int,
+    u_pad: int,
+    l_pad: int,
+    b_pad: int,
+) -> BatchedQueries:
+    """Stack ≤ b_pad queries into one padded batch; spare slots are inert
+    (all-zero ords ⇒ empty initial alive set ⇒ zero work per round)."""
+    if len(queries) > b_pad:
+        raise ValueError(f"{len(queries)} queries > batch pad {b_pad}")
+    data_vlabels = np.asarray(data.vlabels)
+    rows = [
+        prepare_padded_query(q, data_vlabels, d_max, max_p, u_pad, l_pad)
+        for q in queries
+    ]
+    n_spare = b_pad - len(rows)
+    v = data.n_vertices
+
+    def stk(items, pad_row):
+        return jnp.asarray(np.stack(list(items) + [pad_row] * n_spare))
+
+    zeros_u = np.zeros(u_pad, np.int32)
+    zeros_u32 = np.zeros(u_pad, np.uint32)
+    digest = flt.VertexDigest(
+        ord_label=stk((r[2].ord_label for r in rows), zeros_u),
+        deg=stk((r[2].deg for r in rows), zeros_u),
+        cni=flt.CniValue(
+            hi=stk((r[2].cni.hi for r in rows), zeros_u32),
+            lo=stk((r[2].cni.lo for r in rows), zeros_u32),
+        ),
+        cni_log=stk(
+            (r[2].cni_log for r in rows),
+            np.full(u_pad, -np.inf, np.float32),
+        ),
+    )
+    return BatchedQueries(
+        ords=stk((r[0] for r in rows), np.zeros(v, np.int32)),
+        counts=stk(
+            (r[1] for r in rows), np.zeros((u_pad, l_pad), np.int32)
+        ),
+        digest=digest,
+        mnd=stk((r[3] for r in rows), zeros_u),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_labels", "d_max", "max_p", "variant", "max_iters"),
+)
+def batched_ilgf_fixed_point(
+    g: Graph,
+    qb: BatchedQueries,
+    *,
+    n_labels: int,
+    d_max: int,
+    max_p: int,
+    variant: str,
+    max_iters: int,
+):
+    """Vectorized ILGF to the per-query fixed points.
+
+    Returns (alive (B, V), candidates (B, V, U), rounds).  The while_loop
+    runs until the whole batch is stable; stable queries re-apply an
+    idempotent round, so per-query results equal the sequential fixed point.
+    """
+
+    def round_fn(state):
+        alive, _, it = state
+        counts = counts_matrix_from_ords(g, qb.ords, n_labels, alive)
+        match = match_matrix(variant, counts, qb.ords, qb, g, alive,
+                             d_max, max_p)
+        new_alive = alive & jnp.any(match, axis=-1)
+        changed = jnp.any(new_alive != alive)
+        return new_alive, changed, it + 1
+
+    def cond_fn(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    alive0 = qb.ords > 0  # Lemma 1 applied up front, per query
+    state = (alive0, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    alive, _, rounds = jax.lax.while_loop(cond_fn, round_fn, state)
+    counts = counts_matrix_from_ords(g, qb.ords, n_labels, alive)
+    match = match_matrix(variant, counts, qb.ords, qb, g, alive, d_max, max_p)
+    return alive, match & alive[..., None], rounds
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_labels", "d_max", "max_p", "variant")
+)
+def batched_ilgf_round(
+    g: Graph,
+    qb: BatchedQueries,
+    alive: jnp.ndarray,
+    *,
+    n_labels: int,
+    d_max: int,
+    max_p: int,
+    variant: str,
+):
+    """One peeling round over the batch (the serving scheduler's tick unit).
+
+    Returns (new_alive (B, V), candidates (B, V, U), changed (B,)).  A slot
+    with ``changed == False`` has reached its fixed point, and the returned
+    candidate columns for it are final.
+    """
+    counts = counts_matrix_from_ords(g, qb.ords, n_labels, alive)
+    match = match_matrix(variant, counts, qb.ords, qb, g, alive, d_max, max_p)
+    new_alive = alive & jnp.any(match, axis=-1)
+    changed = jnp.any(new_alive != alive, axis=-1)
+    return new_alive, match & new_alive[..., None], changed
+
+
+@jax.jit
+def _compact_batch(qb: BatchedQueries, alive: jnp.ndarray,
+                   idx: jnp.ndarray, n_keep: jnp.ndarray):
+    """Gather surviving batch rows into a smaller pad in one dispatch.
+
+    ``idx`` (new_pad,) selects rows (tail entries repeat a survivor); rows
+    at position >= n_keep are made inert by zeroing their ords/alive.
+    """
+    qb2 = jax.tree_util.tree_map(lambda a: a[idx], qb)
+    inert = jnp.arange(idx.shape[0]) >= n_keep
+    qb2 = qb2._replace(ords=jnp.where(inert[:, None], 0, qb2.ords))
+    alive2 = jnp.where(inert[:, None], False, alive[idx])
+    return qb2, alive2
+
+
+class BatchQueryEngine:
+    """Multi-query CNI engine: one fused filter dispatch per query bucket.
+
+    Drop-in batched counterpart of ``SubgraphQueryEngine``: ``query_batch``
+    returns one (embeddings, stats) pair per input query, in input order,
+    with embeddings identical (up to row order) to calling the sequential
+    engine per query.
+    """
+
+    def __init__(
+        self,
+        data: Graph,
+        *,
+        filter_variant: str = "cni",
+        khop: int = 1,
+        searcher: str = "join",
+        search_vertex_cap: int = 8192,
+        max_batch: int | None = None,
+        max_iters: int = 1_000,
+    ):
+        if max_batch is None:
+            max_batch = ENGINE_CONFIG.max_batch
+        self.data = data
+        self._host_data = to_host(data)  # search side re-reads fields often
+        self.filter_variant = filter_variant
+        self.khop = khop
+        self.searcher = searcher
+        self.search_vertex_cap = search_vertex_cap
+        self.max_batch = max_batch
+        self.max_iters = max_iters
+        self.d_max = max(1, max_degree(data))
+
+    def query_batch(
+        self,
+        queries: Sequence[Graph],
+        *,
+        max_embeddings: int | None = None,
+    ) -> list[tuple[np.ndarray, QueryStats]]:
+        # one host copy per query up front: every later stage (bucketing,
+        # digest prep, search) reads fields repeatedly on the host
+        queries = [to_host(q) for q in queries]
+        results: list = [None] * len(queries)
+        buckets: dict[tuple[int, int, int], list[int]] = defaultdict(list)
+        for i, q in enumerate(queries):
+            buckets[bucket_key(q, self.d_max)].append(i)
+        for (d_max, l_pad, u_pad), idxs in sorted(buckets.items()):
+            max_p = default_max_p(d_max, l_pad)
+            # descending power-of-two chunks (each ≤ max_batch): every chunk
+            # is exactly full, so no inert pad rows ride along in the rounds
+            pos = 0
+            while pos < len(idxs):
+                remaining = len(idxs) - pos
+                size = min(self.max_batch,
+                           1 << (remaining.bit_length() - 1))
+                chunk = idxs[pos : pos + size]
+                pos += size
+                self._run_chunk(
+                    queries, chunk, results,
+                    d_max=d_max, l_pad=l_pad, u_pad=u_pad, max_p=max_p,
+                    max_embeddings=max_embeddings,
+                )
+        return results
+
+    def _run_chunk(self, queries, chunk, results, *, d_max, l_pad, u_pad,
+                   max_p, max_embeddings):
+        """Filter one bucket chunk with round-level continuous batching.
+
+        Lockstep batching would run *every* query for the batch's deepest
+        peeling depth; instead each host-side round retires queries whose
+        alive mask is stable (their fixed point — the returned candidates
+        are final) and compacts the survivors down power-of-two batch pads,
+        so total filter work tracks Σ per-query rounds while each round is
+        still one fused dispatch.  Compaction shapes revisit the same ≤
+        log2(max_batch) traces, so nothing recompiles in steady state.
+        """
+        t0 = time.perf_counter()
+        b_pad = min(self.max_batch, ceil_pow2(len(chunk)))
+        qb = stack_queries(
+            [queries[i] for i in chunk], self._host_data,
+            d_max, max_p, u_pad, l_pad, b_pad,
+        )
+        alive = qb.ords > 0
+        row_query = list(range(len(chunk)))  # batch row -> chunk position
+        done: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
+        rounds = 0
+        while row_query and rounds < self.max_iters:
+            alive, cand, changed = batched_ilgf_round(
+                self.data, qb, alive,
+                n_labels=l_pad, d_max=d_max, max_p=max_p,
+                variant=self.filter_variant,
+            )
+            rounds += 1
+            conv = ~np.asarray(changed)
+            if not conv[: len(row_query)].any():
+                continue
+            alive_np = np.asarray(alive)
+            cand_np = np.asarray(cand)
+            keep = []
+            for r, pos in enumerate(row_query):
+                if conv[r]:
+                    done[pos] = (alive_np[r], cand_np[r], rounds)
+                else:
+                    keep.append(r)
+            row_query = [row_query[r] for r in keep]
+            if not row_query:
+                break
+            # always gather survivors to the front: batch row j must stay in
+            # lockstep with row_query[j] (retired rows also become inert)
+            new_pad = min(b_pad, ceil_pow2(len(keep)))
+            idx = np.asarray(
+                keep + [keep[0]] * (new_pad - len(keep)), np.int32
+            )
+            qb, alive = _compact_batch(
+                qb, alive, idx, np.int32(len(keep))
+            )
+
+        if row_query:
+            # max_iters hit: like the sequential engine, degrade soundly —
+            # the current masks are supersets of the fixed point, so search
+            # still returns exactly the true embeddings.  One extra round
+            # computes candidates aligned with the *current* (compacted)
+            # rows; the stale per-round ``cand`` may predate a compaction.
+            alive, cand, _ = batched_ilgf_round(
+                self.data, qb, alive,
+                n_labels=l_pad, d_max=d_max, max_p=max_p,
+                variant=self.filter_variant,
+            )
+            rounds += 1
+            alive_np = np.asarray(alive)
+            cand_np = np.asarray(cand)
+            for r, pos in enumerate(row_query):
+                done[pos] = (alive_np[r], cand_np[r], rounds)
+        filter_s = time.perf_counter() - t0
+        for pos, i in enumerate(chunk):
+            q = queries[i]
+            alive_row, cand_row, q_rounds = done[pos]
+            stats = QueryStats(
+                vertices_before=self.data.n_vertices,
+                filter_seconds=filter_s / len(chunk),
+                ilgf_iterations=q_rounds,
+            )
+            stats.extras["batch"] = {
+                "bucket": (d_max, l_pad, u_pad),
+                "batch_size": len(chunk),
+            }
+            emb = search_filtered(
+                self._host_data, q, alive_row, cand_row[:, : q.n_vertices],
+                stats,
+                khop=self.khop,
+                searcher=self.searcher,
+                search_vertex_cap=self.search_vertex_cap,
+                max_embeddings=max_embeddings,
+            )
+            results[i] = (emb, stats)

@@ -188,10 +188,13 @@ def _descending_positions(counts: jnp.ndarray, d_max: int):
 def cni_from_counts(counts: jnp.ndarray, d_max: int, max_p: int) -> CniValue:
     """Exact (saturating two-limb) CNI for each count row.
 
-    counts: (V, L) int32.  d_max: static max degree (rows with more neighbors
-    must not occur — callers size d_max from the graph).  max_p: static bound
-    on prefix sums (d_max * L suffices).
+    counts: (..., L) int32 — any leading batch shape; the CNI is computed per
+    row.  d_max: static max degree (rows with more neighbors must not occur —
+    callers size d_max from the graph).  max_p: static bound on prefix sums
+    (d_max * L suffices).
     """
+    batch_shape = counts.shape[:-1]
+    counts = counts.reshape((-1, counts.shape[-1]))
     hi_t, lo_t = pascal_table_limbs(d_max, max_p)
     _, prefix, deg = _descending_positions(counts, d_max)
     q = jnp.arange(1, d_max + 1, dtype=jnp.int32)  # (D,)
@@ -211,11 +214,16 @@ def cni_from_counts(counts: jnp.ndarray, d_max: int, max_p: int) -> CniValue:
         jnp.zeros(counts.shape[0], dtype=jnp.uint32),
     )
     hi, lo = jax.lax.fori_loop(0, d_max, body, init)
-    return CniValue(hi=hi, lo=lo)
+    return CniValue(hi=hi.reshape(batch_shape), lo=lo.reshape(batch_shape))
 
 
 def cni_log_from_counts(counts: jnp.ndarray, d_max: int, max_p: int) -> jnp.ndarray:
-    """float32 log-space CNI (the TPU-kernel fast path): logsumexp of terms."""
+    """float32 log-space CNI (the TPU-kernel fast path): logsumexp of terms.
+
+    counts: (..., L) — any leading batch shape, per-row like the exact path.
+    """
+    batch_shape = counts.shape[:-1]
+    counts = counts.reshape((-1, counts.shape[-1]))
     log_t = log_hbar_table(d_max, max_p)
     _, prefix, deg = _descending_positions(counts, d_max)
     q = jnp.arange(1, d_max + 1, dtype=jnp.int32)
@@ -227,7 +235,7 @@ def cni_log_from_counts(counts: jnp.ndarray, d_max: int, max_p: int) -> jnp.ndar
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
     s = jnp.sum(jnp.where(valid, jnp.exp(terms - m_safe[:, None]), 0.0), axis=-1)
     out = m_safe + jnp.log(jnp.maximum(s, 1e-30))
-    return jnp.where(deg > 0, out, -jnp.inf)
+    return jnp.where(deg > 0, out, -jnp.inf).reshape(batch_shape)
 
 
 def cni_exact_py(labels: list[int]) -> int:

@@ -29,6 +29,26 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.5: public API with the ``check_vma`` kwarg
+    _shard_map = jax.shard_map
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x: experimental API, kwarg named ``check_rep``
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map_nocheck(*, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` decorator with replication checks off."""
+    return functools.partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **{_SHARD_MAP_CHECK_KW: False},
+    )
+
+
 from repro.core import filters as flt
 from repro.core.cni import default_max_p
 from repro.core.ilgf import IlgfResult, QueryDigest, prepare_query
@@ -116,12 +136,10 @@ def distributed_ilgf(
     q = prepare_query(query, d_max, max_p)
     v_pad = int(sg.ords.shape[0])
 
-    @functools.partial(
-        jax.shard_map,
+    @shard_map_nocheck(
         mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(axis), P()),
         out_specs=(P(), P(axis), P()),
-        check_vma=False,
     )
     def run(ords, edge_src, edge_dst, edge_ok, alive0):
         my = jax.lax.axis_index(axis)
@@ -186,12 +204,10 @@ def distributed_join_step(
     n_shards = mesh.shape[axis]
     t = table.shape[-1]
 
-    @functools.partial(
-        jax.shard_map,
+    @shard_map_nocheck(
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(), P(), P(), P(), P(), P()),
         out_specs=(P(axis), P(axis), P()),
-        check_vma=False,
     )
     def step(table, n_rows, cand_list, elab, qp, ql, qv, cv):
         tab = table[0]          # (cap, t)

@@ -3,6 +3,11 @@
 Pipeline = (optional stream prefilter) → ILGF fixed point → compaction →
 (optional k-hop refinement) → BFS-join enumeration, i.e. the paper's full
 Figure-1-to-Figure-6 flow as one call.
+
+The post-filter stage (compaction → refinement → search) is factored out as
+``search_filtered`` so the batched multi-query engine (batch_engine.py) and
+the serving front-end (serve/graph_service.py) dispatch exactly the same
+search path per surviving query.
 """
 
 from __future__ import annotations
@@ -16,7 +21,7 @@ import numpy as np
 from repro.core.ilgf import ilgf
 from repro.core.khop import refine_candidates_khop
 from repro.core.search import bfs_join_search, host_dfs_search
-from repro.graphs.csr import Graph, induced_subgraph
+from repro.graphs.csr import Graph, induced_subgraph, to_host
 
 
 @dataclass
@@ -29,6 +34,52 @@ class QueryStats:
     candidate_pairs: int = 0
     n_embeddings: int = 0
     extras: dict = field(default_factory=dict)
+
+
+def search_filtered(
+    data: Graph,
+    query: Graph,
+    alive: np.ndarray,
+    candidates: np.ndarray,
+    stats: QueryStats,
+    *,
+    khop: int = 1,
+    searcher: str = "join",
+    search_vertex_cap: int = 8192,
+    max_embeddings: int | None = None,
+) -> np.ndarray:
+    """Compaction → optional k-hop refinement → enumeration on one query.
+
+    ``alive``: (V,) bool fixed-point mask; ``candidates``: (V, U) bool C(u)
+    columns over *original* vertex ids.  Returns embeddings over original
+    ids and fills the search-side fields of ``stats`` in place.
+    """
+    stats.vertices_after = int(alive.sum())
+    if stats.vertices_after == 0:
+        return np.zeros((0, query.vlabels.shape[0]), np.int64)
+
+    sub, old_ids = induced_subgraph(data, alive)
+    cand = np.asarray(candidates)[alive]
+    if khop > 1 and sub.n_vertices <= search_vertex_cap:
+        t_ref = time.perf_counter()
+        cand = refine_candidates_khop(sub, query, cand, k_max=khop)
+        stats.filter_seconds += time.perf_counter() - t_ref
+    stats.candidate_pairs = int(cand.sum())
+
+    t1 = time.perf_counter()
+    if sub.n_vertices > search_vertex_cap:
+        raise ValueError(
+            f"filtered graph has {sub.n_vertices} vertices > cap "
+            f"{search_vertex_cap}; raise search_vertex_cap or use "
+            "the distributed engine"
+        )
+    if searcher == "dfs":
+        emb = host_dfs_search(sub, query, cand, max_embeddings=max_embeddings)
+    else:
+        emb = bfs_join_search(sub, query, cand, max_embeddings=max_embeddings)
+    stats.search_seconds = time.perf_counter() - t1
+    stats.n_embeddings = int(emb.shape[0])
+    return old_ids[emb] if emb.size else emb
 
 
 class SubgraphQueryEngine:
@@ -45,6 +96,7 @@ class SubgraphQueryEngine:
         search_vertex_cap: int = 8192,
     ):
         self.data = data
+        self._host_data = to_host(data)  # search side re-reads fields often
         self.filter_variant = filter_variant
         self.khop = khop
         self.searcher = searcher
@@ -57,29 +109,16 @@ class SubgraphQueryEngine:
         res = ilgf(self.data, q, variant=self.filter_variant)
         alive = np.asarray(res.alive)
         stats.ilgf_iterations = int(res.iterations)
-        stats.vertices_after = int(alive.sum())
-        if stats.vertices_after == 0:
-            stats.filter_seconds = time.perf_counter() - t0
-            return np.zeros((0, q.vlabels.shape[0]), np.int64), stats
-
-        sub, old_ids = induced_subgraph(self.data, alive)
-        cand = np.asarray(res.candidates)[alive]
-        if self.khop > 1 and sub.n_vertices <= self.search_vertex_cap:
-            cand = refine_candidates_khop(sub, q, cand, k_max=self.khop)
-        stats.candidate_pairs = int(cand.sum())
         stats.filter_seconds = time.perf_counter() - t0
-
-        t1 = time.perf_counter()
-        if sub.n_vertices > self.search_vertex_cap:
-            raise ValueError(
-                f"filtered graph has {sub.n_vertices} vertices > cap "
-                f"{self.search_vertex_cap}; raise search_vertex_cap or use "
-                "the distributed engine"
-            )
-        if self.searcher == "dfs":
-            emb = host_dfs_search(sub, q, cand, max_embeddings=max_embeddings)
-        else:
-            emb = bfs_join_search(sub, q, cand, max_embeddings=max_embeddings)
-        stats.search_seconds = time.perf_counter() - t1
-        stats.n_embeddings = int(emb.shape[0])
-        return old_ids[emb] if emb.size else emb, stats
+        emb = search_filtered(
+            self._host_data,
+            q,
+            alive,
+            np.asarray(res.candidates),
+            stats,
+            khop=self.khop,
+            searcher=self.searcher,
+            search_vertex_cap=self.search_vertex_cap,
+            max_embeddings=max_embeddings,
+        )
+        return emb, stats

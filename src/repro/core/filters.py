@@ -2,7 +2,10 @@
 NLF and MND baselines it compares against (Algorithm 1, from CFL-match).
 
 All filters are expressed over the counts matrix ``K[v, l]`` (labels.py),
-vectorized over the full (V × U) candidate grid.  ``cni_match`` implements the
+vectorized over the full (V × U) candidate grid.  Every function accepts an
+optional *leading batch dimension* — data digests shaped (B, V), query
+digests (B, U) — and then returns a (B, V, U) grid; the batched multi-query
+engine (batch_engine.py) relies on this.  ``cni_match`` implements the
 *corrected* Algorithm 3 (see DESIGN.md §1: the paper's ``<`` is a typo):
 
     match(v,u) ⇔ ℓ(v)=ℓ(u) ∧ ( (deg_L(v) > deg_L(u) ∧ cni(v) ≥ cni(u))
@@ -20,10 +23,14 @@ from repro.core.cni import CniValue, limb_eq, limb_ge, limb_is_saturated
 
 
 class VertexDigest(NamedTuple):
-    """Everything cniMatch needs about one side's vertices."""
+    """Everything cniMatch needs about one side's vertices.
 
-    ord_label: jnp.ndarray  # (V,) int32 in [0, L]; 0 = not in 𝓛(Q)
-    deg: jnp.ndarray        # (V,) int32 = deg_{𝓛(Q)}
+    All fields share a common shape (..., V): unbatched (V,) or batched
+    (B, V) — the filters below broadcast over the trailing grid dims only.
+    """
+
+    ord_label: jnp.ndarray  # (..., V) int32 in [0, L]; 0 = not in 𝓛(Q)
+    deg: jnp.ndarray        # (..., V) int32 = deg_{𝓛(Q)}
     cni: CniValue           # exact saturating two-limb CNI
     cni_log: jnp.ndarray    # float32 log-space CNI (kernel fast path)
 
@@ -40,28 +47,27 @@ def make_digest(counts: jnp.ndarray, ord_label: jnp.ndarray, d_max: int,
 
 
 def label_match(data: VertexDigest, query: VertexDigest) -> jnp.ndarray:
-    """Lemma 1, (V, U) bool."""
-    return (data.ord_label[:, None] == query.ord_label[None, :]) & (
-        data.ord_label[:, None] > 0
-    )
+    """Lemma 1, (..., V, U) bool."""
+    dl = data.ord_label[..., :, None]
+    return (dl == query.ord_label[..., None, :]) & (dl > 0)
 
 
 def degree_match(data: VertexDigest, query: VertexDigest) -> jnp.ndarray:
-    """Lemma 2, (V, U) bool."""
-    return data.deg[:, None] >= query.deg[None, :]
+    """Lemma 2, (..., V, U) bool."""
+    return data.deg[..., :, None] >= query.deg[..., None, :]
 
 
 def cni_match(data: VertexDigest, query: VertexDigest) -> jnp.ndarray:
-    """Corrected Algorithm 3 on the exact limb path, (V, U) bool.
+    """Corrected Algorithm 3 on the exact limb path, (..., V, U) bool.
 
     When either side is saturated the CNI comparison degenerates to the
     label+degree filters (sound: saturation is monotone; see cni.py).
     """
     lab = label_match(data, query)
-    dv = data.deg[:, None]
-    du = query.deg[None, :]
-    vh, vl = data.cni.hi[:, None], data.cni.lo[:, None]
-    uh, ul = query.cni.hi[None, :], query.cni.lo[None, :]
+    dv = data.deg[..., :, None]
+    du = query.deg[..., None, :]
+    vh, vl = data.cni.hi[..., :, None], data.cni.lo[..., :, None]
+    uh, ul = query.cni.hi[..., None, :], query.cni.lo[..., None, :]
     ge = limb_ge(vh, vl, uh, ul)
     eq = limb_eq(vh, vl, uh, ul)
     sat = limb_is_saturated(vh, vl) | limb_is_saturated(uh, ul)
@@ -74,10 +80,10 @@ def cni_match_log(data: VertexDigest, query: VertexDigest,
                   eps: float = 1e-4) -> jnp.ndarray:
     """cniMatch on the float32 log-space path with ε-tolerant compares."""
     lab = label_match(data, query)
-    dv = data.deg[:, None]
-    du = query.deg[None, :]
-    cv = data.cni_log[:, None]
-    cu = query.cni_log[None, :]
+    dv = data.deg[..., :, None]
+    du = query.deg[..., None, :]
+    cv = data.cni_log[..., :, None]
+    cu = query.cni_log[..., None, :]
     tol = eps * jnp.maximum(1.0, jnp.abs(cu))
     ge = cv >= cu - tol
     eq = jnp.abs(cv - cu) <= tol
@@ -89,28 +95,35 @@ def cni_match_log(data: VertexDigest, query: VertexDigest,
 
 def nlf_match(counts_data: jnp.ndarray, counts_query: jnp.ndarray,
               data_ord: jnp.ndarray, query_ord: jnp.ndarray) -> jnp.ndarray:
-    """Neighborhood Label Frequency filter (Algorithm 1 lines 5–9), (V, U).
+    """Neighborhood Label Frequency filter (Algorithm 1 lines 5–9), (..., V, U).
 
     The O(|𝓛(Q)|)-per-pair baseline: v candidate for u iff v's neighborhood
     label counts dominate u's component-wise.
     """
-    lab = (data_ord[:, None] == query_ord[None, :]) & (data_ord[:, None] > 0)
-    dom = jnp.all(counts_data[:, None, :] >= counts_query[None, :, :], axis=-1)
+    do = data_ord[..., :, None]
+    lab = (do == query_ord[..., None, :]) & (do > 0)
+    dom = jnp.all(
+        counts_data[..., :, None, :] >= counts_query[..., None, :, :], axis=-1
+    )
     return lab & dom
 
 
 def mnd_values(counts: jnp.ndarray, deg: jnp.ndarray, src: jnp.ndarray,
                dst: jnp.ndarray, n_vertices: int,
                alive: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Maximum Neighbor Degree per vertex (CFL-match's O(1) pre-filter)."""
-    ddeg = deg[dst]
+    """Maximum Neighbor Degree per vertex (CFL-match's O(1) pre-filter).
+
+    ``deg``/``alive`` may carry leading batch dims: (..., V) in, (..., V) out.
+    """
+    ddeg = deg[..., dst]
     if alive is not None:
-        ddeg = jnp.where(alive[dst] & alive[src], ddeg, 0)
-    mnd = jnp.zeros((n_vertices,), dtype=jnp.int32)
-    return mnd.at[src].max(ddeg.astype(jnp.int32))
+        ddeg = jnp.where(alive[..., dst] & alive[..., src], ddeg, 0)
+    mnd = jnp.zeros(deg.shape[:-1] + (n_vertices,), dtype=jnp.int32)
+    return mnd.at[..., src].max(ddeg.astype(jnp.int32))
 
 
 def mnd_match(mnd_data: jnp.ndarray, mnd_query: jnp.ndarray,
               data_ord: jnp.ndarray, query_ord: jnp.ndarray) -> jnp.ndarray:
-    lab = (data_ord[:, None] == query_ord[None, :]) & (data_ord[:, None] > 0)
-    return lab & (mnd_data[:, None] >= mnd_query[None, :])
+    do = data_ord[..., :, None]
+    lab = (do == query_ord[..., None, :]) & (do > 0)
+    return lab & (mnd_data[..., :, None] >= mnd_query[..., None, :])

@@ -51,16 +51,23 @@ def prepare_query(query: Graph, d_max: int, max_p: int) -> QueryDigest:
     return QueryDigest(label_map, q_counts, q_digest, q_mnd)
 
 
-def _match_matrix(variant: str, counts: jnp.ndarray, ords: jnp.ndarray,
-                  q: QueryDigest, g: Graph, alive: jnp.ndarray,
-                  d_max: int, max_p: int) -> jnp.ndarray:
-    """(V, U) candidate matrix under the chosen filter family."""
+def match_matrix(variant: str, counts: jnp.ndarray, ords: jnp.ndarray,
+                 q: QueryDigest, g: Graph, alive: jnp.ndarray,
+                 d_max: int, max_p: int) -> jnp.ndarray:
+    """(..., V, U) candidate matrix under the chosen filter family.
+
+    Accepts an optional leading batch dim on every per-query array (counts
+    (B, V, L), ords/alive (B, V), query digest fields (B, U)); ``q`` only
+    needs ``counts`` / ``digest`` / ``mnd`` attributes, so the batched engine
+    passes its own stacked digest.
+    """
     if variant == "nlf":
         return flt.nlf_match(counts, q.counts, ords, q.digest.ord_label)
     if variant == "label_degree":
         deg = counts.sum(-1).astype(jnp.int32)
-        lab = (ords[:, None] == q.digest.ord_label[None, :]) & (ords[:, None] > 0)
-        return lab & (deg[:, None] >= q.digest.deg[None, :])
+        do = ords[..., :, None]
+        lab = (do == q.digest.ord_label[..., None, :]) & (do > 0)
+        return lab & (deg[..., :, None] >= q.digest.deg[..., None, :])
     if variant == "mnd_nlf":  # CFL-match's Algorithm 1: MND gate then NLF
         deg = counts.sum(-1).astype(jnp.int32)
         mnd_d = flt.mnd_values(counts, deg, g.src, g.dst,
@@ -75,6 +82,8 @@ def _match_matrix(variant: str, counts: jnp.ndarray, ords: jnp.ndarray,
     raise ValueError(f"unknown filter variant: {variant}")
 
 
+
+
 @functools.partial(jax.jit, static_argnames=("d_max", "max_p", "variant",
                                              "max_iters"))
 def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray, *, d_max: int,
@@ -84,8 +93,8 @@ def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray, *, d_max: int,
     def round_fn(state):
         alive, _, it = state
         counts = counts_matrix(g, q.label_map, alive)
-        match = _match_matrix(variant, counts, ords, q, g, alive, d_max, max_p)
-        cand = jnp.any(match, axis=1)
+        match = match_matrix(variant, counts, ords, q, g, alive, d_max, max_p)
+        cand = jnp.any(match, axis=-1)
         new_alive = alive & cand
         changed = jnp.any(new_alive != alive)
         return new_alive, changed, it + 1
@@ -99,7 +108,7 @@ def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray, *, d_max: int,
     alive, _, iters = jax.lax.while_loop(cond_fn, round_fn, state)
     # final candidate sets over the fixed-point graph (Alg. 2 lines 20-25)
     counts = counts_matrix(g, q.label_map, alive)
-    match = _match_matrix(variant, counts, ords, q, g, alive, d_max, max_p)
+    match = match_matrix(variant, counts, ords, q, g, alive, d_max, max_p)
     candidates = match & alive[:, None]
     return IlgfResult(alive=alive, candidates=candidates, iterations=iters)
 
@@ -136,7 +145,7 @@ def one_shot_filter(data: Graph, query: Graph, *, variant: str = "cni",
     q = prepare_query(query, d_max, max_p)
     ords = ord_of(q.label_map, data.vlabels)
     counts = counts_matrix(data, q.label_map, ords > 0)
-    match = _match_matrix(variant, counts, ords, q, data, ords > 0, d_max, max_p)
+    match = match_matrix(variant, counts, ords, q, data, ords > 0, d_max, max_p)
     cand = jnp.any(match, axis=1) & (ords > 0)
     return IlgfResult(alive=cand, candidates=match & cand[:, None],
                       iterations=jnp.asarray(1, jnp.int32))

@@ -52,14 +52,43 @@ def counts_matrix(
     ``alive`` is given, only alive neighbors) are counted — matching the
     paper's ``deg_{𝓛(Q)}`` convention (Fig. 5 dotted vertices).
     """
-    n = g.n_vertices
-    L = label_map.n_labels
     ord_v = ord_of(label_map, g.vlabels)  # (V,)
-    ord_dst = ord_v[g.dst]
+    return counts_matrix_from_ords(g, ord_v, label_map.n_labels, alive)
+
+
+def counts_matrix_from_ords(
+    g: Graph,
+    ords: jnp.ndarray,
+    n_labels: int,
+    alive: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """K[..., v, l] from precomputed ord values.
+
+    ``ords`` (and ``alive``) may carry a leading batch of queries over the
+    one shared data graph: (..., V) in → (..., V, L) out.  The scatter-add
+    runs once over B·E edge records with per-query flat offsets, which is
+    what makes the batched ILGF round a single fused device op.
+    """
+    n = g.n_vertices
+    L = n_labels
+    batch_shape = ords.shape[:-1]
+    b = 1
+    for s in batch_shape:
+        b *= int(s)
+    ords2 = ords.reshape((b, n))
+    ord_dst = ords2[:, g.dst]  # (b, E)
     valid = ord_dst > 0
     if alive is not None:
-        valid = valid & alive[g.dst] & alive[g.src]
-    flat_idx = g.src.astype(jnp.int32) * L + jnp.maximum(ord_dst - 1, 0)
-    k = jnp.zeros((n * L,), dtype=jnp.int32)
-    k = k.at[flat_idx].add(valid.astype(jnp.int32))
-    return k.reshape(n, L)
+        alive2 = alive.reshape((b, n))
+        valid = valid & alive2[:, g.dst] & alive2[:, g.src]
+    # scatter with a separate batch index so no flat index ever exceeds
+    # n*L — the same int32 range the unbatched path needs — instead of
+    # b*n*L (which overflows int32 for large graphs at high batch sizes)
+    flat_idx = g.src.astype(jnp.int32)[None, :] * L + jnp.maximum(
+        ord_dst - 1, 0
+    )
+    k = jnp.zeros((b, n * L), dtype=jnp.int32)
+    k = k.at[jnp.arange(b, dtype=jnp.int32)[:, None], flat_idx].add(
+        valid.astype(jnp.int32)
+    )
+    return k.reshape(batch_shape + (n, L))

@@ -154,6 +154,25 @@ def _expand_step(
     return valid
 
 
+def _expand_step_np(chunk, cand_ids, elab_np, q_pos, q_lab, q_val):
+    """Numpy twin of _expand_step for small (R·C·J) frontiers.
+
+    Tiny join levels are dominated by host→device transfer overhead, not
+    compute — evaluating them directly in numpy keeps the device for the
+    large tables where the jitted kernel actually wins.
+    """
+    mapped = chunk[:, q_pos]                                   # (R, J)
+    got = elab_np[mapped[:, :, None], cand_ids[None, None, :]]  # (R, J, C)
+    lab_ok = (got == q_lab[None, :, None]) | ~q_val[None, :, None]
+    adj_ok = lab_ok.all(axis=1)                                # (R, C)
+    inj_ok = (chunk[:, :, None] != cand_ids[None, None, :]).all(axis=1)
+    return adj_ok & inj_ok
+
+
+# below this many (R·C·J) cells a join level runs on host numpy
+_HOST_JOIN_CELLS = 1 << 18
+
+
 def bfs_join_search(
     data: Graph,
     query: Graph,
@@ -165,13 +184,15 @@ def bfs_join_search(
     """Enumerate all embeddings with the vectorized join plan.
 
     Host-side orchestration keeps the result set (it is host data by
-    definition); every O(R·C·J) validity evaluation is jitted.
+    definition); every *large* O(R·C·J) validity evaluation is jitted, and
+    small levels run directly in numpy (transfer-overhead-bound regime).
     """
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
     n_d = data.vlabels.shape[0]
     q_adj = _host_adjacency(query)
-    elab_matrix = jnp.asarray(_dense_edge_labels(data, n_d))
+    elab_np = _dense_edge_labels(data, n_d)
+    elab_matrix = None  # device copy made lazily on first jitted level
 
     sizes = cand.sum(axis=0)
     order: list[int] = [int(np.argmin(sizes))]
@@ -210,10 +231,29 @@ def bfs_join_search(
 
         for lo in range(0, table.shape[0], chunk_rows):
             chunk = table[lo : lo + chunk_rows]
-            r_pad = chunk.shape[0]
+            r = chunk.shape[0]
+            if r * cand_ids.size * j <= _HOST_JOIN_CELLS:
+                valid_np = _expand_step_np(
+                    chunk, cand_ids, elab_np, q_pos, q_lab, q_val
+                )
+                r_idx, c_idx = np.nonzero(valid_np)
+                if r_idx.size:
+                    new_rows.append(np.concatenate(
+                        [chunk[r_idx], cand_ids[c_idx][:, None]], axis=1
+                    ))
+                continue
+            # pad rows to the next power of two so _expand_step revisits
+            # O(log chunk_rows) traces instead of one per exact row count
+            r_pad = int(2 ** np.ceil(np.log2(max(r, 1))))
+            if r_pad > r:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((r_pad - r, chunk.shape[1]), chunk.dtype)]
+                )
+            if elab_matrix is None:
+                elab_matrix = jnp.asarray(elab_np)
             valid = _expand_step(
                 jnp.asarray(chunk),
-                jnp.ones(r_pad, dtype=bool),
+                jnp.arange(r_pad) < r,
                 jnp.asarray(cand_pad),
                 jnp.asarray(cand_ok),
                 elab_matrix,

@@ -134,11 +134,29 @@ def to_padded(g: Graph, d_max: int | None = None) -> PaddedGraph:
     )
 
 
+def to_host(g: Graph) -> Graph:
+    """Numpy-backed copy of a graph (one device→host transfer per field).
+
+    Host-side pipeline stages (compaction, adjacency dicts, dense edge
+    tables) repeatedly call ``np.asarray`` on graph fields; engines that
+    query the same graph many times should convert once and reuse.
+    """
+    return Graph(
+        vlabels=np.asarray(g.vlabels),
+        src=np.asarray(g.src),
+        dst=np.asarray(g.dst),
+        elabels=np.asarray(g.elabels),
+    )
+
+
 def induced_subgraph(g: Graph, keep_mask) -> tuple[Graph, np.ndarray]:
     """Induced subgraph on ``keep_mask`` vertices.
 
     Returns (subgraph, old_ids) where ``old_ids[new_id] = old vertex id``.
-    Host-side compaction (used after filtering, where the graph is small).
+    Host-side compaction (used after filtering, where the graph is small);
+    the result is numpy-backed — its consumers (the host search engines,
+    dense adjacency builders) are host-side, and jnp ops accept numpy
+    arrays, so nothing is transferred until actually needed on device.
     """
     keep = np.asarray(keep_mask, dtype=bool)
     old_ids = np.nonzero(keep)[0]
@@ -153,10 +171,10 @@ def induced_subgraph(g: Graph, keep_mask) -> tuple[Graph, np.ndarray]:
     new_elab = elab[emask]
     vlab = np.asarray(g.vlabels)[old_ids]
     sub = Graph(
-        vlabels=jnp.asarray(vlab.astype(np.int32)),
-        src=jnp.asarray(new_src.astype(np.int32)),
-        dst=jnp.asarray(new_dst.astype(np.int32)),
-        elabels=jnp.asarray(new_elab.astype(np.int32)),
+        vlabels=vlab.astype(np.int32),
+        src=new_src.astype(np.int32),
+        dst=new_dst.astype(np.int32),
+        elabels=new_elab.astype(np.int32),
     )
     return sub, old_ids
 

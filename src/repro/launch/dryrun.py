@@ -40,8 +40,12 @@ from repro.models.sharding import ShardingPolicy, resolve_tree, use_policy
 from repro.optim.adamw import adamw_init, adamw_state_specs, adamw_update
 from repro.utils.hlo_parse import collective_bytes, op_histogram
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                           "results", "dryrun")
+# Overridable so tests / scratch runs don't pollute the repo's result store.
+RESULTS_DIR = os.environ.get(
+    "REPRO_RESULTS_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "results", "dryrun"),
+)
 
 PARAM_DTYPE = jnp.bfloat16
 
@@ -214,6 +218,8 @@ def _lower_for(cfg: ModelConfig, shape: ShapeSpec, pol: ShardingPolicy,
 
 def _compiled_costs(compiled) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     out = {
         k: float(v)
         for k, v in cost.items()

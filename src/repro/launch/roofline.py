@@ -25,8 +25,10 @@ PEAK_FLOPS = 197e12     # bf16 / chip
 HBM_BW = 819e9          # B/s / chip
 ICI_BW = 50e9           # B/s / link
 
-RESULTS_DIR = os.path.join(
-    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+RESULTS_DIR = os.environ.get(
+    "REPRO_RESULTS_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "results", "dryrun"),
 )
 
 

@@ -1,3 +1,9 @@
 from repro.serve.engine import ServeEngine, ServeConfig
+from repro.serve.graph_service import GraphQueryService, GraphServiceConfig
 
-__all__ = ["ServeEngine", "ServeConfig"]
+__all__ = [
+    "ServeEngine",
+    "ServeConfig",
+    "GraphQueryService",
+    "GraphServiceConfig",
+]

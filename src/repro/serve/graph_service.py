@@ -1,0 +1,218 @@
+"""Request-queue front-end for subgraph queries: slot-scheduled batched ILGF.
+
+Modeled on the continuous-batching slot scheduler in serve/engine.py: a fixed
+pool of ``max_slots`` query slots with *static* padded shapes
+``(S, V)`` / ``(S, U_cap, L_cap)``, so the whole service runs on exactly one
+jit trace of ``batched_ilgf_round``:
+
+* ``submit`` enqueues a query; ``_admit`` moves queued queries into free
+  slots (building their padded digest rows and splicing them into the slot
+  arrays with ``.at[slot].set``).
+* ``tick()`` = **one batched ILGF peeling round** across all slots.  A slot
+  whose alive mask did not change has reached its fixed point — its
+  candidate columns are final, so the (host-side, per-query) search runs,
+  the result is emitted, and the slot frees immediately for the next queued
+  query (continuous batching: queries at different peeling depths coexist
+  in one round dispatch).
+* Inert slots hold all-zero ords (empty alive set), contributing no work.
+
+This is the serving analogue of the ROADMAP north star: many concurrent
+user queries amortize one fused device dispatch per round, with per-query
+latency bounded by its own peeling depth rather than the batch's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filters as flt
+from repro.core.batch_engine import (
+    BatchedQueries,
+    batched_ilgf_round,
+    prepare_padded_query,
+)
+from repro.core.cni import CniValue, default_max_p
+from repro.core.engine import QueryStats, search_filtered
+from repro.graphs.csr import Graph, max_degree, to_host
+
+
+from repro.configs.cni_engine import CONFIG as _ENGINE_CONFIG
+
+
+@dataclasses.dataclass
+class GraphServiceConfig:
+    """Slot shapes default to the repo-wide engine preset (configs/
+    cni_engine.py) so service deployments and the batch engine agree."""
+
+    max_slots: int = _ENGINE_CONFIG.service_slots
+    max_query_vertices: int = _ENGINE_CONFIG.service_max_query_vertices
+    max_query_labels: int = _ENGINE_CONFIG.service_max_query_labels
+    filter_variant: str = _ENGINE_CONFIG.filter_variant
+    khop: int = _ENGINE_CONFIG.khop
+    searcher: str = _ENGINE_CONFIG.searcher
+    search_vertex_cap: int = 8192
+    max_rounds_per_query: int = 1_000  # safety valve: finalize early (sound)
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    query: Graph
+    max_embeddings: Optional[int]
+    submitted_at: float
+    rounds: int = 0
+    slot: int = -1
+
+
+class GraphQueryService:
+    """Continuous-batching subgraph-query service over one data graph."""
+
+    def __init__(self, data: Graph, cfg: GraphServiceConfig | None = None):
+        self.data = data
+        self._host_data = to_host(data)  # search side re-reads fields often
+        self.cfg = cfg or GraphServiceConfig()
+        self.d_max = max(1, max_degree(data))
+        self.max_p = default_max_p(self.d_max, self.cfg.max_query_labels)
+        s = self.cfg.max_slots
+        u = self.cfg.max_query_vertices
+        l = self.cfg.max_query_labels
+        v = data.n_vertices
+        self._ords = jnp.zeros((s, v), jnp.int32)
+        self._counts = jnp.zeros((s, u, l), jnp.int32)
+        self._digest = flt.VertexDigest(
+            ord_label=jnp.zeros((s, u), jnp.int32),
+            deg=jnp.zeros((s, u), jnp.int32),
+            cni=CniValue(
+                hi=jnp.zeros((s, u), jnp.uint32),
+                lo=jnp.zeros((s, u), jnp.uint32),
+            ),
+            cni_log=jnp.full((s, u), -jnp.inf, jnp.float32),
+        )
+        self._mnd = jnp.zeros((s, u), jnp.int32)
+        self._alive = jnp.zeros((s, v), bool)
+        self.active: list[Optional[_Request]] = [None] * s
+        self.queue: list[_Request] = []
+        self._rid = 0
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, query: Graph,
+               max_embeddings: int | None = None) -> int:
+        """Enqueue a query; returns its request id.
+
+        Rejects queries that exceed the service's static slot shapes — size
+        the caps from the workload, or route oversize queries to a
+        ``BatchQueryEngine`` with per-bucket shapes.
+        """
+        query = to_host(query)
+        n_labels = int(np.unique(query.vlabels).size)
+        if query.n_vertices > self.cfg.max_query_vertices:
+            raise ValueError(
+                f"query has {query.n_vertices} vertices > service cap "
+                f"{self.cfg.max_query_vertices}"
+            )
+        if n_labels > self.cfg.max_query_labels:
+            raise ValueError(
+                f"query has {n_labels} labels > service cap "
+                f"{self.cfg.max_query_labels}"
+            )
+        self._rid += 1
+        self.queue.append(
+            _Request(self._rid, query, max_embeddings, time.perf_counter())
+        )
+        return self._rid
+
+    def tick(self) -> list[tuple[int, np.ndarray, QueryStats]]:
+        """One scheduler step = one batched peeling round.
+
+        Returns finished (rid, embeddings, stats) triples (possibly empty).
+        """
+        self._admit()
+        live = [r for r in self.active if r is not None]
+        if not live:
+            return []
+        qb = BatchedQueries(
+            ords=self._ords, counts=self._counts,
+            digest=self._digest, mnd=self._mnd,
+        )
+        new_alive, cand, changed = batched_ilgf_round(
+            self.data, qb, self._alive,
+            n_labels=self.cfg.max_query_labels,
+            d_max=self.d_max, max_p=self.max_p,
+            variant=self.cfg.filter_variant,
+        )
+        converged = ~np.asarray(changed)
+        self._alive = new_alive
+        finished = []
+        for req in live:
+            req.rounds += 1
+            if converged[req.slot] or req.rounds >= self.cfg.max_rounds_per_query:
+                finished.append(self._finalize(req, new_alive, cand))
+                self._free(req.slot)
+        return finished
+
+    def run_to_completion(self, max_ticks: int = 100_000):
+        """Drain queue + slots; returns all finished triples."""
+        done = []
+        for _ in range(max_ticks):
+            done.extend(self.tick())
+            if not self.queue and all(a is None for a in self.active):
+                break
+        return done
+
+    @property
+    def n_active(self) -> int:
+        return sum(a is not None for a in self.active)
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self):
+        for slot in range(self.cfg.max_slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                req.slot = slot
+                self.active[slot] = req
+                ords, counts, digest, mnd = prepare_padded_query(
+                    req.query, self._host_data.vlabels, self.d_max, self.max_p,
+                    self.cfg.max_query_vertices, self.cfg.max_query_labels,
+                )
+                self._ords = self._ords.at[slot].set(ords)
+                self._counts = self._counts.at[slot].set(counts)
+                self._digest = jax.tree_util.tree_map(
+                    lambda acc, row: acc.at[slot].set(row),
+                    self._digest, digest,
+                )
+                self._mnd = self._mnd.at[slot].set(mnd)
+                self._alive = self._alive.at[slot].set(ords > 0)
+
+    def _finalize(self, req: _Request, alive, cand):
+        u_q = req.query.n_vertices
+        alive_np = np.asarray(alive[req.slot])
+        cand_np = np.asarray(cand[req.slot])[:, :u_q]
+        stats = QueryStats(
+            vertices_before=self.data.n_vertices,
+            ilgf_iterations=req.rounds,
+        )
+        stats.extras["service"] = {
+            "slot": req.slot,
+            "queue_seconds": time.perf_counter() - req.submitted_at,
+        }
+        emb = search_filtered(
+            self._host_data, req.query, alive_np, cand_np, stats,
+            khop=self.cfg.khop,
+            searcher=self.cfg.searcher,
+            search_vertex_cap=self.cfg.search_vertex_cap,
+            max_embeddings=req.max_embeddings,
+        )
+        return req.rid, emb, stats
+
+    def _free(self, slot: int):
+        self.active[slot] = None
+        self._ords = self._ords.at[slot].set(0)
+        self._alive = self._alive.at[slot].set(False)

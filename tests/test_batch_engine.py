@@ -1,0 +1,184 @@
+"""Batched multi-query engine == sequential engine, per query.
+
+The contract (batch_engine.py): ``BatchQueryEngine.query_batch`` over a
+heterogeneous batch returns, for every query, exactly the embedding set the
+sequential ``SubgraphQueryEngine.query`` produces — including degenerate
+members of the same batch (all-pruned queries, filter-surviving queries with
+zero embeddings).  Also covers the slot-scheduled serving front-end.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import BatchQueryEngine, SubgraphQueryEngine
+from repro.core.batch_engine import bucket_key, ceil_pow2
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.graphs.csr import build_graph
+
+
+def _emb_set(emb: np.ndarray):
+    return {tuple(r) for r in np.asarray(emb).tolist()}
+
+
+def _assert_batch_matches_sequential(data, queries, *, variant="cni",
+                                     max_batch=32):
+    seq = SubgraphQueryEngine(data, filter_variant=variant)
+    bat = BatchQueryEngine(data, filter_variant=variant,
+                           max_batch=max_batch)
+    results = bat.query_batch(queries)
+    assert len(results) == len(queries)
+    for i, q in enumerate(queries):
+        e_seq, _ = seq.query(q)
+        e_bat, s_bat = results[i]
+        assert e_bat.shape[1] == q.n_vertices
+        assert _emb_set(e_seq) == _emb_set(e_bat), f"query {i} diverged"
+        assert s_bat.n_embeddings == e_bat.shape[0]
+
+
+def _all_pruned_query():
+    # labels 98/99 never occur in the random data graphs below (labels < 32)
+    return build_graph(3, [99, 98, 99], [(0, 1), (1, 2)])
+
+
+def _zero_embedding_query():
+    # survives ILGF (filters ignore edge labels) but has no embedding in
+    # _zero_embedding_data: the el=1 edge does not exist there
+    return build_graph(3, [0, 1, 0], [(0, 1), (1, 2)], elabels=[0, 1])
+
+
+def _zero_embedding_data():
+    return build_graph(3, [0, 1, 0], [(0, 1), (1, 2)], elabels=[0, 0])
+
+
+def test_batch_of_32_mixed_queries_matches_sequential():
+    g = random_labeled_graph(250, 900, 6, n_edge_labels=2, seed=3)
+    rng = np.random.default_rng(7)
+    queries = [
+        random_walk_query(g, int(rng.integers(4, 9)),
+                          sparse=bool(i % 2), seed=400 + i)
+        for i in range(30)
+    ]
+    queries.insert(5, _all_pruned_query())
+    queries.insert(20, _all_pruned_query())
+    assert len(queries) == 32
+    _assert_batch_matches_sequential(g, queries)
+
+
+def test_all_pruned_and_zero_embedding_in_same_batch():
+    g = _zero_embedding_data()
+    queries = [
+        _zero_embedding_query(),         # survives filter, 0 embeddings
+        _all_pruned_query(),             # filter empties the graph
+        build_graph(2, [0, 1], [(0, 1)], elabels=[0]),  # 2 embeddings
+    ]
+    bat = BatchQueryEngine(g)
+    results = bat.query_batch(queries)
+    (e0, s0), (e1, s1), (e2, s2) = results
+    assert e0.shape == (0, 3) and s0.vertices_after == 3
+    assert e1.shape == (0, 3) and s1.vertices_after == 0
+    assert _emb_set(e2) == {(0, 1), (2, 1)}
+    _assert_batch_matches_sequential(g, queries)
+
+
+@pytest.mark.parametrize("variant", ["cni", "cni_log", "nlf", "label_degree",
+                                     "mnd_nlf"])
+def test_batch_matches_sequential_all_variants(variant):
+    g = random_labeled_graph(150, 500, 4, n_edge_labels=2, seed=11)
+    queries = [
+        random_walk_query(g, 4 + (i % 3), sparse=i % 2 == 0, seed=600 + i)
+        for i in range(6)
+    ]
+    _assert_batch_matches_sequential(g, queries, variant=variant)
+
+
+def test_small_max_batch_chunks_and_buckets():
+    """Chunking (max_batch < n_queries) must not change any result."""
+    g = random_labeled_graph(200, 700, 5, n_edge_labels=2, seed=5)
+    queries = [
+        random_walk_query(g, 3 + (i % 6), sparse=bool(i % 2), seed=70 + i)
+        for i in range(12)
+    ]
+    _assert_batch_matches_sequential(g, queries, max_batch=4)
+    # heterogeneous sizes must land in pow2-padded buckets
+    eng = BatchQueryEngine(g)
+    keys = {bucket_key(q, eng.d_max) for q in queries}
+    assert all(k[2] == ceil_pow2(k[2]) for k in keys)
+    assert len(keys) > 1
+
+
+def test_batch_stats_report_bucket_and_rounds():
+    g = random_labeled_graph(120, 400, 4, seed=9)
+    queries = [random_walk_query(g, 5, sparse=True, seed=90 + i)
+               for i in range(4)]
+    bat = BatchQueryEngine(g)
+    for emb, stats in bat.query_batch(queries):
+        assert stats.ilgf_iterations >= 1
+        assert stats.extras["batch"]["batch_size"] == 4
+        assert stats.vertices_before == g.n_vertices
+
+
+def test_lockstep_fixed_point_matches_per_query_ilgf():
+    """The one-dispatch lockstep API reaches the same per-query fixed point
+    as the sequential ILGF (extra rounds past a query's own convergence are
+    idempotent)."""
+    from repro.core import ilgf
+    from repro.core.batch_engine import (
+        batched_ilgf_fixed_point, stack_queries,
+    )
+    from repro.core.cni import default_max_p
+    from repro.graphs.csr import max_degree
+
+    g = random_labeled_graph(150, 500, 4, n_edge_labels=2, seed=31)
+    queries = [random_walk_query(g, 4 + i, sparse=True, seed=900 + i)
+               for i in range(3)]
+    d_max = max(1, max_degree(g))
+    u_pad, l_pad = 8, 4
+    max_p = default_max_p(d_max, l_pad)
+    qb = stack_queries(queries, g, d_max, max_p, u_pad, l_pad, 4)
+    alive, cand, rounds = batched_ilgf_fixed_point(
+        g, qb, n_labels=l_pad, d_max=d_max, max_p=max_p,
+        variant="cni", max_iters=1000,
+    )
+    alive = np.asarray(alive)
+    for b, q in enumerate(queries):
+        ref = np.asarray(ilgf(g, q, d_max=d_max).alive)
+        # the batched run uses a (possibly) larger shared max_p — its clip is
+        # weaker, so its fixed point can only be a superset of the reference
+        assert not np.any(ref & ~alive[b])
+    assert not alive[3].any()  # spare slot stays inert
+
+
+def test_graph_service_matches_sequential():
+    from repro.serve import GraphQueryService, GraphServiceConfig
+
+    g = random_labeled_graph(200, 700, 5, n_edge_labels=2, seed=13)
+    rng = np.random.default_rng(17)
+    queries = [
+        random_walk_query(g, int(rng.integers(4, 8)),
+                          sparse=bool(i % 2), seed=800 + i)
+        for i in range(10)
+    ]
+    svc = GraphQueryService(
+        g, GraphServiceConfig(max_slots=3, max_query_vertices=8,
+                              max_query_labels=8),
+    )
+    rids = [svc.submit(q) for q in queries]
+    done = {rid: emb for rid, emb, _ in svc.run_to_completion()}
+    assert sorted(done) == sorted(rids)
+    seq = SubgraphQueryEngine(g)
+    for rid, q in zip(rids, queries):
+        e_seq, _ = seq.query(q)
+        assert _emb_set(e_seq) == _emb_set(done[rid])
+
+
+def test_graph_service_rejects_oversize():
+    from repro.serve import GraphQueryService, GraphServiceConfig
+
+    g = random_labeled_graph(100, 300, 4, seed=1)
+    svc = GraphQueryService(
+        g, GraphServiceConfig(max_slots=2, max_query_vertices=4,
+                              max_query_labels=4),
+    )
+    big = random_walk_query(g, 8, sparse=True, seed=2)
+    with pytest.raises(ValueError):
+        svc.submit(big)

@@ -115,6 +115,92 @@ def test_sorted_stream_prunes_early():
     )
 
 
+def _graph_chunks(g, chunk_edges, *, order=None):
+    """Turn a graph's directed-edge records into stream chunks."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    elab = np.asarray(g.elabels)
+    if order is not None:
+        src, dst, elab = src[order], dst[order], elab[order]
+    chunks = []
+    for lo in range(0, src.size, chunk_edges):
+        s = src[lo : lo + chunk_edges].astype(np.int32)
+        chunks.append((
+            s,
+            dst[lo : lo + chunk_edges].astype(np.int32),
+            elab[lo : lo + chunk_edges].astype(np.int32),
+            np.ones(s.size, dtype=bool),
+        ))
+    return chunks
+
+
+def test_stream_empty_chunks_equivalent():
+    """Zero-length and all-invalid chunks in the stream must be no-ops."""
+    g = random_labeled_graph(150, 500, 4, n_edge_labels=2, seed=20)
+    q = random_walk_query(g, 4, sparse=True, seed=21)
+    chunks = _graph_chunks(g, 64)
+    empty = (
+        np.zeros(0, np.int32), np.zeros(0, np.int32),
+        np.zeros(0, np.int32), np.zeros(0, bool),
+    )
+    invalid = (
+        np.zeros(16, np.int32), np.zeros(16, np.int32),
+        np.zeros(16, np.int32), np.zeros(16, bool),
+    )
+    spiked = [empty, chunks[0], invalid] + chunks[1:] + [empty]
+    sr = stream_filter_file(
+        spiked, np.asarray(g.vlabels), q,
+        d_max=max_degree(g), sorted_stream=False,
+    )
+    mem = ilgf(g, q)
+    assert (np.asarray(sr.ilgf_result.alive) == np.asarray(mem.alive)).all()
+    assert sr.stats.total_edges_seen == g.n_directed_edges
+
+
+def test_stream_single_edge_chunks_equivalent():
+    """chunk_edges=1 (one record per chunk) — the finest access pattern."""
+    g = random_labeled_graph(60, 180, 3, n_edge_labels=2, seed=22)
+    q = random_walk_query(g, 4, sparse=True, seed=23)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "g.bin")
+        write_edge_file(path, g, sorted_by_src=True)
+        sr = stream_filter_file(
+            path, np.asarray(g.vlabels), q, chunk_edges=1,
+            d_max=max_degree(g), sorted_stream=True,
+        )
+    mem = ilgf(g, q)
+    assert (np.asarray(sr.ilgf_result.alive) == np.asarray(mem.alive)).all()
+    assert sr.stats.n_chunks == g.n_directed_edges
+
+
+def test_stream_unsorted_iterator_equivalent():
+    """Arbitrary edge-arrival order (shuffled chunks, sorted_stream=False)
+    must reach the same fixed point — Algorithm 6's order-insensitivity."""
+    g = random_labeled_graph(200, 700, 5, n_edge_labels=2, seed=24)
+    q = random_walk_query(g, 5, sparse=True, seed=25)
+    order = np.random.default_rng(3).permutation(g.n_directed_edges)
+    chunks = _graph_chunks(g, 100, order=order)
+    sr = stream_filter_file(
+        chunks, np.asarray(g.vlabels), q,
+        d_max=max_degree(g), sorted_stream=False,
+    )
+    mem = ilgf(g, q)
+    assert (np.asarray(sr.ilgf_result.alive) == np.asarray(mem.alive)).all()
+    assert sr.stats.total_edges_seen == g.n_directed_edges
+
+
+def test_scan_filter_chunk_boundaries():
+    """chunk_edges=1 and chunk_edges > |E| (all-padding tail) agree with the
+    one-shot filter on the whole graph."""
+    g = random_labeled_graph(80, 260, 3, seed=26)
+    q = random_walk_query(g, 4, sparse=True, seed=27)
+    osf = np.asarray(one_shot_filter(g, q).alive)
+    fine = scan_filter(g, q, chunk_edges=1)
+    coarse = scan_filter(g, q, chunk_edges=4 * g.n_directed_edges)
+    assert (fine == osf).all()
+    assert (coarse == osf).all()
+
+
 def test_khop_refinement_sound():
     g = random_labeled_graph(250, 900, 5, seed=14)
     q = random_walk_query(g, 5, sparse=False, seed=15)

@@ -138,6 +138,7 @@ def test_live_dryrun_one_cell(tmp_path):
     devices in a subprocess (proves the launcher works from a clean env)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
+    env["REPRO_RESULTS_DIR"] = str(tmp_path)  # don't pollute results/dryrun
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "granite-3-2b",
          "--shape", "decode_32k", "--mesh", "single", "--force"],
