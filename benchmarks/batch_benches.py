@@ -131,8 +131,46 @@ def bench_service_ticks(rows: list, *, smoke: bool = False):
     return rows
 
 
+def bench_store_snapshot_parity(rows: list, *, smoke: bool = False):
+    """Acceptance canary: serving from a ``GraphStore`` snapshot (maintained
+    digests seed the fixed point) returns exactly the fresh-``Graph``
+    results, at comparable throughput."""
+    from repro.core.incremental import IncrementalIndex
+    from repro.graphs import GraphStore, random_update_batches
+
+    g = random_labeled_graph(192 if smoke else 256, 512 if smoke else 640, 8,
+                             n_edge_labels=2, seed=7)
+    store = GraphStore.from_graph(g)
+    store.attach_index(IncrementalIndex())
+    for b in random_update_batches(store, 2, 16, delete_frac=0.3, seed=8):
+        store.apply(b)
+    snap = store.snapshot()
+    queries = _mixed_queries(snap.graph, 4 if smoke else 16, lo=6, hi=10,
+                             sparse=True, seed=300)
+    fresh = BatchQueryEngine(snap.graph, max_batch=4)
+    stored = BatchQueryEngine(store, max_batch=4)
+    cap = 64
+
+    t0 = time.perf_counter()
+    res_fresh = fresh.query_batch(queries, max_embeddings=cap)
+    t1 = time.perf_counter()
+    res_store = stored.query_batch(queries, max_embeddings=cap)
+    t2 = time.perf_counter()
+    same = all(
+        {tuple(r) for r in np.asarray(ef).tolist()}
+        == {tuple(r) for r in np.asarray(es).tolist()}
+        for (ef, _), (es, _) in zip(res_fresh, res_store)
+    )
+    rows.append((
+        "batch/store_parity", (t2 - t1) * 1e6,
+        f"{'ok' if same else 'MISMATCH'};fresh_us={(t1 - t0) * 1e6:.0f}",
+    ))
+    return rows
+
+
 def run_all(*, smoke: bool = False) -> list:
     rows: list = []
     bench_batched_throughput(rows, smoke=smoke)
     bench_service_ticks(rows, smoke=smoke)
+    bench_store_snapshot_parity(rows, smoke=smoke)
     return rows

@@ -5,10 +5,12 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     graph    — the paper's experiments (Figs 7-11 analogues, §4)
     batch    — batched multi-query + serving throughput (batch_engine)
+    update   — dynamic-graph store: incremental index maintenance throughput
     kernels  — kernel-path microbenchmarks
     roofline — derived terms from the dry-run artifacts (if present)
 
-``--smoke`` runs one tiny batched bench (a jit-regression canary for CI).
+``--smoke`` shrinks the selected sections to tiny regression canaries for
+CI (``--smoke`` alone = batch + update canaries on every push).
 """
 
 from __future__ import annotations
@@ -25,21 +27,31 @@ def _emit(rows):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "graph", "batch", "kernels", "roofline"])
+                    choices=["all", "graph", "batch", "update", "kernels",
+                             "roofline"])
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny batched bench only (CI jit-regression canary)")
+                    help="tiny canary benches only (CI jit-regression check)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     if args.smoke:
-        from benchmarks.batch_benches import run_all as batch_all
+        if args.section in ("all", "batch"):
+            from benchmarks.batch_benches import run_all as batch_all
 
-        _emit(batch_all(smoke=True))
+            _emit(batch_all(smoke=True))
+        if args.section in ("all", "update"):
+            from benchmarks.update_benches import run_all as update_all
+
+            _emit(update_all(smoke=True))
         return
     if args.section in ("all", "batch"):
         from benchmarks.batch_benches import run_all as batch_all
 
         _emit(batch_all())
+    if args.section in ("all", "update"):
+        from benchmarks.update_benches import run_all as update_all
+
+        _emit(update_all())
     if args.section in ("all", "graph"):
         from benchmarks.graph_benches import run_all as graph_all
 

@@ -11,10 +11,16 @@ from repro.core.cni import (
     CniValue,
     cni_exact_py,
     cni_from_counts,
+    cni_from_counts_np,
     cni_log_from_counts,
     default_max_p,
 )
 from repro.core.engine import QueryStats, SubgraphQueryEngine, search_filtered
+from repro.core.incremental import (
+    IncrementalIndex,
+    IndexSnapshot,
+    store_prefilter,
+)
 from repro.core.filters import (
     VertexDigest,
     cni_match,

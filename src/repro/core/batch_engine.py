@@ -45,12 +45,7 @@ import numpy as np
 
 from repro.configs.cni_engine import CONFIG as ENGINE_CONFIG
 from repro.core import filters as flt
-from repro.core.cni import (
-    SAT64,
-    _log_hbar_np,
-    _pascal_table_np,
-    default_max_p,
-)
+from repro.core.cni import cni_from_counts_np, default_max_p
 from repro.core.engine import QueryStats, search_filtered
 from repro.core.ilgf import match_matrix
 from repro.core.labels import counts_matrix_from_ords
@@ -127,50 +122,7 @@ def prepare_padded_query(
         np.add.at(counts, (src, q_ord[dst] - 1), 1)
     deg = counts.sum(axis=1).astype(np.int32)
 
-    table = _pascal_table_np(d_max, max_p)      # uint64, saturated at SAT64
-    log_t = _log_hbar_np(d_max, max_p)
-    sat = int(SAT64)
-
-    # vectorized descending expansion across all rows (the numpy twin of
-    # cni._descending_positions): label at position j = first ccum bin > j
-    desc = counts[:, ::-1]
-    ccum = np.cumsum(desc, axis=1)                              # (U, L)
-    posr = np.arange(d_max)
-    idx = (ccum[:, None, :] <= posr[None, :, None]).sum(-1)     # (U, D)
-    lab = np.maximum(l_pad - idx, 0)
-    valid = posr[None, :] < deg[:, None]
-    lab = np.where(valid, lab, 0)
-    prefix = np.minimum(np.cumsum(lab, axis=1), max_p)          # (U, D)
-    q_idx = np.arange(1, d_max + 1)
-    terms = np.where(valid, table[q_idx[None, :], prefix], 0)   # uint64
-
-    shadow = np.cumsum(terms.astype(np.float64), axis=1)
-    if shadow.size == 0 or shadow[:, -1].max(initial=0.0) < float(SAT64) * 0.5:
-        # fast path: no saturating add can trigger, plain uint64 sum is the
-        # exact device result
-        cni_u64 = terms.sum(axis=1, dtype=np.uint64)
-    else:
-        # near/over saturation: replay the device's sticky saturating adds
-        cni_u64 = np.zeros(u_pad, np.uint64)
-        for v in range(u_q):
-            acc = 0
-            for j in range(1, min(int(deg[v]), d_max) + 1):
-                acc = min(acc + int(table[j, prefix[v, j - 1]]), sat)
-            cni_u64[v] = acc
-
-    log_terms = np.where(valid, log_t[q_idx[None, :], prefix], -np.inf)
-    log_terms = log_terms.astype(np.float32)
-    m = log_terms.max(axis=1, initial=-np.inf)
-    m_safe = np.where(np.isfinite(m), m, np.float32(0.0))
-    s = np.sum(
-        np.where(valid, np.exp(log_terms - m_safe[:, None]), 0.0),
-        axis=1, dtype=np.float32,
-    )
-    cni_log = np.where(
-        deg > 0,
-        m_safe + np.log(np.maximum(s, np.float32(1e-30))),
-        -np.inf,
-    ).astype(np.float32)
+    cni_u64, cni_log, _ = cni_from_counts_np(counts, d_max, max_p)
 
     mnd = np.zeros(u_pad, np.int32)
     if src.size:
@@ -330,7 +282,7 @@ class BatchQueryEngine:
 
     def __init__(
         self,
-        data: Graph,
+        data,
         *,
         filter_variant: str = "cni",
         khop: int = 1,
@@ -339,17 +291,22 @@ class BatchQueryEngine:
         max_batch: int | None = None,
         max_iters: int = 1_000,
     ):
+        from repro.graphs.store import as_snapshot
+
         if max_batch is None:
             max_batch = ENGINE_CONFIG.max_batch
-        self.data = data
-        self._host_data = to_host(data)  # search side re-reads fields often
+        snap = as_snapshot(data)
+        self.data = snap.graph
+        self.epoch = snap.epoch
+        self._index = snap.index
+        self._host_data = to_host(snap.graph)  # search re-reads fields often
         self.filter_variant = filter_variant
         self.khop = khop
         self.searcher = searcher
         self.search_vertex_cap = search_vertex_cap
         self.max_batch = max_batch
         self.max_iters = max_iters
-        self.d_max = max(1, max_degree(data))
+        self.d_max = max(1, max_degree(self.data))
 
     def query_batch(
         self,
@@ -400,7 +357,22 @@ class BatchQueryEngine:
             [queries[i] for i in chunk], self._host_data,
             d_max, max_p, u_pad, l_pad, b_pad,
         )
-        alive = qb.ords > 0
+        if self._index is not None:
+            # seed each row's fixed point from the store's maintained
+            # digests: one sound filtering pass without the edge scatter
+            # (data-side digest memoized per query alphabet across the chunk)
+            from repro.core.incremental import store_prefilter
+
+            digest_cache: dict = {}
+            rows = np.zeros((b_pad, self.data.n_vertices), bool)
+            for r, i in enumerate(chunk):
+                rows[r] = store_prefilter(
+                    self._index, queries[i], variant=self.filter_variant,
+                    digest_cache=digest_cache,
+                )
+            alive = jnp.asarray(rows) & (qb.ords > 0)
+        else:
+            alive = qb.ords > 0
         row_query = list(range(len(chunk)))  # batch row -> chunk position
         done: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
         rounds = 0

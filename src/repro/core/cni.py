@@ -35,6 +35,11 @@ import numpy as np
 SAT64 = np.uint64(1) << np.uint64(62)
 _SAT_HI = jnp.uint32((SAT64 >> np.uint64(32)) & np.uint64(0xFFFFFFFF))
 _SAT_LO = jnp.uint32(SAT64 & np.uint64(0xFFFFFFFF))
+# log-space twin of SAT64: log digests at/above this are treated as
+# saturated by the ε-tolerant filter (same pass-through degeneracy as the
+# limb path), which is what lets the incremental index keep a sticky
+# canonical value for saturated hubs instead of re-encoding them.
+LOG_SAT64 = float(62 * np.log(2.0))
 
 
 class CniValue(NamedTuple):
@@ -236,6 +241,71 @@ def cni_log_from_counts(counts: jnp.ndarray, d_max: int, max_p: int) -> jnp.ndar
     s = jnp.sum(jnp.where(valid, jnp.exp(terms - m_safe[:, None]), 0.0), axis=-1)
     out = m_safe + jnp.log(jnp.maximum(s, 1e-30))
     return jnp.where(deg > 0, out, -jnp.inf).reshape(batch_shape)
+
+
+def cni_from_counts_np(counts: np.ndarray, d_max: int, max_p: int):
+    """Host (numpy) twin of the device encode: (N, L) count rows ->
+    (cni_u64 (N,), cni_log (N,) f32, deg (N,) int32).
+
+    Mirrors the device semantics *exactly* — same saturated Pascal table,
+    same ``min(p, max_p)`` clip, same sticky ``min(acc + term, SAT64)``
+    saturating add — so host-maintained digests (batch assembly, the
+    incremental store index) compare bit-identically against device digests.
+    Rows whose float64 term-sum shadow stays safely below SAT64 take a plain
+    uint64 sum (provably equal: partial sums are monotone, so no saturating
+    add can have fired); only near/over-saturation rows replay the sticky
+    saturating accumulation.
+    """
+    counts = np.asarray(counts)
+    n, L = counts.shape
+    deg_all = counts.sum(axis=1).astype(np.int32)
+    if n == 0 or d_max <= 0:
+        return (
+            np.zeros(n, np.uint64),
+            np.full(n, -np.inf, np.float32),
+            deg_all,
+        )
+    table = _pascal_table_np(d_max, max_p)  # uint64, saturated at SAT64
+    log_t = _log_hbar_np(d_max, max_p)
+    sat = int(SAT64)
+
+    # vectorized descending expansion across all rows (the numpy twin of
+    # _descending_positions): label at position j = first ccum bin > j
+    desc = counts[:, ::-1]
+    ccum = np.cumsum(desc, axis=1)                              # (N, L)
+    posr = np.arange(d_max)
+    idx = (ccum[:, None, :] <= posr[None, :, None]).sum(-1)     # (N, D)
+    lab = np.maximum(L - idx, 0)
+    deg = ccum[:, -1]
+    valid = posr[None, :] < deg[:, None]
+    lab = np.where(valid, lab, 0)
+    prefix = np.minimum(np.cumsum(lab, axis=1), max_p)          # (N, D)
+    q_idx = np.arange(1, d_max + 1)
+    terms = np.where(valid, table[q_idx[None, :], prefix], 0)   # uint64
+
+    shadow_total = np.cumsum(terms.astype(np.float64), axis=1)[:, -1]
+    cni_u64 = terms.sum(axis=1, dtype=np.uint64)
+    for v in np.nonzero(shadow_total >= float(SAT64) * 0.5)[0]:
+        # near/over saturation: replay the device's sticky saturating adds
+        acc = 0
+        for j in range(1, min(int(deg[v]), d_max) + 1):
+            acc = min(acc + int(table[j, prefix[v, j - 1]]), sat)
+        cni_u64[v] = acc
+
+    log_terms = np.where(valid, log_t[q_idx[None, :], prefix], -np.inf)
+    log_terms = log_terms.astype(np.float32)
+    m = log_terms.max(axis=1, initial=-np.inf)
+    m_safe = np.where(np.isfinite(m), m, np.float32(0.0))
+    s = np.sum(
+        np.where(valid, np.exp(log_terms - m_safe[:, None]), 0.0),
+        axis=1, dtype=np.float32,
+    )
+    cni_log = np.where(
+        deg > 0,
+        m_safe + np.log(np.maximum(s, np.float32(1e-30))),
+        -np.inf,
+    ).astype(np.float32)
+    return cni_u64, cni_log, deg_all
 
 
 def cni_exact_py(labels: list[int]) -> int:

@@ -22,6 +22,7 @@ from repro.core.ilgf import ilgf
 from repro.core.khop import refine_candidates_khop
 from repro.core.search import bfs_join_search, host_dfs_search
 from repro.graphs.csr import Graph, induced_subgraph, to_host
+from repro.graphs.store import as_snapshot
 
 
 @dataclass
@@ -83,11 +84,19 @@ def search_filtered(
 
 
 class SubgraphQueryEngine:
-    """CNI-filter + join-search engine over one data graph."""
+    """CNI-filter + join-search engine over one data graph.
+
+    ``data`` may be an immutable ``Graph``, a mutable ``GraphStore``, or a
+    pinned ``GraphSnapshot``: store-backed engines run against the snapshot
+    taken at construction and, when the store carries an incremental index,
+    seed the ILGF fixed point from the maintained digests
+    (``incremental.store_prefilter``) instead of recomputing the round-0
+    filter from the edge list.
+    """
 
     def __init__(
         self,
-        data: Graph,
+        data,
         *,
         filter_variant: Literal["cni", "cni_log", "nlf", "label_degree",
                                 "mnd_nlf"] = "cni",
@@ -95,8 +104,11 @@ class SubgraphQueryEngine:
         searcher: Literal["join", "dfs"] = "join",
         search_vertex_cap: int = 8192,
     ):
-        self.data = data
-        self._host_data = to_host(data)  # search side re-reads fields often
+        snap = as_snapshot(data)
+        self.data = snap.graph
+        self.epoch = snap.epoch
+        self._index = snap.index
+        self._host_data = to_host(snap.graph)  # search re-reads fields often
         self.filter_variant = filter_variant
         self.khop = khop
         self.searcher = searcher
@@ -106,7 +118,14 @@ class SubgraphQueryEngine:
         """Returns (embeddings (M, |V(Q)|) int64 over original ids, stats)."""
         stats = QueryStats(vertices_before=self.data.n_vertices)
         t0 = time.perf_counter()
-        res = ilgf(self.data, q, variant=self.filter_variant)
+        alive0 = None
+        if self._index is not None:
+            from repro.core.incremental import store_prefilter
+
+            alive0 = store_prefilter(self._index, to_host(q),
+                                     variant=self.filter_variant)
+            stats.extras["store_prefilter_alive"] = int(alive0.sum())
+        res = ilgf(self.data, q, variant=self.filter_variant, alive0=alive0)
         alive = np.asarray(res.alive)
         stats.ilgf_iterations = int(res.iterations)
         stats.filter_seconds = time.perf_counter() - t0

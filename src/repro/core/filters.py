@@ -19,7 +19,17 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from repro.core import cni as cni_mod
-from repro.core.cni import CniValue, limb_eq, limb_ge, limb_is_saturated
+from repro.core.cni import (
+    LOG_SAT64,
+    CniValue,
+    limb_eq,
+    limb_ge,
+    limb_is_saturated,
+)
+
+# unsaturated rows within this margin of LOG_SAT64 are also treated as
+# saturated — pass-through is monotone-weaker, hence always sound
+_LOG_SAT_THRESH = LOG_SAT64 - 1e-3
 
 
 class VertexDigest(NamedTuple):
@@ -78,7 +88,14 @@ def cni_match(data: VertexDigest, query: VertexDigest) -> jnp.ndarray:
 
 def cni_match_log(data: VertexDigest, query: VertexDigest,
                   eps: float = 1e-4) -> jnp.ndarray:
-    """cniMatch on the float32 log-space path with ε-tolerant compares."""
+    """cniMatch on the float32 log-space path with ε-tolerant compares.
+
+    Mirrors the limb path's saturation degeneracy: at/above ``LOG_SAT64``
+    the comparison falls back to the label+degree filters (sound: the true
+    value is at least that large, so passing-through only weakens).  This
+    is what makes the incremental index's sticky canonical log value for
+    saturated hubs exact rather than approximate.
+    """
     lab = label_match(data, query)
     dv = data.deg[..., :, None]
     du = query.deg[..., None, :]
@@ -87,9 +104,10 @@ def cni_match_log(data: VertexDigest, query: VertexDigest,
     tol = eps * jnp.maximum(1.0, jnp.abs(cu))
     ge = cv >= cu - tol
     eq = jnp.abs(cv - cu) <= tol
+    sat = (cv >= _LOG_SAT_THRESH) | (cu >= _LOG_SAT_THRESH)
     both_empty = (dv == 0) & (du == 0)
-    strict = (dv > du) & ge
-    equal = (dv == du) & (eq | both_empty)
+    strict = (dv > du) & (ge | sat)
+    equal = (dv == du) & (eq | both_empty | sat)
     return lab & (strict | equal)
 
 

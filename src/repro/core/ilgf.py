@@ -86,10 +86,9 @@ def match_matrix(variant: str, counts: jnp.ndarray, ords: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("d_max", "max_p", "variant",
                                              "max_iters"))
-def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray, *, d_max: int,
-              max_p: int, variant: str, max_iters: int) -> IlgfResult:
-    n = g.vlabels.shape[0]
-
+def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray,
+              alive0: jnp.ndarray, *, d_max: int, max_p: int, variant: str,
+              max_iters: int) -> IlgfResult:
     def round_fn(state):
         alive, _, it = state
         counts = counts_matrix(g, q.label_map, alive)
@@ -103,7 +102,6 @@ def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray, *, d_max: int,
         _, changed, it = state
         return changed & (it < max_iters)
 
-    alive0 = ords > 0  # Lemma 1 applied up front
     state = (alive0, jnp.asarray(True), jnp.asarray(0, jnp.int32))
     alive, _, iters = jax.lax.while_loop(cond_fn, round_fn, state)
     # final candidate sets over the fixed-point graph (Alg. 2 lines 20-25)
@@ -115,7 +113,7 @@ def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray, *, d_max: int,
 
 def ilgf(data: Graph, query: Graph, *, variant: str = "cni",
          d_max: int | None = None, max_p: int | None = None,
-         max_iters: int = 1_000) -> IlgfResult:
+         max_iters: int = 1_000, alive0=None) -> IlgfResult:
     """Run ILGF to its fixed point.  Returns alive mask + candidate columns.
 
     ``variant``:
@@ -123,6 +121,12 @@ def ilgf(data: Graph, query: Graph, *, variant: str = "cni",
       * ``cni_log``      — the paper, float32 log-space fast path
       * ``nlf``          — NLF baseline (CFL-match / TurboISO filter)
       * ``label_degree`` — Ullmann-era baseline
+
+    ``alive0``: optional (V,) bool starting mask — a *sound* pre-filter
+    (e.g. ``incremental.store_prefilter`` from maintained store digests)
+    that lets the fixed point start past round one.  Peeling is monotone, so
+    any sound starting superset reaches a fixed point whose search results
+    are identical.
     """
     if d_max is None:
         d_max = max(1, max_degree(data))
@@ -131,8 +135,12 @@ def ilgf(data: Graph, query: Graph, *, variant: str = "cni",
         max_p = default_max_p(d_max, label_map.n_labels)
     q = prepare_query(query, d_max, max_p)
     ords = ord_of(q.label_map, data.vlabels)
-    return _ilgf_jit(data, q, ords, d_max=d_max, max_p=max_p, variant=variant,
-                     max_iters=max_iters)
+    if alive0 is None:
+        alive0 = ords > 0  # Lemma 1 applied up front
+    else:
+        alive0 = jnp.asarray(alive0) & (ords > 0)
+    return _ilgf_jit(data, q, ords, alive0, d_max=d_max, max_p=max_p,
+                     variant=variant, max_iters=max_iters)
 
 
 def one_shot_filter(data: Graph, query: Graph, *, variant: str = "cni",

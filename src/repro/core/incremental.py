@@ -1,0 +1,344 @@
+"""Incrementally-maintained CNI index over a mutable graph store.
+
+The paper's §3.4 claim — the encoding "can be computed and updated
+incrementally" — operationalized: ``IncrementalIndex`` keeps the per-vertex
+label-count matrix ``K[v, l]`` and the CNI digests (exact saturating-limb
+*and* float32 log-space) as persistent state over the store's **global label
+universe** (every raw vertex label; the vertex set is fixed, so the universe
+is too).  Applying an edge batch is a count-vector delta:
+
+* **Counts are invertible.**  Insert/delete of edge (u, w) adds/subtracts 1
+  from ``K[u, col(ℓ(w))]`` and ``K[w, col(ℓ(u))]`` — an exact scatter-add
+  either way.
+
+* **Digests re-encode only the touched frontier.**  The CNI of an untouched
+  vertex is untouched (its count row didn't change) — that is the whole
+  point of the index.  Touched vertices re-encode their row with the same
+  descending-ord, saturating-limb semantics as ``cni.py``
+  (``cni_from_counts_np``, device-bit-exact), O(|frontier| · d_max) instead
+  of O(V · d_max).
+
+* **Saturation semantics** (DESIGN.md §8):
+  - insert-only touches of an already-*saturated* digest are **skipped
+    outright**: the CNI is monotone under neighborhood growth (Lemma 3) and
+    saturation is sticky, so the digest provably stays SAT64 — zero work,
+    tracked in ``stats.saturated_skips``.
+  - a delete touching a saturated digest cannot be applied arithmetically —
+    ``min(x, SAT)`` destroyed the information needed to subtract — so it
+    triggers the tracked per-vertex **recompute fallback**
+    (``stats.saturated_recomputes``), re-encoding from the (always exact)
+    count row.
+
+Engines consume the index through ``store_prefilter`` / ``gathered_counts``:
+a query's round-0 candidate mask comes from the maintained counts (a column
+gather; no O(E) scatter over the edge list), and a query whose label
+alphabet *is* the universe reuses the maintained digests without any
+re-encode at all.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import filters as flt
+from repro.core.cni import (
+    LOG_SAT64,
+    SAT64,
+    CniValue,
+    cni_from_counts_np,
+    default_max_p,
+)
+from repro.core.batch_engine import ceil_pow2
+from repro.graphs.store import EdgeBatch, GraphStore
+
+
+@dataclass
+class IndexStats:
+    applied_batches: int = 0
+    edges_inserted: int = 0
+    edges_deleted: int = 0
+    touched_vertices: int = 0
+    reencoded_vertices: int = 0
+    saturated_skips: int = 0        # saturated digest + insert-only: no work
+    saturated_recomputes: int = 0   # saturated digest + delete: forced re-encode
+    full_rebuilds: int = 0          # d_max overflow (auto-grown table)
+    extras: dict = field(default_factory=dict)
+
+
+class IndexSnapshot(NamedTuple):
+    """Frozen (read-only copy) index state at one store epoch.
+
+    Travels inside ``GraphSnapshot.index`` so queries pinned to an epoch
+    filter against exactly that epoch's digests.
+    """
+
+    epoch: int
+    universe: np.ndarray   # (Lu,) sorted unique raw vertex labels
+    vlabels: np.ndarray    # (V,) raw vertex labels (shared ref; immutable)
+    counts: np.ndarray     # (V, Lu) int32
+    deg: np.ndarray        # (V,) int32
+    cni_u64: np.ndarray    # (V,) uint64 exact saturating CNI (universe ords)
+    cni_log: np.ndarray    # (V,) float32 log-space CNI (universe ords)
+    d_max: int
+    max_p: int
+
+
+class IncrementalIndex:
+    """Persistent label-count matrix + CNI digest state for a GraphStore.
+
+    Attach with ``store.attach_index(IncrementalIndex())`` — the store then
+    calls ``apply_batch`` with exactly the records that changed the edge
+    set.  ``d_max`` is the static Pascal-table bound: fixed when the store
+    has a ``degree_cap``, otherwise auto-grown (pow2) with a tracked full
+    rebuild when an insert exceeds it.
+    """
+
+    def __init__(self, *, d_max: int | None = None, use_kernel: bool = False):
+        self._d_max_arg = d_max
+        self.use_kernel = use_kernel
+        self.stats = IndexStats()
+        self._epoch = -1  # set by rebuild()
+
+    # -- (re)build -----------------------------------------------------------
+
+    def rebuild(self, store: GraphStore) -> None:
+        """Full build from the store's current edge set (O(V·L + E))."""
+        self.universe = np.unique(store.vlabels)
+        self.vlabels = store.vlabels
+        v = store.n_vertices
+        lu = int(self.universe.size)
+        if self._d_max_arg is not None:
+            self.d_max = int(self._d_max_arg)
+        elif store.degree_cap is not None:
+            self.d_max = int(store.degree_cap)
+        else:
+            self.d_max = ceil_pow2(max(4, store.max_degree))
+        self.max_p = default_max_p(self.d_max, lu)
+        self._col = {int(l): i for i, l in enumerate(self.universe)}
+        counts = np.zeros((v, lu), np.int32)
+        lo = store._lo[store._alive]
+        hi = store._hi[store._alive]
+        if lo.size:
+            col_of = np.searchsorted(self.universe, self.vlabels)
+            np.add.at(counts, (lo, col_of[hi]), 1)
+            np.add.at(counts, (hi, col_of[lo]), 1)
+        self.counts = counts
+        self._encode_all()
+        self._epoch = store.epoch
+
+    @staticmethod
+    def _canonical_log(u64: np.ndarray, log: np.ndarray) -> np.ndarray:
+        """Sticky canonical log value for limb-saturated rows.
+
+        The float log digest has no intrinsic saturation, so the
+        insert-skip fast path would leave it stale on saturated hubs; the
+        filter (``cni_match_log``) treats values at/above ``LOG_SAT64`` as
+        pass-through, making this canonicalization exact — and it keeps
+        incremental and from-scratch index states bit-identical.
+        """
+        return np.where(u64 == SAT64, np.float32(LOG_SAT64), log).astype(
+            np.float32
+        )
+
+    def _encode_all(self) -> None:
+        u64, log, deg = cni_from_counts_np(self.counts, self.d_max, self.max_p)
+        self.cni_u64 = u64
+        self.cni_log = self._canonical_log(u64, log)
+        self.deg = deg
+
+    # -- incremental maintenance --------------------------------------------
+
+    def apply_batch(self, store: GraphStore, applied: EdgeBatch) -> None:
+        """Fold one applied batch into counts + digests (frontier only)."""
+        st = self.stats
+        st.applied_batches += 1
+        lo = applied.src
+        hi = applied.dst
+        sign = np.where(applied.insert, 1, -1).astype(np.int32)
+        st.edges_inserted += int(applied.insert.sum())
+        st.edges_deleted += int((~applied.insert).sum())
+
+        col_of = np.searchsorted(self.universe, self.vlabels)
+        np.add.at(self.counts, (lo, col_of[hi]), sign)
+        np.add.at(self.counts, (hi, col_of[lo]), sign)
+
+        frontier = np.unique(np.concatenate([lo, hi]))
+        st.touched_vertices += int(frontier.size)
+        new_deg = self.counts[frontier].sum(axis=1).astype(np.int32)
+        if new_deg.size and int(new_deg.max()) > self.d_max:
+            # static table bound exceeded: auto-grow (pow2) + full re-encode
+            self.d_max = ceil_pow2(int(new_deg.max()))
+            self.max_p = default_max_p(self.d_max, int(self.universe.size))
+            self._encode_all()
+            st.full_rebuilds += 1
+            self._epoch = store.epoch
+            return
+        self.deg[frontier] = new_deg
+
+        # partition the frontier by saturation semantics
+        sat = self.cni_u64[frontier] == SAT64
+        dec = np.zeros(frontier.size, dtype=bool)  # any count decrease?
+        if not applied.insert.all():
+            dec_ids = np.unique(
+                np.concatenate([lo[~applied.insert], hi[~applied.insert]])
+            )
+            dec[np.searchsorted(frontier, dec_ids)] = True
+        skip = sat & ~dec          # stays saturated: provably no change
+        st.saturated_skips += int(skip.sum())
+        st.saturated_recomputes += int((sat & dec).sum())
+        redo = frontier[~skip]
+        st.reencoded_vertices += int(redo.size)
+        if redo.size:
+            self._reencode(redo)
+        self._epoch = store.epoch
+
+    def _reencode(self, rows: np.ndarray) -> None:
+        sub = self.counts[rows]
+        u64, log, _ = cni_from_counts_np(sub, self.d_max, self.max_p)
+        if self.use_kernel:
+            # device frontier kernel recomputes the log digests (the TPU
+            # fast path); exact limbs stay host-side (no 64-bit datapath)
+            from repro.kernels.cni_update.ops import cni_update
+
+            _, log_k, _ = cni_update(
+                sub, np.zeros_like(sub), d_max=self.d_max, max_p=self.max_p
+            )
+            log = np.asarray(log_k)
+        self.cni_u64[rows] = u64
+        self.cni_log[rows] = self._canonical_log(u64, log)
+
+    # -- views ---------------------------------------------------------------
+
+    def freeze(self) -> IndexSnapshot:
+        return IndexSnapshot(
+            epoch=self._epoch,
+            universe=self.universe,
+            vlabels=self.vlabels,
+            counts=self.counts.copy(),
+            deg=self.deg.copy(),
+            cni_u64=self.cni_u64.copy(),
+            cni_log=self.cni_log.copy(),
+            d_max=self.d_max,
+            max_p=self.max_p,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Query-side consumption: precomputed digests instead of per-query recompute.
+# ---------------------------------------------------------------------------
+
+
+def query_columns(universe: np.ndarray, query_labels: np.ndarray):
+    """Map a query's sorted unique labels onto universe column ids.
+
+    Returns (cols (Lq,) int64, present (Lq,) bool) — labels absent from the
+    universe have no data-side counts anywhere (their columns are zero).
+    """
+    cols = np.searchsorted(universe, query_labels)
+    cols_c = np.clip(cols, 0, max(0, universe.size - 1))
+    present = (
+        universe[cols_c] == query_labels if universe.size else
+        np.zeros(query_labels.shape, bool)
+    )
+    return cols_c, present
+
+
+def gathered_counts(idx: IndexSnapshot, query_labels: np.ndarray) -> np.ndarray:
+    """Round-0 per-query counts (V, Lq) from the maintained universe matrix.
+
+    Column gather instead of the O(E) edge scatter ``counts_matrix`` runs —
+    exactly equal to ``counts_matrix(g, label_map)`` at the same epoch
+    because the universe covers every neighbor label.
+    """
+    cols, present = query_columns(idx.universe, query_labels)
+    out = np.zeros((idx.counts.shape[0], query_labels.size), np.int32)
+    if present.any():
+        out[:, present] = idx.counts[:, cols[present]]
+    return out
+
+
+def store_digest(idx: IndexSnapshot, query_labels: np.ndarray,
+                 ords: np.ndarray | None = None):
+    """Data-side VertexDigest for a query alphabet, from index state.
+
+    Full-universe alphabets reuse the maintained digests verbatim (zero
+    encode work); restricted alphabets re-encode from the gathered counts
+    with the *index's* (d_max, max_p) so comparisons against a query digest
+    encoded the same way stay device-bit-exact.  Returns (digest, counts_q,
+    ords_data) with numpy-backed fields.  ``ords`` may pass in the data-side
+    ord() values when the caller already computed them.
+    """
+    vlab = idx.vlabels
+    if ords is None:
+        pos = np.clip(np.searchsorted(query_labels, vlab), 0,
+                      max(0, query_labels.size - 1))
+        ords = np.where(
+            query_labels.size and (query_labels[pos] == vlab), pos + 1, 0
+        ).astype(np.int32)
+    counts_q = gathered_counts(idx, query_labels)
+    if query_labels.size == idx.universe.size and np.array_equal(
+        query_labels, idx.universe
+    ):
+        u64, log = idx.cni_u64, idx.cni_log
+        deg = idx.deg
+    else:
+        u64, log, deg = cni_from_counts_np(counts_q, idx.d_max, idx.max_p)
+    digest = flt.VertexDigest(
+        ord_label=ords,
+        deg=deg,
+        cni=CniValue(
+            hi=(u64 >> np.uint64(32)).astype(np.uint32),
+            lo=(u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+        ),
+        cni_log=log,
+    )
+    return digest, counts_q, ords
+
+
+def store_prefilter(idx: IndexSnapshot, query, *, variant: str = "cni",
+                    digest_cache: dict | None = None):
+    """One filtering pass from precomputed store digests: (V,) bool alive0.
+
+    The store-backed replacement for the first ILGF round: no edge scatter,
+    no full-graph digest encode.  Sound for every variant (all comparisons
+    are monotone under the index's clip/saturation params); the ILGF fixed
+    point then proceeds from this mask.  ``mnd_nlf`` needs per-edge maxima
+    the counts matrix cannot provide — it falls back to the label filter.
+
+    ``digest_cache``: optional dict the caller owns; the data-side digest
+    (the O(V·d_max) part for restricted alphabets) is memoized per query
+    alphabet, so a batch of same-alphabet queries encodes it once.
+    """
+    from repro.core.batch_engine import prepare_padded_query
+
+    q_vlab = np.asarray(query.vlabels)
+    query_labels = np.unique(q_vlab)
+    u_q = int(q_vlab.shape[0])
+    ords_data, q_counts, q_digest, _q_mnd = prepare_padded_query(
+        query, idx.vlabels, idx.d_max, idx.max_p,
+        u_pad=u_q, l_pad=int(query_labels.size),
+    )
+    key = query_labels.tobytes()
+    cached = digest_cache.get(key) if digest_cache is not None else None
+    if cached is None:
+        cached = store_digest(idx, query_labels, ords=ords_data)
+        if digest_cache is not None:
+            digest_cache[key] = cached
+    data_digest, counts_q, ords = cached
+    if variant == "cni":
+        match = flt.cni_match(data_digest, q_digest)
+    elif variant == "cni_log":
+        match = flt.cni_match_log(data_digest, q_digest)
+    elif variant == "nlf":
+        match = flt.nlf_match(counts_q, q_counts, ords, q_digest.ord_label)
+    elif variant == "label_degree":
+        lab = (ords[:, None] == q_digest.ord_label[None, :]) & (ords[:, None] > 0)
+        match = lab & (data_digest.deg[:, None] >= q_digest.deg[None, :])
+    else:  # mnd_nlf and future variants: label filter only (sound superset)
+        match = (ords[:, None] == q_digest.ord_label[None, :]) & (
+            ords[:, None] > 0
+        )
+    return np.asarray(match).any(axis=1) & (ords > 0)

@@ -33,6 +33,7 @@ from repro.core.cni import default_max_p
 from repro.core.ilgf import IlgfResult, QueryDigest, ilgf, prepare_query
 from repro.core.labels import ord_of
 from repro.graphs.csr import Graph, build_graph, max_degree
+from repro.graphs.io import iter_update_batches
 
 
 class StreamStats(NamedTuple):
@@ -86,6 +87,10 @@ def scan_filter(
     ords = ord_of(q.label_map, data.vlabels)
     L = q.label_map.n_labels
 
+    # device-resident twin of the iter_update_batches chunking (same chunk
+    # boundaries + tail padding, asserted equivalent in tests): the data
+    # arrays are already on device, so chunks come from one pad+reshape
+    # instead of an O(E) host round-trip
     n_edges = data.src.shape[0]
     pad = (-n_edges) % chunk_edges
     src = jnp.concatenate([data.src, jnp.zeros(pad, jnp.int32)])
@@ -128,13 +133,14 @@ def stream_filter_file(
     sorted_stream: bool = True,
     run_ilgf: bool = True,
 ) -> StreamResult:
-    """Out-of-core Algorithm 6 over an edge file (or a chunk iterator)."""
-    from repro.graphs.io import stream_edge_chunks
+    """Out-of-core Algorithm 6 over an edge file (or a chunk iterator).
 
-    if isinstance(path_or_chunks, str):
-        chunks: Iterator = stream_edge_chunks(path_or_chunks, chunk_edges)
-    else:
-        chunks = iter(path_or_chunks)
+    Chunk iteration is the shared ``iter_update_batches`` abstraction (the
+    same stream ``scan_filter`` replays and ``GraphStore.apply`` consumes):
+    ``path_or_chunks`` may be a path, an iterator of legacy ``(src, dst,
+    elabel, valid)`` tuples, or an iterator of ``EdgeBatch``es.
+    """
+    chunks: Iterator = iter_update_batches(path_or_chunks, chunk_edges)
 
     n = int(vlabels.shape[0])
     q = prepare_query(query, d_max, default_max_p(d_max, build_n_labels(query)))
@@ -152,7 +158,10 @@ def stream_filter_file(
     n_chunks = 0
     last_src_prev = -1
 
-    for s_np, d_np, e_np, valid_np in chunks:
+    for batch in chunks:
+        s_np, d_np, e_np, valid_np = (
+            batch.src, batch.dst, batch.elabels, batch.valid,
+        )
         n_chunks += 1
         total_edges += int(valid_np.sum())
         counts = _chunk_update(

@@ -14,9 +14,29 @@ from repro.graphs.generators import (
     random_walk_query,
 )
 from repro.graphs.datasets import paper_dataset, PAPER_DATASETS
-from repro.graphs.io import write_edge_file, stream_edge_chunks, read_edge_file
+from repro.graphs.io import (
+    write_edge_file,
+    stream_edge_chunks,
+    read_edge_file,
+    iter_update_batches,
+)
+from repro.graphs.store import (
+    EdgeBatch,
+    GraphSnapshot,
+    GraphStore,
+    as_snapshot,
+    make_edge_batch,
+)
+from repro.graphs.generators import random_update_batches
 
 __all__ = [
+    "EdgeBatch",
+    "GraphSnapshot",
+    "GraphStore",
+    "as_snapshot",
+    "make_edge_batch",
+    "iter_update_batches",
+    "random_update_batches",
     "Graph",
     "PaddedGraph",
     "build_graph",

@@ -84,3 +84,64 @@ def read_vertex_labels(path: str) -> np.ndarray:
     with open(path, "rb") as f:
         n_v, _ = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
         return np.fromfile(f, dtype=np.int64, count=int(n_v)).astype(np.int32)
+
+
+def iter_update_batches(source, chunk_edges: int):
+    """Normalize any edge source into fixed-size ``EdgeBatch`` chunks.
+
+    ``source`` may be an edge-file path, an in-memory ``Graph`` (its directed
+    records are replayed as insert batches — a static load is just an update
+    stream that never deletes), an iterator of legacy ``(src, dst, elabel,
+    valid)`` tuples, or an iterator of ``EdgeBatch``es.  Every yielded batch
+    has exactly ``chunk_edges`` rows (tail padded with ``valid=False``), so
+    jitted fixed-shape consumers (core/stream.py) can iterate directly.
+    """
+    from repro.graphs.store import EdgeBatch
+
+    def _pad(s, d, e, valid, insert):
+        take = s.shape[0]
+        if take < chunk_edges:
+            pad = chunk_edges - take
+            s = np.concatenate([s, np.zeros(pad, s.dtype)])
+            d = np.concatenate([d, np.zeros(pad, d.dtype)])
+            e = np.concatenate([e, np.zeros(pad, e.dtype)])
+            valid = np.concatenate([valid, np.zeros(pad, dtype=bool)])
+            insert = np.concatenate([insert, np.ones(pad, dtype=bool)])
+        return EdgeBatch(src=s, dst=d, elabels=e, insert=insert, valid=valid)
+
+    if isinstance(source, str):
+        for s, d, e, valid in stream_edge_chunks(source, chunk_edges):
+            yield EdgeBatch(
+                src=s, dst=d, elabels=e,
+                insert=np.ones(s.shape[0], dtype=bool), valid=valid,
+            )
+        return
+    if isinstance(source, Graph):
+        src = np.asarray(source.src)
+        dst = np.asarray(source.dst)
+        elab = np.asarray(source.elabels)
+        n = src.shape[0]
+        for start in range(0, max(n, 1), chunk_edges):
+            s = src[start : start + chunk_edges]
+            if s.size == 0 and start > 0:
+                break
+            d = dst[start : start + chunk_edges]
+            e = elab[start : start + chunk_edges]
+            yield _pad(s, d, e, np.ones(s.shape[0], dtype=bool),
+                       np.ones(s.shape[0], dtype=bool))
+        return
+    for item in source:
+        if isinstance(item, EdgeBatch):
+            yield _pad(
+                np.asarray(item.src), np.asarray(item.dst),
+                np.asarray(item.elabels),
+                np.asarray(item.valid, dtype=bool),
+                np.asarray(item.insert, dtype=bool),
+            )
+        else:
+            s, d, e, valid = item
+            yield _pad(
+                np.asarray(s), np.asarray(d), np.asarray(e),
+                np.asarray(valid, dtype=bool),
+                np.ones(np.asarray(s).shape[0], dtype=bool),
+            )

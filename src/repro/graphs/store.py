@@ -1,0 +1,401 @@
+"""Dynamic graph store: base edge table + delta log + epoch snapshots.
+
+The paper's encoding "can be computed and updated incrementally" — but an
+immutable ``Graph`` forces every consumer to rebuild from scratch whenever
+the data graph changes.  ``GraphStore`` is the mutable-graph substrate:
+
+* **Base table + delta log.**  Undirected canonical edges live in append-only
+  host arrays with an aliveness mask.  ``apply(EdgeBatch)`` inserts/deletes
+  edges (idempotently: duplicate inserts and missing deletes are counted,
+  not errors) and bumps the store epoch.  Dead rows accumulate until
+  ``compact()`` (run automatically every ``compact_every`` batches) rewrites
+  the table without them — the classic LSM-style merge of the delta into the
+  base CSR.
+
+* **Epoch-versioned snapshots.**  ``snapshot()`` materializes the current
+  edge set as an immutable ``Graph`` (plus a frozen copy of the attached
+  incremental index, if any) tagged with the epoch.  Snapshots are cached
+  per epoch and released via ``release()``; in-flight queries pin the epoch
+  they started on (serve/graph_service.py), so the graph can mutate
+  underneath running queries without torn reads.
+
+* **Index maintenance hooks.**  An attached listener (duck-typed:
+  ``apply_batch(applied: EdgeBatch)`` + ``freeze()``) — in practice
+  ``core.incremental.IncrementalIndex`` — observes exactly the records that
+  changed the edge set, so label counts and CNI digests update as
+  count-vector deltas instead of from-scratch rebuilds.
+
+The vertex set (and its labels) is fixed at construction: dynamic workloads
+here are edge churn over a known universe, which keeps every ``(V,)``- and
+``(V, L)``-shaped consumer (slot arrays, count matrices, digests) valid
+across epochs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.graphs.csr import Graph, build_graph
+
+
+class EdgeBatch(NamedTuple):
+    """One batch of edge records — the unit of graph mutation *and* of
+    streaming ingest (core/stream.py iterates these for static loads too).
+
+    ``insert[i]`` selects insert (True) vs delete (False); ``valid`` masks
+    padding rows so jitted fixed-shape consumers can iterate batches
+    directly.  Records are undirected (direction is canonicalized by the
+    store) and carry edge labels.
+    """
+
+    src: np.ndarray      # (k,) int64
+    dst: np.ndarray      # (k,) int64
+    elabels: np.ndarray  # (k,) int64
+    insert: np.ndarray   # (k,) bool — True = insert, False = delete
+    valid: np.ndarray    # (k,) bool — padding mask
+
+    @property
+    def n_records(self) -> int:
+        return int(self.valid.sum())
+
+
+def make_edge_batch(edges, elabels=None, *, insert=True) -> EdgeBatch:
+    """(k, 2) edges (+labels) -> EdgeBatch; ``insert`` may be scalar or (k,)."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    k = edges.shape[0]
+    if elabels is None:
+        elabels = np.zeros(k, dtype=np.int64)
+    ins = np.broadcast_to(np.asarray(insert, dtype=bool), (k,)).copy()
+    return EdgeBatch(
+        src=edges[:, 0].copy(),
+        dst=edges[:, 1].copy(),
+        elabels=np.asarray(elabels, dtype=np.int64).copy(),
+        insert=ins,
+        valid=np.ones(k, dtype=bool),
+    )
+
+
+class ApplyResult(NamedTuple):
+    epoch: int           # store epoch after this batch
+    applied: EdgeBatch   # canonical records that actually changed the edge set
+    n_inserted: int
+    n_deleted: int
+    n_skipped: int       # duplicate inserts / missing deletes (no-ops)
+
+
+class GraphSnapshot(NamedTuple):
+    """Immutable view of the store at one epoch.
+
+    ``graph`` is a plain ``Graph`` (numpy-backed, usable everywhere a Graph
+    is); ``index`` is a frozen ``core.incremental.IndexSnapshot`` when an
+    incremental index is attached, else None.  Engines accept a snapshot
+    anywhere they accept a Graph and use ``index`` to skip the from-scratch
+    digest recompute.
+    """
+
+    epoch: int
+    graph: Graph
+    index: Optional[object]
+
+
+class StoreStats(NamedTuple):
+    epoch: int
+    n_vertices: int
+    n_edges_alive: int
+    n_edges_dead: int
+    n_batches_applied: int
+    n_compactions: int
+    n_snapshots_cached: int
+
+
+class GraphStore:
+    """Mutable vertex-labeled graph with epoch-versioned snapshots."""
+
+    def __init__(
+        self,
+        n_vertices: int,
+        vlabels,
+        *,
+        degree_cap: int | None = None,
+        compact_every: int = 64,
+    ):
+        self.vlabels = np.asarray(vlabels, dtype=np.int32).copy()
+        assert self.vlabels.shape == (n_vertices,)
+        self.n_vertices = int(n_vertices)
+        # undirected canonical edge table (lo < hi), append-only + alive mask
+        self._lo = np.zeros(0, dtype=np.int64)
+        self._hi = np.zeros(0, dtype=np.int64)
+        self._lab = np.zeros(0, dtype=np.int64)
+        self._alive = np.zeros(0, dtype=bool)
+        self._pos: dict[tuple[int, int], int] = {}
+        self._deg = np.zeros(n_vertices, dtype=np.int64)
+        self.degree_cap = degree_cap
+        self.compact_every = compact_every
+        self.epoch = 0
+        self._index = None  # duck-typed listener: apply_batch / rebuild / freeze
+        self._snapshots: dict[int, GraphSnapshot] = {}
+        self._pins: dict[int, int] = {}
+        self._n_batches = 0
+        self._n_compactions = 0
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_graph(cls, g: Graph, **kwargs) -> "GraphStore":
+        """Seed a store from an immutable Graph (its edges become the base)."""
+        vlab = np.asarray(g.vlabels)
+        store = cls(int(vlab.shape[0]), vlab, **kwargs)
+        src = np.asarray(g.src)
+        keep = src < np.asarray(g.dst)  # one canonical record per undirected edge
+        batch = make_edge_batch(
+            np.stack([src[keep], np.asarray(g.dst)[keep]], axis=1),
+            np.asarray(g.elabels)[keep],
+        )
+        if batch.src.size:
+            store.apply(batch)
+            store.epoch = 0  # seeding is epoch 0, not a mutation
+            store._snapshots.pop(1, None)
+        return store
+
+    def attach_index(self, index) -> None:
+        """Attach an incremental-index listener (see core/incremental.py).
+
+        The index is rebuilt from the current edge set on attach, then kept
+        in sync by ``apply``.
+        """
+        self._index = index
+        index.rebuild(self)
+
+    @property
+    def index(self):
+        return self._index
+
+    # -- mutation ------------------------------------------------------------
+
+    def _canonicalize(self, batch: EdgeBatch):
+        """Valid records -> (lo, hi, lab, insert), self-loops dropped.
+
+        One op per undirected edge per batch: records repeating an earlier
+        (lo, hi) pair are dropped (first record wins, matching
+        ``symmetrize``'s dedup) — so an insert and a delete of the same edge
+        cannot interleave within one batch.
+        """
+        v = batch.valid.astype(bool)
+        s = np.asarray(batch.src, dtype=np.int64)[v]
+        d = np.asarray(batch.dst, dtype=np.int64)[v]
+        lab = np.asarray(batch.elabels, dtype=np.int64)[v]
+        ins = np.asarray(batch.insert, dtype=bool)[v]
+        lo = np.minimum(s, d)
+        hi = np.maximum(s, d)
+        keep = lo != hi
+        lo, hi, lab, ins = lo[keep], hi[keep], lab[keep], ins[keep]
+        if lo.size and (lo.min() < 0 or hi.max() >= self.n_vertices):
+            raise ValueError("edge endpoint out of range for this store")
+        seen: set[tuple[int, int]] = set()
+        order = []
+        for i in range(lo.size):
+            key = (int(lo[i]), int(hi[i]))
+            if key in seen:
+                continue
+            seen.add(key)
+            order.append(i)
+        idx = np.asarray(order, dtype=np.int64)
+        return lo[idx], hi[idx], lab[idx], ins[idx]
+
+    def _append_rows(self, lo, hi, lab):
+        self._lo = np.concatenate([self._lo, lo])
+        self._hi = np.concatenate([self._hi, hi])
+        self._lab = np.concatenate([self._lab, lab])
+        self._alive = np.concatenate([self._alive, np.ones(lo.size, dtype=bool)])
+
+    def apply(self, batch: EdgeBatch) -> ApplyResult:
+        """Apply one insert/delete batch; bumps the epoch; feeds the index.
+
+        **Atomic**: the batch is validated in full (against ``degree_cap``,
+        on post-batch degrees) before any state mutates — a raising
+        ``apply`` leaves the store exactly as it was.
+        """
+        lo, hi, lab, ins = self._canonicalize(batch)
+        # ---- validate phase: plan every action, mutate nothing ------------
+        plan: list[tuple[int, int | None]] = []  # (record idx, row | None)
+        n_skip = 0
+        if self.degree_cap is not None:
+            ddelta: dict[int, int] = {}
+        for i in range(lo.size):
+            key = (int(lo[i]), int(hi[i]))
+            row = self._pos.get(key)
+            present = row is not None and self._alive[row]
+            if ins[i] == present:  # duplicate insert / missing delete
+                n_skip += 1
+                continue
+            plan.append((i, row))
+            if self.degree_cap is not None:
+                d = 1 if ins[i] else -1
+                ddelta[key[0]] = ddelta.get(key[0], 0) + d
+                ddelta[key[1]] = ddelta.get(key[1], 0) + d
+        if self.degree_cap is not None:
+            for vtx, d in ddelta.items():
+                if self._deg[vtx] + d > self.degree_cap:
+                    raise ValueError(
+                        f"batch would push vertex {vtx} to degree "
+                        f"{int(self._deg[vtx]) + d} > degree_cap="
+                        f"{self.degree_cap}; size the cap from the workload "
+                        "at store construction (store state is unchanged)"
+                    )
+        # ---- apply phase: no failure paths below ---------------------------
+        app_lo, app_hi, app_lab, app_ins = [], [], [], []
+        new_lo, new_hi, new_lab = [], [], []
+        n_ins = n_del = 0
+        for i, row in plan:
+            key = (int(lo[i]), int(hi[i]))
+            if ins[i]:
+                if row is not None:  # revive a dead row
+                    self._alive[row] = True
+                    self._lab[row] = lab[i]
+                else:
+                    new_lo.append(lo[i])
+                    new_hi.append(hi[i])
+                    new_lab.append(lab[i])
+                    self._pos[key] = self._alive.size + len(new_lo) - 1
+                self._deg[key[0]] += 1
+                self._deg[key[1]] += 1
+                n_ins += 1
+            else:
+                self._alive[row] = False
+                self._deg[key[0]] -= 1
+                self._deg[key[1]] -= 1
+                lab[i] = self._lab[row]  # report the label actually removed
+                n_del += 1
+            app_lo.append(lo[i])
+            app_hi.append(hi[i])
+            app_lab.append(lab[i])
+            app_ins.append(bool(ins[i]))
+        if new_lo:
+            self._append_rows(
+                np.asarray(new_lo, dtype=np.int64),
+                np.asarray(new_hi, dtype=np.int64),
+                np.asarray(new_lab, dtype=np.int64),
+            )
+        applied = EdgeBatch(
+            src=np.asarray(app_lo, dtype=np.int64),
+            dst=np.asarray(app_hi, dtype=np.int64),
+            elabels=np.asarray(app_lab, dtype=np.int64),
+            insert=np.asarray(app_ins, dtype=bool),
+            valid=np.ones(len(app_lo), dtype=bool),
+        )
+        self.epoch += 1
+        self._n_batches += 1
+        if self._index is not None and applied.src.size:
+            self._index.apply_batch(self, applied)
+        if self.compact_every and self._n_batches % self.compact_every == 0:
+            self.compact()
+        self._gc_snapshots()
+        return ApplyResult(self.epoch, applied, n_ins, n_del, n_skip)
+
+    def add_edges(self, edges, elabels=None) -> ApplyResult:
+        return self.apply(make_edge_batch(edges, elabels, insert=True))
+
+    def remove_edges(self, edges) -> ApplyResult:
+        return self.apply(make_edge_batch(edges, insert=False))
+
+    def compact(self) -> int:
+        """Drop dead rows from the edge table; returns rows reclaimed.
+
+        Pure storage maintenance: the logical edge set, the epoch, and the
+        attached index are unchanged (counts/digests depend only on the
+        alive set).
+        """
+        dead = int((~self._alive).sum())
+        if dead == 0:
+            return 0
+        keep = self._alive
+        self._lo = self._lo[keep]
+        self._hi = self._hi[keep]
+        self._lab = self._lab[keep]
+        self._alive = np.ones(self._lo.size, dtype=bool)
+        self._pos = {
+            (int(lo), int(hi)): i
+            for i, (lo, hi) in enumerate(zip(self._lo, self._hi))
+        }
+        self._n_compactions += 1
+        return dead
+
+    # -- snapshots -----------------------------------------------------------
+
+    def snapshot(self) -> GraphSnapshot:
+        """Immutable (graph, frozen index) view at the current epoch, cached."""
+        snap = self._snapshots.get(self.epoch)
+        if snap is None:
+            keep = self._alive
+            edges = np.stack([self._lo[keep], self._hi[keep]], axis=1)
+            g = build_graph(self.n_vertices, self.vlabels, edges,
+                            self._lab[keep])
+            idx = self._index.freeze() if self._index is not None else None
+            snap = GraphSnapshot(self.epoch, g, idx)
+            self._snapshots[self.epoch] = snap
+        return snap
+
+    def pin(self, epoch: int | None = None) -> GraphSnapshot:
+        """Snapshot + refcount: the epoch survives ``_gc_snapshots`` until a
+        matching ``release``.  Serving pins each query's admit-time epoch."""
+        snap = self.snapshot() if epoch is None else self._snapshots[epoch]
+        self._pins[snap.epoch] = self._pins.get(snap.epoch, 0) + 1
+        return snap
+
+    def release(self, epoch: int) -> None:
+        n = self._pins.get(epoch, 0) - 1
+        if n <= 0:
+            self._pins.pop(epoch, None)
+        else:
+            self._pins[epoch] = n
+        self._gc_snapshots()
+
+    def _gc_snapshots(self) -> None:
+        for ep in list(self._snapshots):
+            if ep != self.epoch and self._pins.get(ep, 0) <= 0:
+                del self._snapshots[ep]
+
+    # -- inspection ----------------------------------------------------------
+
+    @property
+    def n_edges(self) -> int:
+        return int(self._alive.sum())
+
+    @property
+    def max_degree(self) -> int:
+        return int(self._deg.max()) if self._deg.size else 0
+
+    def degrees(self) -> np.ndarray:
+        return self._deg.copy()
+
+    def has_edge(self, u: int, v: int) -> bool:
+        row = self._pos.get((min(u, v), max(u, v)))
+        return row is not None and bool(self._alive[row])
+
+    def stats(self) -> StoreStats:
+        return StoreStats(
+            epoch=self.epoch,
+            n_vertices=self.n_vertices,
+            n_edges_alive=self.n_edges,
+            n_edges_dead=int((~self._alive).sum()),
+            n_batches_applied=self._n_batches,
+            n_compactions=self._n_compactions,
+            n_snapshots_cached=len(self._snapshots),
+        )
+
+
+def as_snapshot(data) -> GraphSnapshot:
+    """Normalize Graph | GraphStore | GraphSnapshot -> GraphSnapshot.
+
+    The engines' single entry point for accepting any graph-like input:
+    a plain Graph becomes an epoch-0 snapshot with no index.
+    """
+    if isinstance(data, GraphSnapshot):
+        return data
+    if isinstance(data, GraphStore):
+        return data.snapshot()
+    if isinstance(data, Graph):
+        return GraphSnapshot(0, data, None)
+    raise TypeError(f"expected Graph | GraphStore | GraphSnapshot, got {type(data)}")

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused count-delta apply + CNI digest re-encode.
+
+The incremental-maintenance hot loop (core/incremental.py): after an edge
+batch, only the *touched-vertex frontier* needs new digests.  The host
+gathers the frontier's count rows and the batch's per-row count deltas; the
+kernel fuses the scatter-add (``rows + delta``) with the digest re-encode so
+updated counts never round-trip through HBM between the two steps.
+
+Tiling mirrors cni_encode: the frontier dimension is blocked into
+VMEM-resident (BF × L) tiles; the (D_max+1 × max_p+1) log-ħ table rides
+along in VMEM.  Everything inside the tile is dense VPU work: the add, a
+descending cumulative-sum label expansion, a prefix sum, a table gather, and
+a streaming logsumexp.
+
+TPU adaptation notes (DESIGN.md §3): the exact two-limb integer digests are
+maintained host-side (no 64-bit integer datapath on TPU); the kernel
+maintains the *log-space* digest (f32) the candidate-filter fast path
+compares with ε tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cni_update_kernel(
+    rows_ref,     # (BF, L) int32 — frontier count rows (pre-update)
+    delta_ref,    # (BF, L) int32 — per-row count deltas (±)
+    table_ref,    # (D+1, P+1) f32 log ħ
+    out_rows_ref,  # (BF, L) int32 — updated count rows
+    out_log_ref,  # (BF,) f32
+    out_deg_ref,  # (BF,) int32
+    *,
+    d_max: int,
+    max_p: int,
+):
+    counts = rows_ref[...] + delta_ref[...]
+    out_rows_ref[...] = counts
+    bf, L = counts.shape
+    desc = counts[:, ::-1]
+    ccum = jnp.cumsum(desc, axis=-1)  # (BF, L)
+    deg = ccum[:, -1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bf, d_max), 1)
+    # label at position j = L - #(ccum <= j); O(BF*D*L) VPU compares
+    idx = jnp.sum(
+        (ccum[:, None, :] <= pos[:, :, None]).astype(jnp.int32), axis=-1
+    )
+    lab = jnp.maximum(L - idx, 0)
+    valid = pos < deg[:, None]
+    lab = jnp.where(valid, lab, 0)
+    prefix = jnp.cumsum(lab, axis=-1)
+    p = jnp.clip(prefix, 0, max_p)
+    q = jax.lax.broadcasted_iota(jnp.int32, (bf, d_max), 1) + 1
+    terms = table_ref[q, p]  # (BF, D) gather
+    neg_inf = jnp.float32(-jnp.inf)
+    terms = jnp.where(valid, terms, neg_inf)
+    m = jnp.max(terms, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    s = jnp.sum(jnp.where(valid, jnp.exp(terms - m_safe[:, None]), 0.0), axis=-1)
+    out = m_safe + jnp.log(jnp.maximum(s, 1e-30))
+    out_log_ref[...] = jnp.where(deg > 0, out, neg_inf)
+    out_deg_ref[...] = deg.astype(jnp.int32)
+
+
+def cni_update_pallas(
+    rows: jnp.ndarray,
+    delta: jnp.ndarray,
+    log_table: jnp.ndarray,
+    *,
+    d_max: int,
+    max_p: int,
+    block_f: int = 256,
+    interpret: bool = False,
+):
+    """rows/delta (F, L) int32 -> (new_rows (F, L) int32, cni_log (F,) f32,
+    deg (F,) int32).  F must be a multiple of block_f (the wrapper pads)."""
+    f, L = rows.shape
+    assert f % block_f == 0
+    grid = (f // block_f,)
+    kernel = functools.partial(_cni_update_kernel, d_max=d_max, max_p=max_p)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_f, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_f, L), lambda i: (i, 0)),
+            pl.BlockSpec(log_table.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_f, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+            pl.BlockSpec((block_f,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, L), jnp.int32),
+            jax.ShapeDtypeStruct((f,), jnp.float32),
+            jax.ShapeDtypeStruct((f,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, delta, log_table)

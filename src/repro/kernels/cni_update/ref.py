@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the cni_update kernel: apply count deltas, then
+re-encode the log-space CNI digests.  Delegates the encode to the core
+implementation (itself validated against the arbitrary-precision host oracle
+in tests/test_cni.py)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cni import cni_log_from_counts
+
+
+def cni_update_ref(rows: jnp.ndarray, delta: jnp.ndarray, d_max: int,
+                   max_p: int):
+    """rows/delta: (F, L) int32 -> (new_rows, cni_log (F,), deg (F,))."""
+    new_rows = rows + delta
+    deg = new_rows.sum(axis=-1).astype(jnp.int32)
+    return new_rows, cni_log_from_counts(new_rows, d_max, max_p), deg

@@ -1,9 +1,14 @@
 from repro.serve.engine import ServeEngine, ServeConfig
-from repro.serve.graph_service import GraphQueryService, GraphServiceConfig
+from repro.serve.graph_service import (
+    CancelledRequest,
+    GraphQueryService,
+    GraphServiceConfig,
+)
 
 __all__ = [
     "ServeEngine",
     "ServeConfig",
+    "CancelledRequest",
     "GraphQueryService",
     "GraphServiceConfig",
 ]

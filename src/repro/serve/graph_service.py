@@ -1,31 +1,41 @@
-"""Request-queue front-end for subgraph queries: slot-scheduled batched ILGF.
+"""Request-queue front-end for subgraph queries over a *mutable* graph.
 
 Modeled on the continuous-batching slot scheduler in serve/engine.py: a fixed
 pool of ``max_slots`` query slots with *static* padded shapes
-``(S, V)`` / ``(S, U_cap, L_cap)``, so the whole service runs on exactly one
-jit trace of ``batched_ilgf_round``:
+``(S, V)`` / ``(S, U_cap, L_cap)``, so the whole service runs on a handful of
+jit traces of ``batched_ilgf_round``:
 
 * ``submit`` enqueues a query; ``_admit`` moves queued queries into free
   slots (building their padded digest rows and splicing them into the slot
-  arrays with ``.at[slot].set``).
-* ``tick()`` = **one batched ILGF peeling round** across all slots.  A slot
-  whose alive mask did not change has reached its fixed point — its
-  candidate columns are final, so the (host-side, per-query) search runs,
-  the result is emitted, and the slot frees immediately for the next queued
-  query (continuous batching: queries at different peeling depths coexist
-  in one round dispatch).
-* Inert slots hold all-zero ords (empty alive set), contributing no work.
+  arrays with ``.at[slot].set``).  When the backing ``GraphStore`` carries an
+  incremental index, the slot's starting alive mask is the store-digest
+  prefilter — the maintained counts/CNIs replace the first peeling round.
+* ``tick()`` = one batched ILGF peeling round **per distinct pinned epoch**
+  among the active slots (normally one).  A slot whose alive mask did not
+  change has reached its fixed point — its candidate columns are final, so
+  the (host-side, per-query) search runs, the result is emitted, and the
+  slot frees immediately for the next queued query.
+* ``add_edges`` / ``remove_edges`` mutate the store *between* ticks.  Each
+  in-flight request is pinned to the snapshot epoch it was admitted on:
+  its rounds, candidates, and search all run against that immutable
+  snapshot, so results are exactly the fixed point of the graph the query
+  started on — no torn reads while the graph churns underneath.  Newly
+  admitted queries pin the latest epoch.  Snapshots are refcounted and
+  released when their last pinned query finishes.
+* ``shutdown()`` drains (or cancels) active slots and **reports every
+  queued-but-unstarted request as cancelled** — nothing is silently
+  dropped.
 
 This is the serving analogue of the ROADMAP north star: many concurrent
-user queries amortize one fused device dispatch per round, with per-query
-latency bounded by its own peeling depth rather than the batch's.
+user queries amortize one fused device dispatch per round while the data
+graph takes live updates.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +50,7 @@ from repro.core.batch_engine import (
 from repro.core.cni import CniValue, default_max_p
 from repro.core.engine import QueryStats, search_filtered
 from repro.graphs.csr import Graph, max_degree, to_host
+from repro.graphs.store import GraphSnapshot, GraphStore, as_snapshot
 
 
 from repro.configs.cni_engine import CONFIG as _ENGINE_CONFIG
@@ -68,21 +79,54 @@ class _Request:
     submitted_at: float
     rounds: int = 0
     slot: int = -1
+    epoch: int = -1
+
+
+class CancelledRequest(NamedTuple):
+    """A request the service gave up on — reported, never silently dropped."""
+
+    rid: int
+    reason: str
+    queued_seconds: float
+
+
+class _EpochEntry(NamedTuple):
+    snapshot: GraphSnapshot
+    host_graph: Graph  # numpy-backed twin for the search side
 
 
 class GraphQueryService:
-    """Continuous-batching subgraph-query service over one data graph."""
+    """Continuous-batching subgraph-query service over one mutable graph.
 
-    def __init__(self, data: Graph, cfg: GraphServiceConfig | None = None):
-        self.data = data
-        self._host_data = to_host(data)  # search side re-reads fields often
+    ``data`` may be a ``Graph`` (static service, mutations raise), a
+    ``GraphStore`` (live updates via ``add_edges``/``remove_edges``), or a
+    ``GraphSnapshot``.
+    """
+
+    def __init__(self, data, cfg: GraphServiceConfig | None = None):
+        self.store: GraphStore | None = (
+            data if isinstance(data, GraphStore) else None
+        )
+        snap = as_snapshot(data)
+        self.data = snap.graph
         self.cfg = cfg or GraphServiceConfig()
-        self.d_max = max(1, max_degree(data))
+        if self.store is not None and self.store.degree_cap is not None:
+            self.d_max = int(self.store.degree_cap)
+        else:
+            self.d_max = max(1, max_degree(snap.graph))
+            if self.store is not None:
+                # impose the service's static table bound as the store's
+                # degree_cap: apply() then rejects over-cap batches
+                # *atomically*, before any state mutates — an uncapped store
+                # could otherwise commit an update the slot shapes can't
+                # encode soundly
+                self.store.degree_cap = self.d_max
         self.max_p = default_max_p(self.d_max, self.cfg.max_query_labels)
         s = self.cfg.max_slots
         u = self.cfg.max_query_vertices
         l = self.cfg.max_query_labels
-        v = data.n_vertices
+        v = snap.graph.n_vertices
+        self.n_vertices = v
         self._ords = jnp.zeros((s, v), jnp.int32)
         self._counts = jnp.zeros((s, u, l), jnp.int32)
         self._digest = flt.VertexDigest(
@@ -99,6 +143,36 @@ class GraphQueryService:
         self.active: list[Optional[_Request]] = [None] * s
         self.queue: list[_Request] = []
         self._rid = 0
+        self._epochs: dict[int, _EpochEntry] = {}
+        self._shutting_down = False
+        self._cache_epoch(snap)
+
+    # -- epoch/snapshot management -------------------------------------------
+
+    def _cache_epoch(self, snap: GraphSnapshot) -> _EpochEntry:
+        entry = self._epochs.get(snap.epoch)
+        if entry is None:
+            entry = _EpochEntry(snapshot=snap, host_graph=to_host(snap.graph))
+            self._epochs[snap.epoch] = entry
+        return entry
+
+    def _pin_current(self) -> _EpochEntry:
+        if self.store is not None:
+            return self._cache_epoch(self.store.pin())
+        return self._epochs[min(self._epochs)]
+
+    def _release_epoch(self, epoch: int) -> None:
+        if self.store is None:
+            return
+        self.store.release(epoch)
+        self._gc_epochs()
+
+    def _gc_epochs(self) -> None:
+        """Drop cached epochs no in-flight request pins (keep the latest)."""
+        pinned = {r.epoch for r in self.active if r is not None}
+        for ep in list(self._epochs):
+            if ep not in pinned and ep != self.epoch:
+                self._epochs.pop(ep)
 
     # -- public API ----------------------------------------------------------
 
@@ -110,6 +184,8 @@ class GraphQueryService:
         the caps from the workload, or route oversize queries to a
         ``BatchQueryEngine`` with per-bucket shapes.
         """
+        if self._shutting_down:
+            raise RuntimeError("service is shut down; no new submissions")
         query = to_host(query)
         n_labels = int(np.unique(query.vlabels).size)
         if query.n_vertices > self.cfg.max_query_vertices:
@@ -128,33 +204,79 @@ class GraphQueryService:
         )
         return self._rid
 
+    def add_edges(self, edges, elabels=None):
+        """Insert edges into the backing store (between ticks).
+
+        In-flight queries keep filtering against their pinned epochs; only
+        queries admitted after this call see the new edges.
+        """
+        return self._mutate("add_edges", edges, elabels)
+
+    def remove_edges(self, edges):
+        """Delete edges from the backing store (between ticks)."""
+        return self._mutate("remove_edges", edges)
+
+    def _mutate(self, op: str, edges, elabels=None):
+        if self.store is None:
+            raise RuntimeError(
+                "service was constructed from an immutable Graph; build it "
+                "from a GraphStore to take live updates"
+            )
+        if op == "add_edges":
+            res = self.store.add_edges(edges, elabels)
+        else:
+            res = self.store.remove_edges(edges)
+        # unreachable when degree_cap <= d_max (apply validates atomically);
+        # guards a store whose cap was widened behind the service's back
+        assert self.store.max_degree <= self.d_max, (
+            f"store max degree {self.store.max_degree} exceeds the service's "
+            f"static d_max={self.d_max}"
+        )
+        self._gc_epochs()
+        return res
+
     def tick(self) -> list[tuple[int, np.ndarray, QueryStats]]:
-        """One scheduler step = one batched peeling round.
+        """One scheduler step = one batched peeling round per pinned epoch.
 
         Returns finished (rid, embeddings, stats) triples (possibly empty).
+        Normally all active slots share one epoch (one fused dispatch);
+        after a mutation, old and new queries coexist on their own epochs
+        until the old ones drain.
         """
         self._admit()
         live = [r for r in self.active if r is not None]
         if not live:
             return []
-        qb = BatchedQueries(
-            ords=self._ords, counts=self._counts,
-            digest=self._digest, mnd=self._mnd,
-        )
-        new_alive, cand, changed = batched_ilgf_round(
-            self.data, qb, self._alive,
-            n_labels=self.cfg.max_query_labels,
-            d_max=self.d_max, max_p=self.max_p,
-            variant=self.cfg.filter_variant,
-        )
-        converged = ~np.asarray(changed)
-        self._alive = new_alive
         finished = []
-        for req in live:
-            req.rounds += 1
-            if converged[req.slot] or req.rounds >= self.cfg.max_rounds_per_query:
-                finished.append(self._finalize(req, new_alive, cand))
-                self._free(req.slot)
+        alive_merged = self._alive
+        for epoch in sorted({r.epoch for r in live}):
+            group = [r for r in live if r.epoch == epoch]
+            mask_np = np.zeros(self.cfg.max_slots, bool)
+            for r in group:
+                mask_np[r.slot] = True
+            mask = jnp.asarray(mask_np)
+            # slots outside this epoch group are made inert for the dispatch
+            # (zero ords ⇒ empty alive ⇒ no work), so one trace serves all
+            qb = BatchedQueries(
+                ords=jnp.where(mask[:, None], self._ords, 0),
+                counts=self._counts, digest=self._digest, mnd=self._mnd,
+            )
+            new_alive, cand, changed = batched_ilgf_round(
+                self._epochs[epoch].snapshot.graph, qb,
+                self._alive & mask[:, None],
+                n_labels=self.cfg.max_query_labels,
+                d_max=self.d_max, max_p=self.max_p,
+                variant=self.cfg.filter_variant,
+            )
+            converged = ~np.asarray(changed)
+            alive_merged = jnp.where(mask[:, None], new_alive, alive_merged)
+            for req in group:
+                req.rounds += 1
+                if (converged[req.slot]
+                        or req.rounds >= self.cfg.max_rounds_per_query):
+                    finished.append(self._finalize(req, new_alive, cand))
+                    self._free(req.slot)
+        self._alive = alive_merged
         return finished
 
     def run_to_completion(self, max_ticks: int = 100_000):
@@ -166,22 +288,72 @@ class GraphQueryService:
                 break
         return done
 
+    def shutdown(self, *, drain: bool = True, max_ticks: int = 100_000):
+        """Stop the service: returns ``(finished, cancelled)``.
+
+        ``drain=True`` finishes every already-admitted (in-slot) query
+        first; queued-but-unstarted requests are *always* cancelled and
+        reported — never silently dropped.  ``drain=False`` also cancels
+        the in-flight slots.  ``submit`` raises afterwards.
+        """
+        self._shutting_down = True  # _admit is disabled from here on
+        finished: list = []
+        cancelled: list[CancelledRequest] = []
+        now = time.perf_counter()
+        if drain:
+            for _ in range(max_ticks):
+                if all(a is None for a in self.active):
+                    break
+                finished.extend(self.tick())
+        else:
+            for req in [r for r in self.active if r is not None]:
+                cancelled.append(CancelledRequest(
+                    req.rid, "shutdown before completion",
+                    now - req.submitted_at,
+                ))
+                self._free(req.slot)
+        for req in self.queue:
+            cancelled.append(CancelledRequest(
+                req.rid, "shutdown before admission",
+                now - req.submitted_at,
+            ))
+        self.queue.clear()
+        return finished, cancelled
+
     @property
     def n_active(self) -> int:
         return sum(a is not None for a in self.active)
 
+    @property
+    def epoch(self) -> int:
+        return self.store.epoch if self.store is not None else 0
+
     # -- internals -----------------------------------------------------------
 
     def _admit(self):
+        if self._shutting_down:
+            return
         for slot in range(self.cfg.max_slots):
             if self.active[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 req.slot = slot
+                entry = self._pin_current()
+                req.epoch = entry.snapshot.epoch
                 self.active[slot] = req
                 ords, counts, digest, mnd = prepare_padded_query(
-                    req.query, self._host_data.vlabels, self.d_max, self.max_p,
-                    self.cfg.max_query_vertices, self.cfg.max_query_labels,
+                    req.query, entry.host_graph.vlabels, self.d_max,
+                    self.max_p, self.cfg.max_query_vertices,
+                    self.cfg.max_query_labels,
                 )
+                alive_row = ords > 0
+                if entry.snapshot.index is not None:
+                    # maintained store digests stand in for round one
+                    from repro.core.incremental import store_prefilter
+
+                    alive_row = alive_row & store_prefilter(
+                        entry.snapshot.index, req.query,
+                        variant=self.cfg.filter_variant,
+                    )
                 self._ords = self._ords.at[slot].set(ords)
                 self._counts = self._counts.at[slot].set(counts)
                 self._digest = jax.tree_util.tree_map(
@@ -189,22 +361,24 @@ class GraphQueryService:
                     self._digest, digest,
                 )
                 self._mnd = self._mnd.at[slot].set(mnd)
-                self._alive = self._alive.at[slot].set(ords > 0)
+                self._alive = self._alive.at[slot].set(jnp.asarray(alive_row))
 
     def _finalize(self, req: _Request, alive, cand):
         u_q = req.query.n_vertices
         alive_np = np.asarray(alive[req.slot])
         cand_np = np.asarray(cand[req.slot])[:, :u_q]
         stats = QueryStats(
-            vertices_before=self.data.n_vertices,
+            vertices_before=self.n_vertices,
             ilgf_iterations=req.rounds,
         )
         stats.extras["service"] = {
             "slot": req.slot,
+            "epoch": req.epoch,
             "queue_seconds": time.perf_counter() - req.submitted_at,
         }
         emb = search_filtered(
-            self._host_data, req.query, alive_np, cand_np, stats,
+            self._epochs[req.epoch].host_graph, req.query, alive_np, cand_np,
+            stats,
             khop=self.cfg.khop,
             searcher=self.cfg.searcher,
             search_vertex_cap=self.cfg.search_vertex_cap,
@@ -213,6 +387,9 @@ class GraphQueryService:
         return req.rid, emb, stats
 
     def _free(self, slot: int):
+        req = self.active[slot]
         self.active[slot] = None
+        if req is not None and req.epoch >= 0:
+            self._release_epoch(req.epoch)
         self._ords = self._ords.at[slot].set(0)
         self._alive = self._alive.at[slot].set(False)

@@ -1,0 +1,500 @@
+"""Dynamic-graph store + incrementally-maintained CNI index.
+
+The load-bearing property: after ANY applied insert/delete batch sequence,
+the incrementally-maintained index state (counts, degrees, exact-limb CNI,
+log CNI) is **bit-identical** to a from-scratch rebuild at the same epoch —
+including across the saturation boundary, where deletes must take the
+tracked recompute fallback.  On top of that: epoch-snapshot isolation under
+concurrent service ticks, engine parity between store snapshots and fresh
+graphs, and the shutdown/drain cancellation report.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SubgraphQueryEngine
+from repro.core.cni import LOG_SAT64, SAT64
+from repro.core.incremental import IncrementalIndex, store_prefilter
+from repro.graphs import (
+    GraphStore,
+    as_snapshot,
+    make_edge_batch,
+    random_labeled_graph,
+    random_update_batches,
+    random_walk_query,
+)
+from repro.graphs.store import EdgeBatch
+
+
+def _fresh_index_like(idx: IncrementalIndex, store: GraphStore):
+    ref = IncrementalIndex(d_max=idx.d_max)
+    ref.rebuild(store)
+    return ref
+
+
+def _assert_index_equal(idx: IncrementalIndex, ref: IncrementalIndex):
+    np.testing.assert_array_equal(idx.counts, ref.counts)
+    np.testing.assert_array_equal(idx.deg, ref.deg)
+    np.testing.assert_array_equal(idx.cni_u64, ref.cni_u64)
+    np.testing.assert_array_equal(idx.cni_log, ref.cni_log)
+
+
+def _embedding_set(emb):
+    return {tuple(r) for r in np.asarray(emb).tolist()}
+
+
+# ---------------------------------------------------------------------------
+# incremental == from-scratch
+# ---------------------------------------------------------------------------
+
+
+class TestIncrementalEqualsScratch:
+    def test_random_insert_delete_sequence(self):
+        g = random_labeled_graph(96, 260, 6, n_edge_labels=2, seed=0)
+        store = GraphStore.from_graph(g, compact_every=3)
+        store.attach_index(IncrementalIndex())
+        idx = store.index
+        for i, batch in enumerate(
+            random_update_batches(store, 8, 24, delete_frac=0.45, seed=7)
+        ):
+            store.apply(batch)
+            _assert_index_equal(idx, _fresh_index_like(idx, store))
+        assert idx.stats.edges_inserted > 0
+        assert idx.stats.edges_deleted > 0
+
+    def test_duplicate_insert_and_missing_delete_are_noops(self):
+        g = random_labeled_graph(40, 90, 4, seed=1)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        before = store.index.freeze()
+        src = int(np.asarray(g.src)[0])
+        dst = int(np.asarray(g.dst)[0])
+        res = store.add_edges([[src, dst]])  # already present
+        assert res.n_skipped == 1 and res.n_inserted == 0
+        res = store.remove_edges([[38, 39]] if not store.has_edge(38, 39)
+                                 else [[0, 0]])
+        assert res.n_deleted == 0
+        after = store.index.freeze()
+        np.testing.assert_array_equal(before.counts, after.counts)
+        np.testing.assert_array_equal(before.cni_u64, after.cni_u64)
+
+    def test_compaction_preserves_logical_state(self):
+        g = random_labeled_graph(60, 150, 5, seed=2)
+        store = GraphStore.from_graph(g, compact_every=0)  # manual compaction
+        store.attach_index(IncrementalIndex())
+        for batch in random_update_batches(store, 4, 16, delete_frac=0.6,
+                                           seed=3):
+            store.apply(batch)
+        edges_before = store.n_edges
+        snap_before = store.snapshot()
+        reclaimed = store.compact()
+        assert reclaimed > 0
+        assert store.n_edges == edges_before
+        snap_after = store.snapshot()
+
+        def edge_set(gr):
+            return set(zip(np.asarray(gr.src).tolist(),
+                           np.asarray(gr.dst).tolist()))
+
+        assert edge_set(snap_before.graph) == edge_set(snap_after.graph)
+        _assert_index_equal(store.index,
+                            _fresh_index_like(store.index, store))
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(
+        st.tuples(st.integers(0, 29), st.integers(0, 29), st.booleans()),
+        min_size=1, max_size=40,
+    ))
+    def test_property_any_op_sequence(self, ops):
+        g = random_labeled_graph(30, 60, 3, seed=4)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        recs = [(a, b, 0, ins) for a, b, ins in ops if a != b]
+        if not recs:
+            return
+        arr = np.asarray([r[:3] for r in recs], dtype=np.int64)
+        batch = EdgeBatch(
+            src=arr[:, 0], dst=arr[:, 1], elabels=arr[:, 2],
+            insert=np.asarray([r[3] for r in recs], dtype=bool),
+            valid=np.ones(len(recs), dtype=bool),
+        )
+        store.apply(batch)
+        _assert_index_equal(store.index,
+                            _fresh_index_like(store.index, store))
+
+
+# ---------------------------------------------------------------------------
+# saturation boundary
+# ---------------------------------------------------------------------------
+
+
+class TestSaturationBoundary:
+    def _star_store(self, n_leaves: int = 39):
+        """Star center whose CNI saturates (high-ord leaves, deep prefix)."""
+        n = 64
+        vlab = np.zeros(n, np.int64)
+        vlab[1:] = 2
+        store = GraphStore(n, vlab)
+        store.attach_index(IncrementalIndex(d_max=64))
+        store.add_edges([[0, i] for i in range(1, 1 + n_leaves)])
+        return store
+
+    def test_center_saturates_with_canonical_log(self):
+        store = self._star_store()
+        idx = store.index
+        assert idx.cni_u64[0] == SAT64
+        assert idx.cni_log[0] == np.float32(LOG_SAT64)
+
+    def test_insert_onto_saturated_is_skipped_and_exact(self):
+        store = self._star_store()
+        idx = store.index
+        skips0 = idx.stats.saturated_skips
+        store.add_edges([[0, 50], [0, 51]])
+        assert idx.stats.saturated_skips == skips0 + 1  # center skipped once
+        _assert_index_equal(idx, _fresh_index_like(idx, store))
+
+    def test_saturated_delete_takes_recompute_fallback(self):
+        store = self._star_store()
+        idx = store.index
+        rec0 = idx.stats.saturated_recomputes
+        store.remove_edges([[0, 1]])
+        assert idx.stats.saturated_recomputes == rec0 + 1
+        _assert_index_equal(idx, _fresh_index_like(idx, store))
+
+    def test_delete_across_saturation_boundary_restores_exact(self):
+        store = self._star_store()
+        idx = store.index
+        # delete leaves one at a time all the way down — every intermediate
+        # state must equal a scratch rebuild (the boundary crossing is the
+        # regression trap: sticky saturation must not leak below SAT)
+        for leaf in range(1, 40):
+            store.remove_edges([[0, leaf]])
+            _assert_index_equal(idx, _fresh_index_like(idx, store))
+        assert idx.cni_u64[0] == 0
+        assert idx.stats.saturated_recomputes > 0
+
+    def test_d_max_autogrowth_rebuild(self):
+        n = 32
+        vlab = np.zeros(n, np.int64)
+        store = GraphStore(n, vlab)
+        store.attach_index(IncrementalIndex(d_max=4))
+        idx = store.index
+        store.add_edges([[0, i] for i in range(1, 9)])  # degree 8 > 4
+        assert idx.stats.full_rebuilds == 1
+        assert idx.d_max >= 8
+        _assert_index_equal(idx, _fresh_index_like(idx, store))
+
+    def test_degree_cap_enforced(self):
+        n = 16
+        store = GraphStore(n, np.zeros(n, np.int64), degree_cap=3)
+        store.add_edges([[0, 1], [0, 2], [0, 3]])
+        with pytest.raises(ValueError, match="degree_cap"):
+            store.add_edges([[0, 4]])
+
+    def test_apply_is_atomic_on_degree_cap_violation(self):
+        """A rejected batch must leave the store byte-identical: no
+        half-applied degrees, no phantom _pos rows, epoch unchanged."""
+        store = GraphStore(4, np.asarray([0, 1, 0, 1]), degree_cap=1)
+        store.attach_index(IncrementalIndex(d_max=4))
+        frozen = store.index.freeze()
+        with pytest.raises(ValueError, match="degree_cap"):
+            store.add_edges([[0, 1], [2, 3], [0, 2]])  # third violates
+        assert store.epoch == 0
+        assert store.n_edges == 0
+        assert not store.has_edge(0, 1)
+        np.testing.assert_array_equal(store.degrees(), np.zeros(4))
+        np.testing.assert_array_equal(store.index.counts, frozen.counts)
+        # the store still works after the rejected batch
+        res = store.add_edges([[0, 1], [2, 3]])
+        assert res.n_inserted == 2
+        _assert_index_equal(store.index,
+                            _fresh_index_like(store.index, store))
+
+    def test_degree_cap_checks_post_batch_degrees(self):
+        """Deletes offset inserts within one atomic batch."""
+        store = GraphStore(8, np.zeros(8, np.int64), degree_cap=2)
+        store.add_edges([[0, 1], [0, 2]])
+        batch = make_edge_batch(
+            [[0, 1], [0, 3]], insert=np.asarray([False, True])
+        )
+        res = store.apply(batch)  # degree(0) stays 2: allowed
+        assert res.n_inserted == 1 and res.n_deleted == 1
+        assert store.has_edge(0, 3) and not store.has_edge(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# engines served from store snapshots
+# ---------------------------------------------------------------------------
+
+
+class TestStoreServing:
+    def test_engine_parity_snapshot_vs_fresh_graph(self):
+        g = random_labeled_graph(110, 300, 6, n_edge_labels=2, seed=5)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        for batch in random_update_batches(store, 3, 20, delete_frac=0.3,
+                                           seed=6):
+            store.apply(batch)
+        snap = store.snapshot()
+        fresh = SubgraphQueryEngine(snap.graph)   # no index: scratch filters
+        stored = SubgraphQueryEngine(store)       # store digests seed ILGF
+        for s in range(4):
+            q = random_walk_query(snap.graph, 6, seed=40 + s)
+            emb_f, _ = fresh.query(q)
+            emb_s, st = stored.query(q)
+            assert _embedding_set(emb_f) == _embedding_set(emb_s)
+            assert "store_prefilter_alive" in st.extras
+
+    def test_batch_engine_parity_on_store(self):
+        from repro.core import BatchQueryEngine
+
+        g = random_labeled_graph(90, 240, 5, n_edge_labels=2, seed=8)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        store.apply(random_update_batches(store, 1, 30, seed=9)[0])
+        snap = store.snapshot()
+        queries = [random_walk_query(snap.graph, 5, seed=60 + i)
+                   for i in range(6)]
+        seq = SubgraphQueryEngine(snap.graph)
+        eng = BatchQueryEngine(store, max_batch=4)
+        batched = eng.query_batch(queries)
+        for q, (emb_b, _) in zip(queries, batched):
+            emb_s, _ = seq.query(q)
+            assert _embedding_set(emb_s) == _embedding_set(emb_b)
+
+    def test_prefilter_is_sound_superset_of_fixed_point(self):
+        from repro.core.ilgf import ilgf
+
+        g = random_labeled_graph(80, 220, 5, seed=10)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        snap = store.snapshot()
+        for s in range(3):
+            q = random_walk_query(snap.graph, 5, seed=70 + s)
+            pre = store_prefilter(snap.index, q)
+            fixed = np.asarray(ilgf(snap.graph, q).alive)
+            assert not (fixed & ~pre).any()  # prefilter never loses a survivor
+
+
+# ---------------------------------------------------------------------------
+# epoch-snapshot isolation under concurrent query ticks
+# ---------------------------------------------------------------------------
+
+
+class TestEpochIsolation:
+    def _service(self, store, slots=2):
+        from repro.serve import GraphQueryService, GraphServiceConfig
+
+        return GraphQueryService(
+            store,
+            GraphServiceConfig(max_slots=slots, max_query_vertices=8,
+                               max_query_labels=8),
+        )
+
+    def test_inflight_queries_pin_admit_epoch(self):
+        g = random_labeled_graph(90, 240, 5, seed=11)
+        store = GraphStore.from_graph(g, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        svc = self._service(store, slots=2)
+        queries = [random_walk_query(g, 5, seed=80 + i) for i in range(4)]
+        rids = [svc.submit(q) for q in queries]
+        svc.tick()  # admits the first two on epoch 0
+        epoch0_snap = store.snapshot()
+        # heavy mutation between ticks
+        svc.add_edges([[i, (i + 7) % 90] for i in range(0, 40, 2)])
+        svc.remove_edges([[int(a), int(b)] for a, b in
+                          zip(np.asarray(g.src)[:10], np.asarray(g.dst)[:10])])
+        done = {rid: (emb, st) for rid, emb, st in svc.run_to_completion()}
+        assert sorted(done) == sorted(rids)
+        # every result equals the sequential engine on its *pinned* snapshot
+        for rid, q in zip(rids, queries):
+            emb, st = done[rid]
+            ep = st.extras["service"]["epoch"]
+            pinned_graph = (epoch0_snap.graph if ep == 0
+                            else store.snapshot().graph)
+            ref_emb, _ = SubgraphQueryEngine(pinned_graph).query(q)
+            assert _embedding_set(emb) == _embedding_set(ref_emb), (
+                f"rid {rid} (epoch {ep}) diverged from its pinned snapshot"
+            )
+
+    def test_snapshots_released_after_drain(self):
+        g = random_labeled_graph(60, 150, 4, seed=12)
+        store = GraphStore.from_graph(g, degree_cap=64)
+        svc = self._service(store)
+        for i in range(3):
+            svc.submit(random_walk_query(g, 4, seed=90 + i))
+            svc.tick()
+            svc.add_edges([[i, i + 30]])
+        svc.run_to_completion()
+        assert all(a is None for a in svc.active)
+        # only the latest epoch may remain cached
+        assert set(svc._epochs) <= {store.epoch}
+
+    def test_mutation_requires_store(self):
+        g = random_labeled_graph(40, 80, 4, seed=13)
+        svc = self._service(as_snapshot(g).graph)
+        with pytest.raises(RuntimeError, match="GraphStore"):
+            svc.add_edges([[0, 1]])
+
+    def test_over_cap_mutation_rejected_before_commit(self):
+        """A service on an uncapped store imposes its static d_max as the
+        store's degree_cap, so an over-cap update raises with NOTHING
+        committed — no epoch bump, no index change, no silently-truncated
+        digests for later queries."""
+        g = random_labeled_graph(60, 150, 4, seed=30)
+        store = GraphStore.from_graph(g)  # no degree_cap
+        store.attach_index(IncrementalIndex())
+        svc = self._service(store)
+        assert store.degree_cap == svc.d_max
+        epoch0 = store.epoch
+        hub = int(np.argmax(store.degrees()))
+        others = [v for v in range(60) if v != hub
+                  and not store.has_edge(hub, v)]
+        with pytest.raises(ValueError, match="degree_cap"):
+            svc.add_edges([[hub, v] for v in others])
+        assert store.epoch == epoch0          # nothing committed
+        assert store.max_degree <= svc.d_max
+        # service still serves correct results afterwards
+        q = random_walk_query(g, 4, seed=31)
+        svc.submit(q)
+        done = svc.run_to_completion()
+        ref, _ = SubgraphQueryEngine(store.snapshot().graph).query(q)
+        assert _embedding_set(done[0][1]) == _embedding_set(ref)
+
+
+# ---------------------------------------------------------------------------
+# shutdown / drain reporting
+# ---------------------------------------------------------------------------
+
+
+class TestShutdownDrain:
+    def _setup(self, slots=1, n_queries=4):
+        from repro.serve import GraphQueryService, GraphServiceConfig
+
+        g = random_labeled_graph(70, 180, 4, seed=14)
+        svc = GraphQueryService(
+            g, GraphServiceConfig(max_slots=slots, max_query_vertices=8,
+                                  max_query_labels=8),
+        )
+        rids = [svc.submit(random_walk_query(g, 4, seed=100 + i))
+                for i in range(n_queries)]
+        return svc, rids
+
+    def test_drain_finishes_active_and_cancels_queued(self):
+        svc, rids = self._setup(slots=1, n_queries=4)
+        svc.tick()  # admit exactly one
+        finished, cancelled = svc.shutdown(drain=True)
+        fin_ids = {rid for rid, _, _ in finished}
+        can_ids = {c.rid for c in cancelled}
+        assert fin_ids | can_ids == set(rids)      # nothing silently dropped
+        assert fin_ids and can_ids
+        assert all(c.reason == "shutdown before admission" for c in cancelled)
+        assert not svc.queue
+
+    def test_no_drain_cancels_inflight_too(self):
+        svc, rids = self._setup(slots=2, n_queries=4)
+        svc.tick()
+        finished, cancelled = svc.shutdown(drain=False)
+        assert {c.rid for c in cancelled} | {r for r, _, _ in finished} == set(rids)
+        reasons = {c.reason for c in cancelled}
+        assert "shutdown before admission" in reasons
+        assert svc.n_active == 0
+
+    def test_submit_after_shutdown_raises(self):
+        svc, _ = self._setup(n_queries=1)
+        svc.shutdown()
+        from repro.graphs import random_labeled_graph as rlg
+        with pytest.raises(RuntimeError, match="shut down"):
+            svc.submit(random_walk_query(rlg(30, 60, 3, seed=1), 3, seed=0))
+
+
+# ---------------------------------------------------------------------------
+# update-batch plumbing (io/stream unification)
+# ---------------------------------------------------------------------------
+
+
+class TestUpdateBatchPlumbing:
+    def test_iter_update_batches_graph_roundtrip(self):
+        from repro.graphs import iter_update_batches
+
+        g = random_labeled_graph(50, 120, 4, seed=15)
+        batches = list(iter_update_batches(g, 64))
+        assert all(b.src.shape == (64,) for b in batches)
+        total = sum(b.n_records for b in batches)
+        assert total == g.n_directed_edges
+        src = np.concatenate([b.src[b.valid] for b in batches])
+        assert np.array_equal(np.sort(src), np.sort(np.asarray(g.src)))
+
+    def test_scan_filter_unchanged_by_batch_abstraction(self):
+        from repro.core import scan_filter
+        from repro.core.ilgf import one_shot_filter
+
+        g = random_labeled_graph(64, 160, 4, seed=16)
+        q = random_walk_query(g, 5, seed=17)
+        got = scan_filter(g, q, chunk_edges=32)
+        want = np.asarray(one_shot_filter(g, q).alive)
+        np.testing.assert_array_equal(got, want)
+
+    def test_stream_filter_consumes_edge_batches(self):
+        """stream_filter_file over iter_update_batches chunks == in-memory
+        ILGF — the shared chunker feeds both streaming variants."""
+        from repro.core import stream_filter_file
+        from repro.core.ilgf import ilgf
+        from repro.graphs import iter_update_batches
+        from repro.graphs.csr import max_degree
+
+        g = random_labeled_graph(120, 380, 4, n_edge_labels=2, seed=21)
+        q = random_walk_query(g, 5, seed=22)
+        sr = stream_filter_file(
+            iter_update_batches(g, 64), np.asarray(g.vlabels), q,
+            chunk_edges=64, d_max=max_degree(g), sorted_stream=False,
+        )
+        mem = ilgf(g, q)
+        np.testing.assert_array_equal(
+            np.asarray(sr.ilgf_result.alive), np.asarray(mem.alive)
+        )
+        assert sr.stats.total_edges_seen == g.n_directed_edges
+
+    def test_kernel_update_matches_ref(self):
+        import jax.numpy as jnp
+
+        from repro.core.cni import default_max_p
+        from repro.kernels.cni_update.ops import cni_update
+        from repro.kernels.cni_update.ref import cni_update_ref
+
+        rng = np.random.default_rng(18)
+        f, L, d_max = 130, 6, 12
+        mp = default_max_p(d_max, L)
+        rows = rng.integers(0, 3, size=(f, L)).astype(np.int32)
+        delta = np.maximum(
+            rng.integers(-1, 2, size=(f, L)).astype(np.int32), -rows
+        )
+        nr_k, log_k, deg_k = cni_update(
+            jnp.asarray(rows), jnp.asarray(delta),
+            d_max=d_max, max_p=mp, block_f=64,
+        )
+        nr_r, log_r, deg_r = cni_update_ref(
+            jnp.asarray(rows), jnp.asarray(delta), d_max, mp
+        )
+        np.testing.assert_array_equal(np.asarray(nr_k), np.asarray(nr_r))
+        np.testing.assert_array_equal(np.asarray(deg_k), np.asarray(deg_r))
+        lk, lr = np.asarray(log_k), np.asarray(log_r)
+        fin = np.isfinite(lr)
+        assert (np.isfinite(lk) == fin).all()
+        np.testing.assert_allclose(lk[fin], lr[fin], rtol=1e-5, atol=1e-5)
+
+    def test_index_kernel_path_matches_host_log(self):
+        g = random_labeled_graph(48, 120, 4, seed=19)
+        host = GraphStore.from_graph(g)
+        host.attach_index(IncrementalIndex())
+        dev = GraphStore.from_graph(g)
+        dev.attach_index(IncrementalIndex(use_kernel=True))
+        for b in random_update_batches(g, 3, 12, delete_frac=0.3, seed=20):
+            host.apply(b)
+            dev.apply(b)
+        np.testing.assert_array_equal(host.index.cni_u64, dev.index.cni_u64)
+        np.testing.assert_allclose(host.index.cni_log, dev.index.cni_log,
+                                   rtol=1e-5, atol=1e-5)
