@@ -6,11 +6,15 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     graph    — the paper's experiments (Figs 7-11 analogues, §4)
     batch    — batched multi-query + serving throughput (batch_engine)
     update   — dynamic-graph store: incremental index maintenance throughput
+    shard    — vertex-partitioned engine scaling across 1/2/4 devices
+               (each device count in a subprocess with
+               ``--xla_force_host_platform_device_count``)
     kernels  — kernel-path microbenchmarks
     roofline — derived terms from the dry-run artifacts (if present)
 
 ``--smoke`` shrinks the selected sections to tiny regression canaries for
-CI (``--smoke`` alone = batch + update canaries on every push).
+CI (``--smoke`` alone = batch + update canaries on every push; the shard
+canary runs as its own CI step via ``--section shard --smoke``).
 """
 
 from __future__ import annotations
@@ -27,8 +31,8 @@ def _emit(rows):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "graph", "batch", "update", "kernels",
-                             "roofline"])
+                    choices=["all", "graph", "batch", "update", "shard",
+                             "kernels", "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny canary benches only (CI jit-regression check)")
     args = ap.parse_args()
@@ -43,6 +47,10 @@ def main() -> None:
             from benchmarks.update_benches import run_all as update_all
 
             _emit(update_all(smoke=True))
+        if args.section == "shard":  # opt-in: spawns one process per D
+            from benchmarks.shard_benches import run_all as shard_all
+
+            _emit(shard_all(smoke=True))
         return
     if args.section in ("all", "batch"):
         from benchmarks.batch_benches import run_all as batch_all
@@ -52,6 +60,10 @@ def main() -> None:
         from benchmarks.update_benches import run_all as update_all
 
         _emit(update_all())
+    if args.section in ("all", "shard"):
+        from benchmarks.shard_benches import run_all as shard_all
+
+        _emit(shard_all())
     if args.section in ("all", "graph"):
         from benchmarks.graph_benches import run_all as graph_all
 

@@ -44,9 +44,8 @@ def main():
             pinned[store.epoch] = store.pin()
             ins = rng.integers(0, 600, size=(40, 2))
             svc.add_edges(ins[ins[:, 0] != ins[:, 1]])
-            rm = np.stack([store._lo[store._alive][:20],
-                           store._hi[store._alive][:20]], axis=1)
-            svc.remove_edges(rm)
+            lo, hi, _lab = store.alive_edges()
+            svc.remove_edges(np.stack([lo[:20], hi[:20]], axis=1))
             print(f"  tick {tick:3d}: applied updates -> epoch {store.epoch}")
             rids += [svc.submit(q) for q in queries[4:]]
         if len(done) == len(queries):

@@ -1,0 +1,67 @@
+"""Sharded store + partitioned query execution, end to end.
+
+Builds a ``ShardedGraphStore`` (vertex-partitioned edge tables with
+owner/ghost boundary lists), attaches the per-shard incremental CNI index,
+applies update batches that cross shard boundaries, and runs queries with
+the vertex-partitioned engine — verifying bit-identical results against the
+single-device path.
+
+Run with virtual devices to see real multi-shard execution:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/sharded_store.py
+
+With one device it still runs (mesh of 1); the store keeps 4 logical shards
+either way — storage partitioning and execution partitioning compose but
+do not have to match.
+"""
+
+import jax
+import numpy as np
+
+from repro.core import ShardedIncrementalIndex, SubgraphQueryEngine
+from repro.core.distributed import device_mesh
+from repro.graphs import (
+    ShardedGraphStore,
+    random_labeled_graph,
+    random_update_batches,
+    random_walk_query,
+)
+
+
+def main():
+    n_devices = len(jax.devices())
+    print(f"== sharded store / partitioned CNI engine "
+          f"({n_devices} device(s)) ==")
+    g = random_labeled_graph(800, 2600, 8, n_edge_labels=2, seed=0)
+    store = ShardedGraphStore.from_graph(g, n_shards=4, degree_cap=64)
+    store.attach_index(ShardedIncrementalIndex())
+    print(f"store: {store.stats()}")
+
+    # live churn: random endpoints span shards, so batches cross boundaries
+    for batch in random_update_batches(g, 6, 96, delete_frac=0.3, seed=1):
+        store.apply(batch)
+    print(f"after updates: epoch={store.epoch} "
+          f"boundary_edges={store.n_boundary_edges} "
+          f"exchanged={store.index.stats.boundary_exchanged}")
+    for s in store.shard_stats():
+        print(f"  shard {s.shard}: {s.n_edges} edges, "
+              f"{s.n_ghosts} ghosts, {s.n_boundary_edges} boundary")
+
+    mesh = device_mesh(n_devices)
+    query = random_walk_query(store.snapshot().graph, 6, seed=2)
+    sharded = SubgraphQueryEngine(store, mesh=mesh)
+    emb, stats = sharded.query(query)
+    print(f"partitioned engine: {stats.vertices_before} -> "
+          f"{stats.vertices_after} vertices in {stats.ilgf_iterations} "
+          f"rounds across {stats.extras.get('shards')} shard(s); "
+          f"{emb.shape[0]} embeddings")
+
+    ref, _ = SubgraphQueryEngine(store).query(query)
+    assert ({tuple(r) for r in emb.tolist()}
+            == {tuple(r) for r in np.asarray(ref).tolist()})
+    print("sharded results identical to the single-device engine ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ from repro.core.engine import QueryStats, SubgraphQueryEngine, search_filtered
 from repro.core.incremental import (
     IncrementalIndex,
     IndexSnapshot,
+    ShardedIncrementalIndex,
     store_prefilter,
 )
 from repro.core.filters import (

@@ -277,7 +277,9 @@ class BatchQueryEngine:
     Drop-in batched counterpart of ``SubgraphQueryEngine``: ``query_batch``
     returns one (embeddings, stats) pair per input query, in input order,
     with embeddings identical (up to row order) to calling the sequential
-    engine per query.
+    engine per query.  With ``mesh=`` every peeling round additionally runs
+    vertex-partitioned under ``shard_map`` (``core/distributed.py``) —
+    still bit-identical, still one fused dispatch per round.
     """
 
     def __init__(
@@ -290,6 +292,8 @@ class BatchQueryEngine:
         search_vertex_cap: int = 8192,
         max_batch: int | None = None,
         max_iters: int = 1_000,
+        mesh=None,
+        shard_axis: str = "data",
     ):
         from repro.graphs.store import as_snapshot
 
@@ -307,6 +311,32 @@ class BatchQueryEngine:
         self.max_batch = max_batch
         self.max_iters = max_iters
         self.d_max = max(1, max_degree(self.data))
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self._sharded = None
+        if mesh is not None:
+            # vertex-partition the data graph once (consuming the sharded
+            # store's tables when the snapshot carries a matching plan);
+            # every bucket/round below then runs under shard_map
+            from repro.core.distributed import prepare_sharded_edges
+
+            self._sharded = prepare_sharded_edges(snap, mesh, shard_axis)[:2]
+
+    def _ilgf_round(self, qb, alive, *, l_pad, d_max, max_p):
+        """One peeling round — single-device or sharded, same contract."""
+        if self._sharded is not None:
+            from repro.core.distributed import sharded_batched_ilgf_round
+
+            se, plan = self._sharded
+            return sharded_batched_ilgf_round(
+                se, plan, qb, alive, mesh=self.mesh, axis=self.shard_axis,
+                n_labels=l_pad, d_max=d_max, max_p=max_p,
+                variant=self.filter_variant,
+            )
+        return batched_ilgf_round(
+            self.data, qb, alive, n_labels=l_pad, d_max=d_max, max_p=max_p,
+            variant=self.filter_variant,
+        )
 
     def query_batch(
         self,
@@ -377,10 +407,8 @@ class BatchQueryEngine:
         done: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
         rounds = 0
         while row_query and rounds < self.max_iters:
-            alive, cand, changed = batched_ilgf_round(
-                self.data, qb, alive,
-                n_labels=l_pad, d_max=d_max, max_p=max_p,
-                variant=self.filter_variant,
+            alive, cand, changed = self._ilgf_round(
+                qb, alive, l_pad=l_pad, d_max=d_max, max_p=max_p,
             )
             rounds += 1
             conv = ~np.asarray(changed)
@@ -413,10 +441,8 @@ class BatchQueryEngine:
             # still returns exactly the true embeddings.  One extra round
             # computes candidates aligned with the *current* (compacted)
             # rows; the stale per-round ``cand`` may predate a compaction.
-            alive, cand, _ = batched_ilgf_round(
-                self.data, qb, alive,
-                n_labels=l_pad, d_max=d_max, max_p=max_p,
-                variant=self.filter_variant,
+            alive, cand, _ = self._ilgf_round(
+                qb, alive, l_pad=l_pad, d_max=d_max, max_p=max_p,
             )
             rounds += 1
             alive_np = np.asarray(alive)

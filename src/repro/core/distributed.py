@@ -1,13 +1,33 @@
-"""Distributed CNI engine: vertex-partitioned ILGF + balanced join search.
+"""Distributed CNI engine: the mesh/partition authority + sharded execution.
 
-Scaling story (DESIGN.md §3/§6): the data graph's vertices (and the edges
-rooted at them) are partitioned across the mesh's ``data`` axis.  Per ILGF
-round every shard filters its own vertices *locally* — counts, digests and
-cniMatch are embarrassingly parallel — and the only cross-shard traffic is an
-``all_gather`` of the (1 bit/vertex) removal mask.  That is the distributed
-translation of the paper's "CNIs are cheap to update after each local
-pruning": the global effect of a removal is conveyed by one broadcast bit,
-not by shipping neighborhoods.
+This module is the **single source of truth for how the vertex axis maps
+onto devices**.  Every layer that shards anything — the partitioned graph
+store (``graphs/store.py::ShardedGraphStore``), the per-shard incremental
+index (``core/incremental.py::ShardedIncrementalIndex``), the single-query
+and batched ILGF fixed points, and the serving front-end — consumes the same
+three primitives defined here:
+
+* ``vertex_partition(V, n_shards)`` → :class:`PartitionPlan`: contiguous
+  equal slices of a padded vertex axis, shard *i* owning rows
+  ``[i·v_local, (i+1)·v_local)``.  The pad rows carry ord 0 / alive False,
+  which are exact no-ops for counts, digests, and matching.
+* ``device_mesh(n_shards)`` → a cached 1-D :class:`jax.sharding.Mesh` over
+  the ``data`` axis (CPU hosts get virtual devices via
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+* ``shard_edges(src, dst, plan)`` → per-shard directed edge buckets, each
+  edge living with the owner of its *source* endpoint, so every shard can
+  build the count rows of exactly its owned vertices locally.
+
+Scaling story (DESIGN.md §3/§6/§9): per ILGF round every shard filters its
+own vertex slice *locally* — counts, digests and cniMatch are embarrassingly
+parallel — and the only cross-shard traffic is one ``all_gather`` of the
+(1 bit/vertex) removal mask plus one ``psum`` of the per-shard alive counts.
+The count all-reduce is what makes the *retirement decision* globally
+consistent: peeling is monotone (alive sets only shrink), so the global
+alive count is stationary exactly at the fixed point, and every shard stops
+on the same round.  That is the distributed translation of the paper's
+"CNIs are cheap to update after each local pruning": the global effect of a
+removal is conveyed by one broadcast bit, not by shipping neighborhoods.
 
 The join search shards the partial-embedding table rows, expands locally
 against a replicated filtered graph (small by construction after ILGF), and
@@ -26,7 +46,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 try:  # jax >= 0.5: public API with the ``check_vma`` kwarg
@@ -51,57 +71,156 @@ def shard_map_nocheck(*, mesh, in_specs, out_specs):
 
 from repro.core import filters as flt
 from repro.core.cni import default_max_p
-from repro.core.ilgf import IlgfResult, QueryDigest, prepare_query
-from repro.core.labels import ord_of
+from repro.core.ilgf import IlgfResult, prepare_query
+from repro.core.labels import build_label_map, ord_of
 from repro.graphs.csr import Graph, max_degree
 
 
-class ShardedGraph(NamedTuple):
-    """Vertex-partitioned graph: shard i owns rows [i*Vl, (i+1)*Vl)."""
-
-    ords: jnp.ndarray       # (V,) int32 ord labels, replicated
-    edge_src: jnp.ndarray   # (D, Epad) int32 — per-shard edge lists (src local)
-    edge_dst: jnp.ndarray   # (D, Epad) int32
-    edge_ok: jnp.ndarray    # (D, Epad) bool
-    n_vertices: jnp.ndarray  # scalar int32 (original V before padding)
+# ---------------------------------------------------------------------------
+# Partition authority: one plan shared by store, index, engines, service.
+# ---------------------------------------------------------------------------
 
 
-def shard_graph(g: Graph, query: Graph, n_shards: int) -> tuple[ShardedGraph, int]:
-    """Host-side partition: pad V to a multiple of shards, bucket edges by
-    owner shard of ``src`` and pad buckets to a common length."""
-    from repro.core.labels import build_label_map
+class PartitionPlan(NamedTuple):
+    """Contiguous vertex partition: shard i owns ``[i*v_local, (i+1)*v_local)``.
 
-    label_map = build_label_map(query)
-    v_pad = -(-g.n_vertices // n_shards) * n_shards
-    v_local = v_pad // n_shards
-    ords = np.zeros(v_pad, dtype=np.int32)
-    ords[: g.n_vertices] = np.asarray(ord_of(label_map, g.vlabels))
+    ``v_pad`` rounds the vertex axis up to a multiple of ``n_shards`` so the
+    device arrays split evenly; pad vertices (ids ≥ ``n_vertices``) never
+    carry labels, edges, or alive bits.  All fields are plain ints, so the
+    plan is hashable and usable as a jit-cache key.
+    """
 
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    owner = src // v_local
-    buckets_s, buckets_d = [], []
-    for i in range(n_shards):
-        m = owner == i
-        buckets_s.append(src[m])
-        buckets_d.append(dst[m])
-    e_pad = max(1, max(b.size for b in buckets_s))
-    es = np.zeros((n_shards, e_pad), dtype=np.int32)
-    ed = np.zeros((n_shards, e_pad), dtype=np.int32)
-    ok = np.zeros((n_shards, e_pad), dtype=bool)
-    for i in range(n_shards):
-        k = buckets_s[i].size
-        es[i, :k] = buckets_s[i]
-        ed[i, :k] = buckets_d[i]
-        ok[i, :k] = True
-    sg = ShardedGraph(
-        ords=jnp.asarray(ords),
-        edge_src=jnp.asarray(es),
-        edge_dst=jnp.asarray(ed),
-        edge_ok=jnp.asarray(ok),
-        n_vertices=jnp.asarray(g.n_vertices, jnp.int32),
-    )
-    return sg, v_local
+    n_shards: int
+    n_vertices: int
+    v_pad: int
+    v_local: int
+
+    def owner(self, v):
+        """Owner shard of vertex id(s) ``v`` (host-side, numpy-friendly)."""
+        return np.asarray(v) // self.v_local
+
+    def bounds(self, shard: int) -> tuple[int, int]:
+        """Owned range ``[lo, hi)`` of real (unpadded) vertex ids.
+
+        Both ends clamp to ``n_vertices``: a trailing shard that owns only
+        padding gets an empty (never inverted) range.
+        """
+        lo = min(shard * self.v_local, self.n_vertices)
+        return lo, min((shard + 1) * self.v_local, self.n_vertices)
+
+
+def vertex_partition(n_vertices: int, n_shards: int) -> PartitionPlan:
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    v_pad = -(-max(1, n_vertices) // n_shards) * n_shards
+    return PartitionPlan(n_shards, int(n_vertices), v_pad, v_pad // n_shards)
+
+
+@functools.lru_cache(maxsize=None)
+def device_mesh(n_shards: int | None = None, axis: str = "data") -> Mesh:
+    """1-D device mesh over ``axis`` (defaults to every visible device).
+
+    Cached per (count, axis): the mesh participates in jit-trace cache keys,
+    so all callers must share one instance.  Multi-device CPU runs come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (tests, CI).
+    """
+    devices = jax.devices()
+    if n_shards is None:
+        n_shards = len(devices)
+    if n_shards > len(devices):
+        raise ValueError(
+            f"requested {n_shards} shards but only {len(devices)} devices "
+            "are visible (set --xla_force_host_platform_device_count)"
+        )
+    return Mesh(np.asarray(devices[:n_shards]), (axis,))
+
+
+class ShardedEdges(NamedTuple):
+    """Per-shard directed edge buckets: row i holds the edges whose source
+    vertex shard i owns, padded to a common length."""
+
+    edge_src: jnp.ndarray  # (D, Epad) int32
+    edge_dst: jnp.ndarray  # (D, Epad) int32
+    edge_ok: jnp.ndarray   # (D, Epad) bool — padding mask
+
+
+def shard_edges(src, dst, plan: PartitionPlan) -> ShardedEdges:
+    """Bucket directed (symmetrized) edges by the owner shard of ``src``.
+
+    Each undirected edge appears twice in the symmetrized list, so the
+    (u→w) direction lands on owner(u) and (w→u) on owner(w) — the host-side
+    materialization of the owner/ghost boundary exchange: a cross-shard edge
+    is present in both endpoint owners' buckets, each in the direction that
+    feeds its *owned* count row.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    owner = src // plan.v_local
+    buckets = [np.flatnonzero(owner == i) for i in range(plan.n_shards)]
+    e_pad = max(1, max((b.size for b in buckets), default=1))
+    es = np.zeros((plan.n_shards, e_pad), dtype=np.int32)
+    ed = np.zeros((plan.n_shards, e_pad), dtype=np.int32)
+    ok = np.zeros((plan.n_shards, e_pad), dtype=bool)
+    for i, b in enumerate(buckets):
+        es[i, : b.size] = src[b]
+        ed[i, : b.size] = dst[b]
+        ok[i, : b.size] = True
+    return ShardedEdges(jnp.asarray(es), jnp.asarray(ed), jnp.asarray(ok))
+
+
+def prepare_sharded_edges(data, mesh: Mesh, axis: str = "data"):
+    """Normalize any graph-like input to (ShardedEdges, PartitionPlan, Graph).
+
+    Accepts ``Graph | GraphStore | ShardedGraphStore | GraphSnapshot``.  A
+    snapshot from a :class:`~repro.graphs.store.ShardedGraphStore` whose
+    logical shard count matches the mesh reuses the store's per-shard
+    canonical tables (symmetrized on the fly); anything else buckets the
+    snapshot graph's edge list — an O(E) host pass.
+    """
+    from repro.graphs.store import as_snapshot
+
+    snap = as_snapshot(data)
+    g = snap.graph
+    plan = vertex_partition(g.n_vertices, mesh.shape[axis])
+    tables = snap.shards
+    if tables is not None and len(tables) == plan.n_shards:
+        # the store already owner-bucketed the (lo -> hi) direction: table i
+        # holds exactly the canonical edges owner(lo) == i.  Only the
+        # reverse (hi -> lo) directions — the ghost/boundary flow back to
+        # owner(hi) — still need routing, and intra-shard reverses route to
+        # the same table, so one partition pass over the hi endpoints
+        # replaces the full O(D·E) re-bucket of the fallback below.
+        fwd = [(t[0].astype(np.int32), t[1].astype(np.int32))
+               for t in tables]
+        rev_src = [[] for _ in range(plan.n_shards)]
+        rev_dst = [[] for _ in range(plan.n_shards)]
+        for f_lo, f_hi in fwd:
+            owner_hi = f_hi // plan.v_local
+            for i in np.unique(owner_hi):
+                m = owner_hi == i
+                rev_src[i].append(f_hi[m])
+                rev_dst[i].append(f_lo[m])
+        srcs = [np.concatenate([fwd[i][0]] + rev_src[i])
+                for i in range(plan.n_shards)]
+        dsts = [np.concatenate([fwd[i][1]] + rev_dst[i])
+                for i in range(plan.n_shards)]
+        e_pad = max(1, max(s.size for s in srcs))
+        es = np.zeros((plan.n_shards, e_pad), dtype=np.int32)
+        ed = np.zeros((plan.n_shards, e_pad), dtype=np.int32)
+        ok = np.zeros((plan.n_shards, e_pad), dtype=bool)
+        for i in range(plan.n_shards):
+            k = srcs[i].size
+            es[i, :k] = srcs[i]
+            ed[i, :k] = dsts[i]
+            ok[i, :k] = True
+        se = ShardedEdges(jnp.asarray(es), jnp.asarray(ed), jnp.asarray(ok))
+        return se, plan, g
+    return shard_edges(np.asarray(g.src), np.asarray(g.dst), plan), plan, g
+
+
+# ---------------------------------------------------------------------------
+# Local (per-shard) filtering building blocks.
+# ---------------------------------------------------------------------------
 
 
 def _local_counts(edge_src, edge_dst, edge_ok, ords, alive, v_lo, v_local, L):
@@ -115,70 +234,257 @@ def _local_counts(edge_src, edge_dst, edge_ok, ords, alive, v_lo, v_local, L):
     return flat.reshape(v_local, L)
 
 
+def local_match_matrix(variant: str, counts, my_ords, q, d_max: int,
+                       max_p: int):
+    """(..., Vl, U) candidate grid over a *local vertex slice*.
+
+    The per-shard twin of ``ilgf.match_matrix``: every supported variant
+    needs only the slice's own count rows plus the replicated query digest,
+    so no collective runs inside a filtering round.  ``mnd_nlf`` is the one
+    family that inspects *neighbor* digests (maximum neighbor degree) and
+    would need a per-round halo exchange — it is not offered on the sharded
+    path (use the single-device engine or the sound ``nlf`` superset).
+    """
+    if variant == "nlf":
+        return flt.nlf_match(counts, q.counts, my_ords, q.digest.ord_label)
+    if variant == "label_degree":
+        deg = counts.sum(-1).astype(jnp.int32)
+        do = my_ords[..., :, None]
+        lab = (do == q.digest.ord_label[..., None, :]) & (do > 0)
+        return lab & (deg[..., :, None] >= q.digest.deg[..., None, :])
+    digest = flt.make_digest(counts, my_ords, d_max, max_p)
+    if variant == "cni":
+        return flt.cni_match(digest, q.digest)
+    if variant == "cni_log":
+        return flt.cni_match_log(digest, q.digest)
+    raise ValueError(
+        f"filter variant {variant!r} is not supported on the sharded path "
+        "(mnd_nlf needs neighbor digests — a per-round halo exchange; see "
+        "DESIGN.md §9)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-query partitioned ILGF fixed point.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _distributed_ilgf_fn(mesh: Mesh, axis: str, v_local: int, n_labels: int,
+                         d_max: int, max_p: int, variant: str,
+                         max_iters: int):
+    """Build (and cache) the jitted partitioned fixed point for one static
+    config — repeat queries over the same mesh/shape revisit the trace."""
+    L = n_labels
+
+    def fn(ords, edge_src, edge_dst, edge_ok, alive_init, q):
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(), P()),
+            out_specs=(P(), P(axis), P()),
+        )
+        def run(ords, edge_src, edge_dst, edge_ok, alive0, q):
+            my = jax.lax.axis_index(axis)
+            v_lo = my.astype(jnp.int32) * v_local
+            es, ed, eo = edge_src[0], edge_dst[0], edge_ok[0]
+
+            def local_match(alive):
+                counts = _local_counts(es, ed, eo, ords, alive, v_lo,
+                                       v_local, L)
+                my_ords = jax.lax.dynamic_slice(ords, (v_lo,), (v_local,))
+                return local_match_matrix(variant, counts, my_ords, q,
+                                          d_max, max_p)
+
+            def body(state):
+                alive, _, it = state
+                match = local_match(alive)
+                my_alive = jax.lax.dynamic_slice(alive, (v_lo,), (v_local,))
+                new_local = my_alive & jnp.any(match, axis=1)
+                # two collectives per round: the 1-bit/vertex mask broadcast
+                # and the alive-count all-reduce that decides global
+                # retirement — peeling is monotone (no vertex is ever
+                # revived), so the global count is stationary iff the mask
+                # is, and every shard agrees on the same stopping round
+                new_alive = jax.lax.all_gather(new_local, axis, tiled=True)
+                n_old = jax.lax.psum(my_alive.sum(dtype=jnp.int32), axis)
+                n_now = jax.lax.psum(new_local.sum(dtype=jnp.int32), axis)
+                return new_alive, n_now != n_old, it + 1
+
+            def cond(state):
+                _, changed, it = state
+                return changed & (it < max_iters)
+
+            state = (alive0, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+            alive, _, iters = jax.lax.while_loop(cond, body, state)
+            final_match = local_match(alive)
+            my_alive = jax.lax.dynamic_slice(alive, (v_lo,), (v_local,))
+            cand_local = final_match & my_alive[:, None]
+            return alive, cand_local, iters
+
+        return run(ords, edge_src, edge_dst, edge_ok, alive_init, q)
+
+    return jax.jit(fn)
+
+
 def distributed_ilgf(
-    g: Graph,
+    data,
     query: Graph,
-    mesh: Mesh,
+    mesh: Mesh | None = None,
     *,
     axis: str = "data",
+    variant: str = "cni",
     d_max: int | None = None,
+    max_p: int | None = None,
+    alive0=None,
     max_iters: int = 1_000,
+    prepared=None,
 ) -> IlgfResult:
-    """ILGF fixed point on a vertex-partitioned graph. Matches `ilgf` exactly."""
-    n_shards = mesh.shape[axis]
+    """ILGF fixed point on a vertex-partitioned graph.  Matches ``ilgf``
+    bit-for-bit: same alive mask, same candidate columns, same round count.
+
+    ``data`` may be a Graph, GraphStore, ShardedGraphStore, or
+    GraphSnapshot; ``alive0`` is an optional sound starting mask (e.g. the
+    store-digest prefilter), padded/broadcast here.  Per round each shard
+    peels its own slice; one ``all_gather`` broadcasts the new mask and one
+    ``psum`` of per-shard alive counts decides retirement globally —
+    monotonicity makes count-stationarity equivalent to mask-stationarity.
+
+    ``prepared``: optional ``(ShardedEdges, PartitionPlan, Graph)`` from a
+    prior ``prepare_sharded_edges`` call — engines serving many queries
+    over one graph bucket once and reuse.
+    """
+    if mesh is None:
+        mesh = device_mesh(axis=axis)
+    se, plan, g = (
+        prepared if prepared is not None
+        else prepare_sharded_edges(data, mesh, axis)
+    )
     if d_max is None:
         d_max = max(1, max_degree(g))
-    sg, v_local = shard_graph(g, query, n_shards)
-    from repro.core.labels import build_label_map
-
-    L = build_label_map(query).n_labels
-    max_p = default_max_p(d_max, L)
+    label_map = build_label_map(query)
+    L = label_map.n_labels
+    if max_p is None:
+        max_p = default_max_p(d_max, L)
     q = prepare_query(query, d_max, max_p)
-    v_pad = int(sg.ords.shape[0])
 
-    @shard_map_nocheck(
-        mesh=mesh,
-        in_specs=(P(), P(axis), P(axis), P(axis), P()),
-        out_specs=(P(), P(axis), P()),
+    ords = np.zeros(plan.v_pad, dtype=np.int32)
+    ords[: g.n_vertices] = np.asarray(ord_of(label_map, g.vlabels))
+    a0 = ords > 0
+    if alive0 is not None:
+        a0[: g.n_vertices] &= np.asarray(alive0, dtype=bool)
+
+    fn = _distributed_ilgf_fn(mesh, axis, plan.v_local, L, d_max, max_p,
+                              variant, max_iters)
+    alive, cand, iters = fn(
+        jnp.asarray(ords), se.edge_src, se.edge_dst, se.edge_ok,
+        jnp.asarray(a0), q,
     )
-    def run(ords, edge_src, edge_dst, edge_ok, alive0):
-        my = jax.lax.axis_index(axis)
-        v_lo = my.astype(jnp.int32) * v_local
-        es, ed, eo = edge_src[0], edge_dst[0], edge_ok[0]
-
-        def local_match(alive):
-            counts = _local_counts(es, ed, eo, ords, alive, v_lo, v_local, L)
-            my_ords = jax.lax.dynamic_slice(ords, (v_lo,), (v_local,))
-            digest = flt.make_digest(counts, my_ords, d_max, max_p)
-            return flt.cni_match(digest, q.digest)
-
-        def round_fn(state):
-            alive, _, it = state
-            match = local_match(alive)
-            my_alive = jax.lax.dynamic_slice(alive, (v_lo,), (v_local,))
-            new_local = my_alive & jnp.any(match, axis=1)
-            # one broadcast bitmask per round: the only collective
-            new_alive = jax.lax.all_gather(new_local, axis, tiled=True)
-            changed = jnp.any(new_alive != alive)
-            return new_alive, changed, it + 1
-
-        def cond_fn(state):
-            _, changed, it = state
-            return changed & (it < max_iters)
-
-        state = (alive0, jnp.asarray(True), jnp.asarray(0, jnp.int32))
-        alive, _, iters = jax.lax.while_loop(cond_fn, round_fn, state)
-        final_match = local_match(alive)
-        my_alive = jax.lax.dynamic_slice(alive, (v_lo,), (v_local,))
-        cand_local = final_match & my_alive[:, None]
-        return alive, cand_local, iters
-
-    alive0 = sg.ords > 0
-    alive, cand, iters = run(sg.ords, sg.edge_src, sg.edge_dst, sg.edge_ok, alive0)
     n = g.n_vertices
-    return IlgfResult(
-        alive=alive[:n], candidates=cand[:n], iterations=iters
-    )
+    return IlgfResult(alive=alive[:n], candidates=cand[:n], iterations=iters)
+
+
+# ---------------------------------------------------------------------------
+# Batched sharded peeling round (batch engine / serving tick unit).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_round_fn(mesh: Mesh, axis: str, plan: PartitionPlan,
+                      n_labels: int, d_max: int, max_p: int, variant: str):
+    """Build (and cache) the jitted sharded round for one static config.
+
+    Keyed on hashables only — the mesh object, the partition plan, and the
+    filter config — so serving ticks and batch-engine rounds revisit the
+    same trace instead of re-tracing per call (``device_mesh`` returns a
+    cached mesh precisely so it can participate in this key).
+    """
+    v_local, v_pad = plan.v_local, plan.v_pad
+    L = n_labels
+
+    def fn(edge_src, edge_dst, edge_ok, qb, alive):
+        s, v = alive.shape
+        pad = v_pad - v
+        ords = jnp.pad(qb.ords, ((0, 0), (0, pad)))
+        alive_p = jnp.pad(alive, ((0, 0), (0, pad)))
+
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P(), P()),
+            out_specs=(P(), P(), P()),
+        )
+        def run(edge_src, edge_dst, edge_ok, ords, qb, alive):
+            my = jax.lax.axis_index(axis)
+            v_lo = my.astype(jnp.int32) * v_local
+            es, ed, eo = edge_src[0], edge_dst[0], edge_ok[0]
+
+            # per-slot local counts for the owned vertex slice: one scatter
+            # over (S, E_local) edge records with per-slot flat offsets
+            ord_dst = ords[:, ed]                      # (S, El)
+            ok = (
+                eo[None, :] & (ord_dst > 0) & (ords[:, es] > 0)
+                & alive[:, ed] & alive[:, es]
+            )
+            idx = (es - v_lo).astype(jnp.int32)[None, :] * L + jnp.maximum(
+                ord_dst - 1, 0
+            )
+            flat = jnp.zeros((s, v_local * L), jnp.int32)
+            flat = flat.at[
+                jnp.arange(s, dtype=jnp.int32)[:, None], idx
+            ].add(ok.astype(jnp.int32))
+            counts = flat.reshape(s, v_local, L)
+
+            my_ords = jax.lax.dynamic_slice(ords, (0, v_lo), (s, v_local))
+            match = local_match_matrix(variant, counts, my_ords, qb, d_max,
+                                       max_p)
+            my_alive = jax.lax.dynamic_slice(alive, (0, v_lo), (s, v_local))
+            new_local = my_alive & jnp.any(match, axis=-1)
+            cand_local = match & new_local[..., None]
+            # collectives: mask broadcast + per-slot alive-count all-reduce
+            new_alive = jax.lax.all_gather(new_local, axis, axis=1,
+                                           tiled=True)
+            cand = jax.lax.all_gather(cand_local, axis, axis=1, tiled=True)
+            n_old = jax.lax.psum(
+                my_alive.sum(axis=-1, dtype=jnp.int32), axis
+            )
+            n_now = jax.lax.psum(
+                new_local.sum(axis=-1, dtype=jnp.int32), axis
+            )
+            return new_alive, cand, n_now != n_old
+
+        new_alive, cand, changed = run(
+            edge_src, edge_dst, edge_ok, ords, qb, alive_p
+        )
+        return new_alive[:, :v], cand[:, :v], changed
+
+    return jax.jit(fn)
+
+
+def sharded_batched_ilgf_round(
+    se: ShardedEdges,
+    plan: PartitionPlan,
+    qb,
+    alive: jnp.ndarray,
+    *,
+    mesh: Mesh,
+    axis: str = "data",
+    n_labels: int,
+    d_max: int,
+    max_p: int,
+    variant: str,
+):
+    """One batched peeling round under ``shard_map`` — the drop-in sharded
+    twin of ``batch_engine.batched_ilgf_round`` (same signature contract:
+    returns ``(new_alive (S, V), candidates (S, V, U), changed (S,))``, with
+    candidate columns final for any slot whose ``changed`` is False).
+
+    The vertex axis is partitioned per ``plan``; the batch axis is
+    replicated.  Bit-identical to the single-device round: each shard
+    encodes digests for exactly its owned slice from exactly the rows the
+    single-device scatter would produce, and retirement is decided by the
+    all-reduced alive counts (sound by monotonicity).
+    """
+    fn = _sharded_round_fn(mesh, axis, plan, n_labels, d_max, max_p, variant)
+    return fn(se.edge_src, se.edge_dst, se.edge_ok, qb, alive)
 
 
 # ---------------------------------------------------------------------------

@@ -86,12 +86,17 @@ def search_filtered(
 class SubgraphQueryEngine:
     """CNI-filter + join-search engine over one data graph.
 
-    ``data`` may be an immutable ``Graph``, a mutable ``GraphStore``, or a
-    pinned ``GraphSnapshot``: store-backed engines run against the snapshot
-    taken at construction and, when the store carries an incremental index,
-    seed the ILGF fixed point from the maintained digests
-    (``incremental.store_prefilter``) instead of recomputing the round-0
-    filter from the edge list.
+    ``data`` may be an immutable ``Graph``, a mutable ``GraphStore`` /
+    ``ShardedGraphStore``, or a pinned ``GraphSnapshot``: store-backed
+    engines run against the snapshot taken at construction and, when the
+    store carries an incremental index, seed the ILGF fixed point from the
+    maintained digests (``incremental.store_prefilter``) instead of
+    recomputing the round-0 filter from the edge list.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — the filtering stage runs
+    vertex-partitioned across the mesh (``core/distributed.py``), consuming
+    the sharded store's per-shard tables when the snapshot carries them.
+    Results are bit-identical to the single-device engine (DESIGN.md §9).
     """
 
     def __init__(
@@ -103,8 +108,11 @@ class SubgraphQueryEngine:
         khop: int = 1,
         searcher: Literal["join", "dfs"] = "join",
         search_vertex_cap: int = 8192,
+        mesh=None,
+        shard_axis: str = "data",
     ):
         snap = as_snapshot(data)
+        self._snapshot = snap
         self.data = snap.graph
         self.epoch = snap.epoch
         self._index = snap.index
@@ -113,6 +121,16 @@ class SubgraphQueryEngine:
         self.khop = khop
         self.searcher = searcher
         self.search_vertex_cap = search_vertex_cap
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self._prepared = None
+        if mesh is not None:
+            # bucket the vertex partition once; every query() reuses it
+            # (consumes the sharded store's tables when the snapshot
+            # carries a matching plan)
+            from repro.core.distributed import prepare_sharded_edges
+
+            self._prepared = prepare_sharded_edges(snap, mesh, shard_axis)
 
     def query(self, q: Graph, *, max_embeddings: int | None = None):
         """Returns (embeddings (M, |V(Q)|) int64 over original ids, stats)."""
@@ -125,7 +143,18 @@ class SubgraphQueryEngine:
             alive0 = store_prefilter(self._index, to_host(q),
                                      variant=self.filter_variant)
             stats.extras["store_prefilter_alive"] = int(alive0.sum())
-        res = ilgf(self.data, q, variant=self.filter_variant, alive0=alive0)
+        if self.mesh is not None:
+            from repro.core.distributed import distributed_ilgf
+
+            res = distributed_ilgf(
+                self._snapshot, q, self.mesh, axis=self.shard_axis,
+                variant=self.filter_variant, alive0=alive0,
+                prepared=self._prepared,
+            )
+            stats.extras["shards"] = int(self.mesh.shape[self.shard_axis])
+        else:
+            res = ilgf(self.data, q, variant=self.filter_variant,
+                       alive0=alive0)
         alive = np.asarray(res.alive)
         stats.ilgf_iterations = int(res.iterations)
         stats.filter_seconds = time.perf_counter() - t0

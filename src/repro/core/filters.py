@@ -5,7 +5,11 @@ All filters are expressed over the counts matrix ``K[v, l]`` (labels.py),
 vectorized over the full (V × U) candidate grid.  Every function accepts an
 optional *leading batch dimension* — data digests shaped (B, V), query
 digests (B, U) — and then returns a (B, V, U) grid; the batched multi-query
-engine (batch_engine.py) relies on this.  ``cni_match`` implements the
+engine (batch_engine.py) relies on this.  The data-side axis may equally be
+a *shard-local slice* (V_local rows of digests against replicated (…, U)
+query digests): every comparison here is row-local, which is what lets the
+partitioned engine (distributed.py) evaluate the same grid per shard with
+no collectives inside a round.  ``cni_match`` implements the
 *corrected* Algorithm 3 (see DESIGN.md §1: the paper's ``<`` is a typo):
 
     match(v,u) ⇔ ℓ(v)=ℓ(u) ∧ ( (deg_L(v) > deg_L(u) ∧ cni(v) ≥ cni(u))

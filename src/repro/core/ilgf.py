@@ -113,7 +113,8 @@ def _ilgf_jit(g: Graph, q: QueryDigest, ords: jnp.ndarray,
 
 def ilgf(data: Graph, query: Graph, *, variant: str = "cni",
          d_max: int | None = None, max_p: int | None = None,
-         max_iters: int = 1_000, alive0=None) -> IlgfResult:
+         max_iters: int = 1_000, alive0=None, mesh=None,
+         shard_axis: str = "data") -> IlgfResult:
     """Run ILGF to its fixed point.  Returns alive mask + candidate columns.
 
     ``variant``:
@@ -127,7 +128,19 @@ def ilgf(data: Graph, query: Graph, *, variant: str = "cni",
     that lets the fixed point start past round one.  Peeling is monotone, so
     any sound starting superset reaches a fixed point whose search results
     are identical.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — runs the *vertex-partitioned*
+    fixed point (``core/distributed.py``) over the mesh's ``shard_axis``
+    instead of the single-device loop.  Bit-identical results; see
+    DESIGN.md §9.
     """
+    if mesh is not None:
+        from repro.core.distributed import distributed_ilgf
+
+        return distributed_ilgf(
+            data, query, mesh, axis=shard_axis, variant=variant,
+            d_max=d_max, max_p=max_p, alive0=alive0, max_iters=max_iters,
+        )
     if d_max is None:
         d_max = max(1, max_degree(data))
     label_map = build_label_map(query)

@@ -34,6 +34,10 @@ a query's round-0 candidate mask comes from the maintained counts (a column
 gather; no O(E) scatter over the edge list), and a query whose label
 alphabet *is* the universe reuses the maintained digests without any
 re-encode at all.
+
+``ShardedIncrementalIndex`` is the vertex-partitioned twin: per-shard
+count/digest slices maintained under a boundary-exchange routing of update
+records (DESIGN.md §9), bit-identical to the flat index after merging.
 """
 
 from __future__ import annotations
@@ -65,6 +69,7 @@ class IndexStats:
     saturated_skips: int = 0        # saturated digest + insert-only: no work
     saturated_recomputes: int = 0   # saturated digest + delete: forced re-encode
     full_rebuilds: int = 0          # d_max overflow (auto-grown table)
+    boundary_exchanged: int = 0     # cross-shard records routed to both owners
     extras: dict = field(default_factory=dict)
 
 
@@ -119,8 +124,7 @@ class IncrementalIndex:
         self.max_p = default_max_p(self.d_max, lu)
         self._col = {int(l): i for i, l in enumerate(self.universe)}
         counts = np.zeros((v, lu), np.int32)
-        lo = store._lo[store._alive]
-        hi = store._hi[store._alive]
+        lo, hi, _lab = store.alive_edges()
         if lo.size:
             col_of = np.searchsorted(self.universe, self.vlabels)
             np.add.at(counts, (lo, col_of[hi]), 1)
@@ -195,8 +199,8 @@ class IncrementalIndex:
             self._reencode(redo)
         self._epoch = store.epoch
 
-    def _reencode(self, rows: np.ndarray) -> None:
-        sub = self.counts[rows]
+    def _encode_rows(self, sub: np.ndarray):
+        """(k, Lu) count rows -> (u64, canonical log) digest rows."""
         u64, log, _ = cni_from_counts_np(sub, self.d_max, self.max_p)
         if self.use_kernel:
             # device frontier kernel recomputes the log digests (the TPU
@@ -207,8 +211,12 @@ class IncrementalIndex:
                 sub, np.zeros_like(sub), d_max=self.d_max, max_p=self.max_p
             )
             log = np.asarray(log_k)
+        return u64, self._canonical_log(u64, log)
+
+    def _reencode(self, rows: np.ndarray) -> None:
+        u64, log = self._encode_rows(self.counts[rows])
         self.cni_u64[rows] = u64
-        self.cni_log[rows] = self._canonical_log(u64, log)
+        self.cni_log[rows] = log
 
     # -- views ---------------------------------------------------------------
 
@@ -221,6 +229,244 @@ class IncrementalIndex:
             deg=self.deg.copy(),
             cni_u64=self.cni_u64.copy(),
             cni_log=self.cni_log.copy(),
+            d_max=self.d_max,
+            max_p=self.max_p,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Vertex-partitioned maintenance.
+# ---------------------------------------------------------------------------
+
+
+class ShardState(NamedTuple):
+    """One shard's slice of the maintained index state (read-only view)."""
+
+    shard: int
+    v_base: int            # first owned vertex id
+    counts: np.ndarray     # (n_owned, Lu) int32
+    deg: np.ndarray        # (n_owned,) int32
+    cni_u64: np.ndarray    # (n_owned,) uint64
+    cni_log: np.ndarray    # (n_owned,) float32
+
+
+class ShardedIncrementalIndex(IncrementalIndex):
+    """Per-shard counts + CNI digests with a boundary-exchange update step.
+
+    State is held as one array set per shard — each shard owns exactly the
+    contiguous vertex slice the partition authority
+    (``core/distributed.py::vertex_partition``) assigns it, normally taken
+    from the attached ``ShardedGraphStore``'s plan.  Applying a batch routes
+    every record to the owner shard(s) of its endpoints:
+
+    * an intra-shard edge (both endpoints owned by shard *s*) is a purely
+      local ±1 on two of *s*'s count rows;
+    * a **cross-shard** edge (u, w) is exchanged to *both* owners — owner(u)
+      folds it into row u, owner(w) into row w — tracked in
+      ``stats.boundary_exchanged``.  This mirrors what a multi-host
+      deployment ships over the wire per update batch: exactly the boundary
+      records, nothing else (DESIGN.md §9).
+
+    Per shard the frontier re-encode and the saturation semantics (§8 skip /
+    recompute rules) are the row-wise rules of the base class, so the merged
+    state is **bit-identical** to an unsharded ``IncrementalIndex`` fed the
+    same batches; ``freeze()`` returns a plain merged ``IndexSnapshot`` so
+    every digest consumer (``store_prefilter`` / ``store_digest`` / the
+    engines) works unchanged.
+    """
+
+    def __init__(self, *, n_shards: int | None = None, d_max: int | None = None,
+                 use_kernel: bool = False):
+        super().__init__(d_max=d_max, use_kernel=use_kernel)
+        self._n_shards_arg = n_shards
+        self._plan = None
+
+    # -- (re)build -----------------------------------------------------------
+
+    def rebuild(self, store) -> None:
+        from repro.core.distributed import vertex_partition
+
+        plan = getattr(store, "plan", None)
+        if plan is None or (
+            self._n_shards_arg is not None
+            and plan.n_shards != self._n_shards_arg
+        ):
+            plan = vertex_partition(store.n_vertices,
+                                    self._n_shards_arg or 1)
+        self._plan = plan
+        super().rebuild(store)  # global build (exact), then slice per shard
+        self._split_state()
+
+    def _split_state(self) -> None:
+        self._sh_counts, self._sh_deg = [], []
+        self._sh_u64, self._sh_log = [], []
+        for s in range(self._plan.n_shards):
+            lo, hi = self._plan.bounds(s)
+            self._sh_counts.append(self.__dict__["counts"][lo:hi].copy())
+            self._sh_deg.append(self.__dict__["deg"][lo:hi].copy())
+            self._sh_u64.append(self.__dict__["cni_u64"][lo:hi].copy())
+            self._sh_log.append(self.__dict__["cni_log"][lo:hi].copy())
+        # per-shard arrays are now the authoritative state; drop the plain
+        # attributes the base rebuild wrote so the merged properties below
+        # take over (data descriptors only yield to __dict__ explicitly)
+        for name in ("counts", "deg", "cni_u64", "cni_log"):
+            self.__dict__.pop(name, None)
+
+    def _merged_or_plain(self, name: str, parts: str):
+        if name in self.__dict__:  # mid-rebuild: base class still building
+            return self.__dict__[name]
+        return np.concatenate(getattr(self, parts), axis=0)
+
+    # merged read-only views (freeze, parity tests); during the base class's
+    # rebuild the plain attributes it assigns win via __dict__
+    @property
+    def counts(self):
+        return self._merged_or_plain("counts", "_sh_counts")
+
+    @counts.setter
+    def counts(self, v):
+        self.__dict__["counts"] = v
+
+    @property
+    def deg(self):
+        return self._merged_or_plain("deg", "_sh_deg")
+
+    @deg.setter
+    def deg(self, v):
+        self.__dict__["deg"] = v
+
+    @property
+    def cni_u64(self):
+        return self._merged_or_plain("cni_u64", "_sh_u64")
+
+    @cni_u64.setter
+    def cni_u64(self, v):
+        self.__dict__["cni_u64"] = v
+
+    @property
+    def cni_log(self):
+        return self._merged_or_plain("cni_log", "_sh_log")
+
+    @cni_log.setter
+    def cni_log(self, v):
+        self.__dict__["cni_log"] = v
+
+    # the base class's in-place mutators write through ``self.counts`` etc.;
+    # after _split_state those properties return throwaway concat copies, so
+    # an inherited mutator would silently update nothing — fail loudly
+    # instead (every live path is overridden to go through the shard slices)
+    def _encode_all(self) -> None:
+        if hasattr(self, "_sh_counts") and "counts" not in self.__dict__:
+            raise RuntimeError(
+                "ShardedIncrementalIndex state is per-shard; mutate through "
+                "apply_batch/rebuild, not the flat-array encoders"
+            )
+        super()._encode_all()
+
+    def _reencode(self, rows: np.ndarray) -> None:
+        raise RuntimeError(
+            "ShardedIncrementalIndex state is per-shard; mutate through "
+            "apply_batch/rebuild, not the flat-array encoders"
+        )
+
+    def shard_state(self, s: int) -> ShardState:
+        return ShardState(
+            shard=s,
+            v_base=self._plan.bounds(s)[0],
+            counts=self._sh_counts[s],
+            deg=self._sh_deg[s],
+            cni_u64=self._sh_u64[s],
+            cni_log=self._sh_log[s],
+        )
+
+    # -- incremental maintenance --------------------------------------------
+
+    def apply_batch(self, store, applied: EdgeBatch) -> None:
+        """Route one applied batch per owner shard (boundary exchange), then
+        run the base class's frontier/saturation rules per shard slice."""
+        st = self.stats
+        st.applied_batches += 1
+        lo = applied.src
+        hi = applied.dst
+        sign = np.where(applied.insert, 1, -1).astype(np.int32)
+        st.edges_inserted += int(applied.insert.sum())
+        st.edges_deleted += int((~applied.insert).sum())
+
+        v_local = self._plan.v_local
+        own_lo = lo // v_local
+        own_hi = hi // v_local
+        st.boundary_exchanged += int((own_lo != own_hi).sum())
+        col_of = np.searchsorted(self.universe, self.vlabels)
+
+        # ---- exchange + count deltas: each shard folds in exactly the
+        # records that touch a row it owns --------------------------------
+        touched: list[np.ndarray] = []
+        dec_local: list[np.ndarray] = []
+        for s in range(self._plan.n_shards):
+            base = self._plan.bounds(s)[0]
+            m1 = own_lo == s
+            m2 = own_hi == s
+            rows = np.concatenate([lo[m1] - base, hi[m2] - base])
+            cols = np.concatenate([col_of[hi[m1]], col_of[lo[m2]]])
+            sg = np.concatenate([sign[m1], sign[m2]])
+            np.add.at(self._sh_counts[s], (rows, cols), sg)
+            touched.append(np.unique(rows))
+            dec_local.append(np.unique(rows[sg < 0]))
+            st.touched_vertices += int(touched[-1].size)
+
+        # ---- d_max overflow: grow once, re-encode every shard -------------
+        new_degs = [
+            self._sh_counts[s][touched[s]].sum(axis=1).astype(np.int32)
+            for s in range(self._plan.n_shards)
+        ]
+        max_new = max((int(d.max()) for d in new_degs if d.size), default=0)
+        if max_new > self.d_max:
+            self.d_max = ceil_pow2(max_new)
+            self.max_p = default_max_p(self.d_max, int(self.universe.size))
+            for s in range(self._plan.n_shards):
+                u64, log = self._encode_rows(self._sh_counts[s])
+                self._sh_u64[s] = u64
+                self._sh_log[s] = log
+                self._sh_deg[s] = (
+                    self._sh_counts[s].sum(axis=1).astype(np.int32)
+                )
+            st.full_rebuilds += 1
+            self._epoch = store.epoch
+            return
+
+        # ---- per-shard frontier re-encode under the §8 saturation rules ---
+        for s in range(self._plan.n_shards):
+            frontier = touched[s]
+            if not frontier.size:
+                continue
+            self._sh_deg[s][frontier] = new_degs[s]
+            sat = self._sh_u64[s][frontier] == SAT64
+            dec = np.zeros(frontier.size, dtype=bool)
+            if dec_local[s].size:
+                dec[np.searchsorted(frontier, dec_local[s])] = True
+            skip = sat & ~dec          # stays saturated: provably no change
+            st.saturated_skips += int(skip.sum())
+            st.saturated_recomputes += int((sat & dec).sum())
+            redo = frontier[~skip]
+            st.reencoded_vertices += int(redo.size)
+            if redo.size:
+                u64, log = self._encode_rows(self._sh_counts[s][redo])
+                self._sh_u64[s][redo] = u64
+                self._sh_log[s][redo] = log
+        self._epoch = store.epoch
+
+    # -- views ---------------------------------------------------------------
+
+    def freeze(self) -> IndexSnapshot:
+        """Merged (cross-shard) snapshot — consumers see one flat index."""
+        return IndexSnapshot(
+            epoch=self._epoch,
+            universe=self.universe,
+            vlabels=self.vlabels,
+            counts=self.counts,   # concatenating properties already copy
+            deg=self.deg,
+            cni_u64=self.cni_u64,
+            cni_log=self.cni_log,
             d_max=self.d_max,
             max_p=self.max_p,
         )

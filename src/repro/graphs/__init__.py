@@ -24,6 +24,7 @@ from repro.graphs.store import (
     EdgeBatch,
     GraphSnapshot,
     GraphStore,
+    ShardedGraphStore,
     as_snapshot,
     make_edge_batch,
 )
@@ -33,6 +34,7 @@ __all__ = [
     "EdgeBatch",
     "GraphSnapshot",
     "GraphStore",
+    "ShardedGraphStore",
     "as_snapshot",
     "make_edge_batch",
     "iter_update_batches",

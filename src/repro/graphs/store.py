@@ -1,16 +1,29 @@
-"""Dynamic graph store: base edge table + delta log + epoch snapshots.
+"""Dynamic graph stores: edge table(s) + delta log + epoch snapshots.
 
 The paper's encoding "can be computed and updated incrementally" — but an
 immutable ``Graph`` forces every consumer to rebuild from scratch whenever
-the data graph changes.  ``GraphStore`` is the mutable-graph substrate:
+the data graph changes.  Two mutable-graph substrates live here:
 
-* **Base table + delta log.**  Undirected canonical edges live in append-only
-  host arrays with an aliveness mask.  ``apply(EdgeBatch)`` inserts/deletes
-  edges (idempotently: duplicate inserts and missing deletes are counted,
-  not errors) and bumps the store epoch.  Dead rows accumulate until
-  ``compact()`` (run automatically every ``compact_every`` batches) rewrites
-  the table without them — the classic LSM-style merge of the delta into the
-  base CSR.
+* **``GraphStore``** — one logical table.  Undirected canonical edges live
+  in append-only host arrays with an aliveness mask.  ``apply(EdgeBatch)``
+  inserts/deletes edges (idempotently: duplicate inserts and missing deletes
+  are counted, not errors) and bumps the store epoch.  Dead rows accumulate
+  until ``compact()`` (run automatically every ``compact_every`` batches)
+  rewrites the table without them — the classic LSM-style merge of the delta
+  into the base CSR.
+
+* **``ShardedGraphStore``** — the same contract over a **vertex-partitioned
+  table**.  The vertex axis is split into contiguous owner slices by the
+  partition authority (``core/distributed.py::vertex_partition``); each
+  canonical edge (lo < hi) is stored by the owner shard of ``lo``, with
+  per-shard delta logs and **owner/ghost boundary lists**: a cross-shard
+  edge registers its remote endpoint as a ghost on *both* owner shards, so
+  each shard knows exactly which remote vertices its count rows depend on.
+  Snapshots additionally carry the per-shard tables
+  (``GraphSnapshot.shards``), which the partitioned engines consume
+  directly instead of re-bucketing the global edge list.
+
+Shared across both stores:
 
 * **Epoch-versioned snapshots.**  ``snapshot()`` materializes the current
   edge set as an immutable ``Graph`` (plus a frozen copy of the attached
@@ -20,10 +33,11 @@ the data graph changes.  ``GraphStore`` is the mutable-graph substrate:
   underneath running queries without torn reads.
 
 * **Index maintenance hooks.**  An attached listener (duck-typed:
-  ``apply_batch(applied: EdgeBatch)`` + ``freeze()``) — in practice
-  ``core.incremental.IncrementalIndex`` — observes exactly the records that
-  changed the edge set, so label counts and CNI digests update as
-  count-vector deltas instead of from-scratch rebuilds.
+  ``rebuild(store)`` + ``apply_batch(store, applied)`` + ``freeze()``) — in
+  practice ``core.incremental.IncrementalIndex`` or its sharded twin —
+  observes exactly the records that changed the edge set, so label counts
+  and CNI digests update as count-vector deltas instead of from-scratch
+  rebuilds.
 
 The vertex set (and its labels) is fixed at construction: dynamic workloads
 here are edge churn over a known universe, which keeps every ``(V,)``- and
@@ -77,6 +91,39 @@ def make_edge_batch(edges, elabels=None, *, insert=True) -> EdgeBatch:
     )
 
 
+def canonicalize_batch(batch: EdgeBatch, n_vertices: int):
+    """Valid records -> (lo, hi, lab, insert), self-loops dropped.
+
+    One op per undirected edge per batch: records repeating an earlier
+    (lo, hi) pair are dropped (first record wins, matching ``symmetrize``'s
+    dedup) — so an insert and a delete of the same edge cannot interleave
+    within one batch.  Shared by both store flavors so sharded and
+    single-table application of the same batch is record-for-record
+    identical.
+    """
+    v = batch.valid.astype(bool)
+    s = np.asarray(batch.src, dtype=np.int64)[v]
+    d = np.asarray(batch.dst, dtype=np.int64)[v]
+    lab = np.asarray(batch.elabels, dtype=np.int64)[v]
+    ins = np.asarray(batch.insert, dtype=bool)[v]
+    lo = np.minimum(s, d)
+    hi = np.maximum(s, d)
+    keep = lo != hi
+    lo, hi, lab, ins = lo[keep], hi[keep], lab[keep], ins[keep]
+    if lo.size and (lo.min() < 0 or hi.max() >= n_vertices):
+        raise ValueError("edge endpoint out of range for this store")
+    seen: set[tuple[int, int]] = set()
+    order = []
+    for i in range(lo.size):
+        key = (int(lo[i]), int(hi[i]))
+        if key in seen:
+            continue
+        seen.add(key)
+        order.append(i)
+    idx = np.asarray(order, dtype=np.int64)
+    return lo[idx], hi[idx], lab[idx], ins[idx]
+
+
 class ApplyResult(NamedTuple):
     epoch: int           # store epoch after this batch
     applied: EdgeBatch   # canonical records that actually changed the edge set
@@ -86,11 +133,14 @@ class ApplyResult(NamedTuple):
 
 
 class GraphSnapshot(NamedTuple):
-    """Immutable view of the store at one epoch.
+    """Immutable view of a store at one epoch.
 
     ``graph`` is a plain ``Graph`` (numpy-backed, usable everywhere a Graph
     is); ``index`` is a frozen ``core.incremental.IndexSnapshot`` when an
-    incremental index is attached, else None.  Engines accept a snapshot
+    incremental index is attached, else None.  ``shards`` is populated by
+    ``ShardedGraphStore`` only: a tuple of per-shard ``(lo, hi, lab)``
+    canonical edge arrays that the partitioned engines
+    (``core/distributed.py``) consume directly.  Engines accept a snapshot
     anywhere they accept a Graph and use ``index`` to skip the from-scratch
     digest recompute.
     """
@@ -98,6 +148,7 @@ class GraphSnapshot(NamedTuple):
     epoch: int
     graph: Graph
     index: Optional[object]
+    shards: Optional[tuple] = None
 
 
 class StoreStats(NamedTuple):
@@ -110,8 +161,15 @@ class StoreStats(NamedTuple):
     n_snapshots_cached: int
 
 
-class GraphStore:
-    """Mutable vertex-labeled graph with epoch-versioned snapshots."""
+class BaseGraphStore:
+    """Shared store machinery: vertex universe, epochs, snapshot cache and
+    pins, degree tracking, index-listener plumbing, batch validation.
+
+    Concrete stores implement the edge-table storage: ``_apply_planned``
+    (commit a validated plan), ``compact``, ``alive_edges``, ``has_edge``,
+    ``n_edges``, and optionally ``_shard_tables`` (per-shard snapshot
+    payload).
+    """
 
     def __init__(
         self,
@@ -124,12 +182,6 @@ class GraphStore:
         self.vlabels = np.asarray(vlabels, dtype=np.int32).copy()
         assert self.vlabels.shape == (n_vertices,)
         self.n_vertices = int(n_vertices)
-        # undirected canonical edge table (lo < hi), append-only + alive mask
-        self._lo = np.zeros(0, dtype=np.int64)
-        self._hi = np.zeros(0, dtype=np.int64)
-        self._lab = np.zeros(0, dtype=np.int64)
-        self._alive = np.zeros(0, dtype=bool)
-        self._pos: dict[tuple[int, int], int] = {}
         self._deg = np.zeros(n_vertices, dtype=np.int64)
         self.degree_cap = degree_cap
         self.compact_every = compact_every
@@ -143,7 +195,7 @@ class GraphStore:
     # -- construction --------------------------------------------------------
 
     @classmethod
-    def from_graph(cls, g: Graph, **kwargs) -> "GraphStore":
+    def from_graph(cls, g: Graph, **kwargs):
         """Seed a store from an immutable Graph (its edges become the base)."""
         vlab = np.asarray(g.vlabels)
         store = cls(int(vlab.shape[0]), vlab, **kwargs)
@@ -155,9 +207,14 @@ class GraphStore:
         )
         if batch.src.size:
             store.apply(batch)
-            store.epoch = 0  # seeding is epoch 0, not a mutation
-            store._snapshots.pop(1, None)
+            store._seed_reset()
         return store
+
+    def _seed_reset(self) -> None:
+        """Rewind the bookkeeping after ``from_graph``'s seeding batch:
+        the seed is epoch-0 base state, not a mutation."""
+        self.epoch = 0
+        self._snapshots.pop(1, None)
 
     def attach_index(self, index) -> None:
         """Attach an incremental-index listener (see core/incremental.py).
@@ -174,42 +231,6 @@ class GraphStore:
 
     # -- mutation ------------------------------------------------------------
 
-    def _canonicalize(self, batch: EdgeBatch):
-        """Valid records -> (lo, hi, lab, insert), self-loops dropped.
-
-        One op per undirected edge per batch: records repeating an earlier
-        (lo, hi) pair are dropped (first record wins, matching
-        ``symmetrize``'s dedup) — so an insert and a delete of the same edge
-        cannot interleave within one batch.
-        """
-        v = batch.valid.astype(bool)
-        s = np.asarray(batch.src, dtype=np.int64)[v]
-        d = np.asarray(batch.dst, dtype=np.int64)[v]
-        lab = np.asarray(batch.elabels, dtype=np.int64)[v]
-        ins = np.asarray(batch.insert, dtype=bool)[v]
-        lo = np.minimum(s, d)
-        hi = np.maximum(s, d)
-        keep = lo != hi
-        lo, hi, lab, ins = lo[keep], hi[keep], lab[keep], ins[keep]
-        if lo.size and (lo.min() < 0 or hi.max() >= self.n_vertices):
-            raise ValueError("edge endpoint out of range for this store")
-        seen: set[tuple[int, int]] = set()
-        order = []
-        for i in range(lo.size):
-            key = (int(lo[i]), int(hi[i]))
-            if key in seen:
-                continue
-            seen.add(key)
-            order.append(i)
-        idx = np.asarray(order, dtype=np.int64)
-        return lo[idx], hi[idx], lab[idx], ins[idx]
-
-    def _append_rows(self, lo, hi, lab):
-        self._lo = np.concatenate([self._lo, lo])
-        self._hi = np.concatenate([self._hi, hi])
-        self._lab = np.concatenate([self._lab, lab])
-        self._alive = np.concatenate([self._alive, np.ones(lo.size, dtype=bool)])
-
     def apply(self, batch: EdgeBatch) -> ApplyResult:
         """Apply one insert/delete batch; bumps the epoch; feeds the index.
 
@@ -217,20 +238,18 @@ class GraphStore:
         on post-batch degrees) before any state mutates — a raising
         ``apply`` leaves the store exactly as it was.
         """
-        lo, hi, lab, ins = self._canonicalize(batch)
+        lo, hi, lab, ins = canonicalize_batch(batch, self.n_vertices)
         # ---- validate phase: plan every action, mutate nothing ------------
-        plan: list[tuple[int, int | None]] = []  # (record idx, row | None)
+        plan: list[int] = []
         n_skip = 0
         if self.degree_cap is not None:
             ddelta: dict[int, int] = {}
         for i in range(lo.size):
             key = (int(lo[i]), int(hi[i]))
-            row = self._pos.get(key)
-            present = row is not None and self._alive[row]
-            if ins[i] == present:  # duplicate insert / missing delete
+            if ins[i] == self.has_edge(*key):  # dup insert / missing delete
                 n_skip += 1
                 continue
-            plan.append((i, row))
+            plan.append(i)
             if self.degree_cap is not None:
                 d = 1 if ins[i] else -1
                 ddelta[key[0]] = ddelta.get(key[0], 0) + d
@@ -245,11 +264,132 @@ class GraphStore:
                         "at store construction (store state is unchanged)"
                     )
         # ---- apply phase: no failure paths below ---------------------------
+        applied, n_ins, n_del = self._apply_planned(plan, lo, hi, lab, ins)
+        self.epoch += 1
+        self._n_batches += 1
+        if self._index is not None and applied.src.size:
+            self._index.apply_batch(self, applied)
+        if self.compact_every and self._n_batches % self.compact_every == 0:
+            self.compact()
+        self._gc_snapshots()
+        return ApplyResult(self.epoch, applied, n_ins, n_del, n_skip)
+
+    def add_edges(self, edges, elabels=None) -> ApplyResult:
+        return self.apply(make_edge_batch(edges, elabels, insert=True))
+
+    def remove_edges(self, edges) -> ApplyResult:
+        return self.apply(make_edge_batch(edges, insert=False))
+
+    # -- storage interface (implemented by concrete stores) ------------------
+
+    def _apply_planned(self, plan, lo, hi, lab, ins):
+        """Commit validated records; returns (applied EdgeBatch, n_ins, n_del)."""
+        raise NotImplementedError
+
+    def compact(self) -> int:
+        raise NotImplementedError
+
+    def alive_edges(self):
+        """Current edge set as host arrays ``(lo, hi, lab)`` — the canonical
+        (undirected, lo < hi) records, one per alive edge."""
+        raise NotImplementedError
+
+    def has_edge(self, u: int, v: int) -> bool:
+        raise NotImplementedError
+
+    @property
+    def n_edges(self) -> int:
+        raise NotImplementedError
+
+    def _shard_tables(self) -> Optional[tuple]:
+        """Per-shard snapshot payload (None for unsharded stores)."""
+        return None
+
+    # -- snapshots -----------------------------------------------------------
+
+    def snapshot(self) -> GraphSnapshot:
+        """Immutable (graph, frozen index) view at the current epoch, cached."""
+        snap = self._snapshots.get(self.epoch)
+        if snap is None:
+            lo, hi, lab = self.alive_edges()
+            g = build_graph(
+                self.n_vertices, self.vlabels,
+                np.stack([lo, hi], axis=1), lab,
+            )
+            idx = self._index.freeze() if self._index is not None else None
+            snap = GraphSnapshot(self.epoch, g, idx, self._shard_tables())
+            self._snapshots[self.epoch] = snap
+        return snap
+
+    def pin(self, epoch: int | None = None) -> GraphSnapshot:
+        """Snapshot + refcount: the epoch survives ``_gc_snapshots`` until a
+        matching ``release``.  Serving pins each query's admit-time epoch."""
+        snap = self.snapshot() if epoch is None else self._snapshots[epoch]
+        self._pins[snap.epoch] = self._pins.get(snap.epoch, 0) + 1
+        return snap
+
+    def release(self, epoch: int) -> None:
+        n = self._pins.get(epoch, 0) - 1
+        if n <= 0:
+            self._pins.pop(epoch, None)
+        else:
+            self._pins[epoch] = n
+        self._gc_snapshots()
+
+    def _gc_snapshots(self) -> None:
+        for ep in list(self._snapshots):
+            if ep != self.epoch and self._pins.get(ep, 0) <= 0:
+                del self._snapshots[ep]
+
+    # -- inspection ----------------------------------------------------------
+
+    @property
+    def max_degree(self) -> int:
+        return int(self._deg.max()) if self._deg.size else 0
+
+    def degrees(self) -> np.ndarray:
+        return self._deg.copy()
+
+    def stats(self) -> StoreStats:
+        return StoreStats(
+            epoch=self.epoch,
+            n_vertices=self.n_vertices,
+            n_edges_alive=self.n_edges,
+            n_edges_dead=self._n_edges_dead(),
+            n_batches_applied=self._n_batches,
+            n_compactions=self._n_compactions,
+            n_snapshots_cached=len(self._snapshots),
+        )
+
+    def _n_edges_dead(self) -> int:
+        raise NotImplementedError
+
+
+class GraphStore(BaseGraphStore):
+    """Mutable vertex-labeled graph with epoch-versioned snapshots."""
+
+    def __init__(self, n_vertices, vlabels, **kwargs):
+        super().__init__(n_vertices, vlabels, **kwargs)
+        # undirected canonical edge table (lo < hi), append-only + alive mask
+        self._lo = np.zeros(0, dtype=np.int64)
+        self._hi = np.zeros(0, dtype=np.int64)
+        self._lab = np.zeros(0, dtype=np.int64)
+        self._alive = np.zeros(0, dtype=bool)
+        self._pos: dict[tuple[int, int], int] = {}
+
+    def _append_rows(self, lo, hi, lab):
+        self._lo = np.concatenate([self._lo, lo])
+        self._hi = np.concatenate([self._hi, hi])
+        self._lab = np.concatenate([self._lab, lab])
+        self._alive = np.concatenate([self._alive, np.ones(lo.size, dtype=bool)])
+
+    def _apply_planned(self, plan, lo, hi, lab, ins):
         app_lo, app_hi, app_lab, app_ins = [], [], [], []
         new_lo, new_hi, new_lab = [], [], []
         n_ins = n_del = 0
-        for i, row in plan:
+        for i in plan:
             key = (int(lo[i]), int(hi[i]))
+            row = self._pos.get(key)
             if ins[i]:
                 if row is not None:  # revive a dead row
                     self._alive[row] = True
@@ -285,20 +425,7 @@ class GraphStore:
             insert=np.asarray(app_ins, dtype=bool),
             valid=np.ones(len(app_lo), dtype=bool),
         )
-        self.epoch += 1
-        self._n_batches += 1
-        if self._index is not None and applied.src.size:
-            self._index.apply_batch(self, applied)
-        if self.compact_every and self._n_batches % self.compact_every == 0:
-            self.compact()
-        self._gc_snapshots()
-        return ApplyResult(self.epoch, applied, n_ins, n_del, n_skip)
-
-    def add_edges(self, edges, elabels=None) -> ApplyResult:
-        return self.apply(make_edge_batch(edges, elabels, insert=True))
-
-    def remove_edges(self, edges) -> ApplyResult:
-        return self.apply(make_edge_batch(edges, insert=False))
+        return applied, n_ins, n_del
 
     def compact(self) -> int:
         """Drop dead rows from the edge table; returns rows reclaimed.
@@ -322,80 +449,279 @@ class GraphStore:
         self._n_compactions += 1
         return dead
 
-    # -- snapshots -----------------------------------------------------------
-
-    def snapshot(self) -> GraphSnapshot:
-        """Immutable (graph, frozen index) view at the current epoch, cached."""
-        snap = self._snapshots.get(self.epoch)
-        if snap is None:
-            keep = self._alive
-            edges = np.stack([self._lo[keep], self._hi[keep]], axis=1)
-            g = build_graph(self.n_vertices, self.vlabels, edges,
-                            self._lab[keep])
-            idx = self._index.freeze() if self._index is not None else None
-            snap = GraphSnapshot(self.epoch, g, idx)
-            self._snapshots[self.epoch] = snap
-        return snap
-
-    def pin(self, epoch: int | None = None) -> GraphSnapshot:
-        """Snapshot + refcount: the epoch survives ``_gc_snapshots`` until a
-        matching ``release``.  Serving pins each query's admit-time epoch."""
-        snap = self.snapshot() if epoch is None else self._snapshots[epoch]
-        self._pins[snap.epoch] = self._pins.get(snap.epoch, 0) + 1
-        return snap
-
-    def release(self, epoch: int) -> None:
-        n = self._pins.get(epoch, 0) - 1
-        if n <= 0:
-            self._pins.pop(epoch, None)
-        else:
-            self._pins[epoch] = n
-        self._gc_snapshots()
-
-    def _gc_snapshots(self) -> None:
-        for ep in list(self._snapshots):
-            if ep != self.epoch and self._pins.get(ep, 0) <= 0:
-                del self._snapshots[ep]
-
-    # -- inspection ----------------------------------------------------------
+    def alive_edges(self):
+        keep = self._alive
+        return self._lo[keep], self._hi[keep], self._lab[keep]
 
     @property
     def n_edges(self) -> int:
         return int(self._alive.sum())
 
-    @property
-    def max_degree(self) -> int:
-        return int(self._deg.max()) if self._deg.size else 0
-
-    def degrees(self) -> np.ndarray:
-        return self._deg.copy()
+    def _n_edges_dead(self) -> int:
+        return int((~self._alive).sum())
 
     def has_edge(self, u: int, v: int) -> bool:
         row = self._pos.get((min(u, v), max(u, v)))
         return row is not None and bool(self._alive[row])
 
-    def stats(self) -> StoreStats:
-        return StoreStats(
-            epoch=self.epoch,
-            n_vertices=self.n_vertices,
-            n_edges_alive=self.n_edges,
-            n_edges_dead=int((~self._alive).sum()),
-            n_batches_applied=self._n_batches,
-            n_compactions=self._n_compactions,
-            n_snapshots_cached=len(self._snapshots),
+
+# ---------------------------------------------------------------------------
+# Vertex-partitioned store.
+# ---------------------------------------------------------------------------
+
+
+class _ShardTable:
+    """One shard's slice of the canonical edge table.
+
+    Stores the edges whose canonical ``lo`` endpoint this shard owns, plus
+    the shard's **ghost list**: refcounts of remote vertices that alive
+    local edges reference (either direction).  ``delta_log`` records one
+    ``(epoch, n_inserted, n_deleted, n_boundary)`` row per batch that
+    touched this shard; it is truncated on compaction (the table itself is
+    the merged state).
+    """
+
+    def __init__(self):
+        self.lo = np.zeros(0, dtype=np.int64)
+        self.hi = np.zeros(0, dtype=np.int64)
+        self.lab = np.zeros(0, dtype=np.int64)
+        self.alive = np.zeros(0, dtype=bool)
+        self.pos: dict[tuple[int, int], int] = {}
+        self.ghosts: dict[int, int] = {}
+        self.delta_log: list[tuple[int, int, int, int]] = []
+
+    def _ghost_ref(self, v: int, delta: int) -> None:
+        n = self.ghosts.get(v, 0) + delta
+        if n <= 0:
+            self.ghosts.pop(v, None)
+        else:
+            self.ghosts[v] = n
+
+    def insert(self, key: tuple[int, int], lab: int) -> bool:
+        """Revive a dead row in place; returns False when the edge is new
+        (the caller accumulates new rows and bulk-appends once per batch —
+        per-record array growth would make batch application quadratic)."""
+        row = self.pos.get(key)
+        if row is None:
+            return False
+        self.alive[row] = True
+        self.lab[row] = lab
+        return True
+
+    def append_rows(self, lo, hi, lab) -> None:
+        """Bulk-append brand-new alive rows (one concatenate per batch)."""
+        base = self.alive.size
+        self.lo = np.concatenate([self.lo, np.asarray(lo, dtype=np.int64)])
+        self.hi = np.concatenate([self.hi, np.asarray(hi, dtype=np.int64)])
+        self.lab = np.concatenate([self.lab, np.asarray(lab, dtype=np.int64)])
+        self.alive = np.concatenate(
+            [self.alive, np.ones(len(lo), dtype=bool)]
         )
+        for i, key in enumerate(zip(lo, hi)):
+            self.pos[(int(key[0]), int(key[1]))] = base + i
+
+    def delete(self, key: tuple[int, int]) -> int:
+        row = self.pos[key]
+        self.alive[row] = False
+        return int(self.lab[row])
+
+    def compact(self) -> int:
+        self.delta_log.clear()  # the table below *is* the merged state
+        dead = int((~self.alive).sum())
+        if dead == 0:
+            return 0
+        keep = self.alive
+        self.lo = self.lo[keep]
+        self.hi = self.hi[keep]
+        self.lab = self.lab[keep]
+        self.alive = np.ones(self.lo.size, dtype=bool)
+        self.pos = {
+            (int(lo), int(hi)): i
+            for i, (lo, hi) in enumerate(zip(self.lo, self.hi))
+        }
+        return dead
+
+    def alive_rows(self):
+        keep = self.alive
+        return self.lo[keep], self.hi[keep], self.lab[keep]
+
+
+class ShardStats(NamedTuple):
+    shard: int
+    n_vertices_owned: int
+    n_edges: int           # alive canonical edges stored here (owner of lo)
+    n_ghosts: int          # distinct remote vertices referenced by alive edges
+    n_boundary_edges: int  # alive edges with endpoints on two shards
+    n_log_entries: int     # delta-log rows since the last compaction
+
+
+class ShardedGraphStore(BaseGraphStore):
+    """Vertex-partitioned ``GraphStore``: same contract, sharded storage.
+
+    The vertex axis is split into ``n_shards`` contiguous owner slices (the
+    partition plan comes from ``core/distributed.py`` — the one authority
+    every layer shares).  Each canonical edge (lo < hi) lives in the table
+    of ``owner(lo)``; a cross-shard edge additionally registers its remote
+    endpoint in *both* owners' ghost lists, which is exactly the set of
+    remote vertices each shard's count rows depend on (the boundary the
+    incremental index exchanges over).
+
+    ``apply`` validates globally (same atomic degree-cap semantics as
+    ``GraphStore``), commits per shard, and logs one delta row per touched
+    shard.  ``snapshot()`` is epoch-consistent across shards by
+    construction — all shards commit inside one ``apply`` before the epoch
+    bumps — and carries the per-shard tables for the partitioned engines.
+    Applying the same batches to a ``GraphStore`` and a ``ShardedGraphStore``
+    yields bit-identical snapshot graphs, degrees, and (via the index
+    listeners) digests; ``tests/test_distributed_core.py`` asserts this.
+    """
+
+    def __init__(self, n_vertices, vlabels, *, n_shards: int, **kwargs):
+        super().__init__(n_vertices, vlabels, **kwargs)
+        from repro.core.distributed import vertex_partition
+
+        self.plan = vertex_partition(self.n_vertices, n_shards)
+        self.n_shards = int(n_shards)
+        self._shards = [_ShardTable() for _ in range(self.n_shards)]
+        self._n_boundary_alive = 0   # alive cross-shard edges right now
+        self._n_boundary_records = 0  # cumulative boundary records applied
+
+    def _owner(self, v: int) -> int:
+        return v // self.plan.v_local
+
+    def _apply_planned(self, plan, lo, hi, lab, ins):
+        app_lo, app_hi, app_lab, app_ins = [], [], [], []
+        n_ins = n_del = 0
+        per_shard: dict[int, list[int]] = {}  # shard -> [ins_delta, del_delta, boundary]
+        new_rows: dict[int, list[tuple[int, int, int]]] = {}  # shard -> rows
+        for i in plan:
+            key = (int(lo[i]), int(hi[i]))
+            s_lo, s_hi = self._owner(key[0]), self._owner(key[1])
+            cross = s_lo != s_hi
+            shard = self._shards[s_lo]
+            if ins[i]:
+                if not shard.insert(key, int(lab[i])):  # brand-new edge
+                    new_rows.setdefault(s_lo, []).append(
+                        (key[0], key[1], int(lab[i]))
+                    )
+                self._deg[key[0]] += 1
+                self._deg[key[1]] += 1
+                n_ins += 1
+                if cross:
+                    shard._ghost_ref(key[1], +1)
+                    self._shards[s_hi]._ghost_ref(key[0], +1)
+                    self._n_boundary_alive += 1
+            else:
+                lab[i] = shard.delete(key)  # report the label actually removed
+                self._deg[key[0]] -= 1
+                self._deg[key[1]] -= 1
+                n_del += 1
+                if cross:
+                    shard._ghost_ref(key[1], -1)
+                    self._shards[s_hi]._ghost_ref(key[0], -1)
+                    self._n_boundary_alive -= 1
+            for s in {s_lo, s_hi}:
+                row = per_shard.setdefault(s, [0, 0, 0])
+                row[0] += int(ins[i])
+                row[1] += int(not ins[i])
+                row[2] += int(cross)
+            if cross:
+                self._n_boundary_records += 1
+            app_lo.append(lo[i])
+            app_hi.append(hi[i])
+            app_lab.append(lab[i])
+            app_ins.append(bool(ins[i]))
+        for s, rows in new_rows.items():
+            self._shards[s].append_rows(
+                [r[0] for r in rows], [r[1] for r in rows],
+                [r[2] for r in rows],
+            )
+        next_epoch = self.epoch + 1
+        for s, (a, d, b) in per_shard.items():
+            self._shards[s].delta_log.append((next_epoch, a, d, b))
+        applied = EdgeBatch(
+            src=np.asarray(app_lo, dtype=np.int64),
+            dst=np.asarray(app_hi, dtype=np.int64),
+            elabels=np.asarray(app_lab, dtype=np.int64),
+            insert=np.asarray(app_ins, dtype=bool),
+            valid=np.ones(len(app_lo), dtype=bool),
+        )
+        return applied, n_ins, n_del
+
+    def _seed_reset(self) -> None:
+        super()._seed_reset()
+        for s in self._shards:  # the seed is base state, not a delta
+            s.delta_log.clear()
+
+    def compact(self) -> int:
+        dead = sum(s.compact() for s in self._shards)
+        if dead:
+            self._n_compactions += 1
+        return dead
+
+    def alive_edges(self):
+        rows = [s.alive_rows() for s in self._shards]
+        return (
+            np.concatenate([r[0] for r in rows]),
+            np.concatenate([r[1] for r in rows]),
+            np.concatenate([r[2] for r in rows]),
+        )
+
+    @property
+    def n_edges(self) -> int:
+        return int(sum(int(s.alive.sum()) for s in self._shards))
+
+    def _n_edges_dead(self) -> int:
+        return int(sum(int((~s.alive).sum()) for s in self._shards))
+
+    def has_edge(self, u: int, v: int) -> bool:
+        key = (min(u, v), max(u, v))
+        shard = self._shards[self._owner(key[0])]
+        row = shard.pos.get(key)
+        return row is not None and bool(shard.alive[row])
+
+    def _shard_tables(self) -> tuple:
+        return tuple(s.alive_rows() for s in self._shards)
+
+    def shard_stats(self) -> list[ShardStats]:
+        out = []
+        for i, s in enumerate(self._shards):
+            lo, hi = self.plan.bounds(i)
+            keep = s.alive
+            boundary = int(
+                (s.hi[keep] // self.plan.v_local
+                 != s.lo[keep] // self.plan.v_local).sum()
+            )
+            out.append(ShardStats(
+                shard=i,
+                n_vertices_owned=hi - lo,
+                n_edges=int(keep.sum()),
+                n_ghosts=len(s.ghosts),
+                n_boundary_edges=boundary,
+                n_log_entries=len(s.delta_log),
+            ))
+        return out
+
+    @property
+    def n_boundary_edges(self) -> int:
+        """Alive edges whose endpoints live on different shards."""
+        return self._n_boundary_alive
 
 
 def as_snapshot(data) -> GraphSnapshot:
-    """Normalize Graph | GraphStore | GraphSnapshot -> GraphSnapshot.
+    """Normalize Graph | GraphStore | ShardedGraphStore | GraphSnapshot ->
+    GraphSnapshot.
 
     The engines' single entry point for accepting any graph-like input:
     a plain Graph becomes an epoch-0 snapshot with no index.
     """
     if isinstance(data, GraphSnapshot):
         return data
-    if isinstance(data, GraphStore):
+    if isinstance(data, BaseGraphStore):
         return data.snapshot()
     if isinstance(data, Graph):
         return GraphSnapshot(0, data, None)
-    raise TypeError(f"expected Graph | GraphStore | GraphSnapshot, got {type(data)}")
+    raise TypeError(
+        f"expected Graph | GraphStore | ShardedGraphStore | GraphSnapshot, "
+        f"got {type(data)}"
+    )

@@ -25,10 +25,17 @@ jit traces of ``batched_ilgf_round``:
 * ``shutdown()`` drains (or cancels) active slots and **reports every
   queued-but-unstarted request as cancelled** — nothing is silently
   dropped.
+* **Sharded operation** is transparent: the backing store may be a
+  ``ShardedGraphStore`` (same epoch/pin/mutation contract), and setting
+  ``GraphServiceConfig(mesh=…)`` runs each tick's peeling round
+  vertex-partitioned under ``shard_map``
+  (``core/distributed.py::sharded_batched_ilgf_round``) with bit-identical
+  results — per-epoch shard buckets are prepared once and cached alongside
+  the snapshot.
 
 This is the serving analogue of the ROADMAP north star: many concurrent
 user queries amortize one fused device dispatch per round while the data
-graph takes live updates.
+graph takes live updates and the vertex axis scales across devices.
 """
 
 from __future__ import annotations
@@ -50,7 +57,7 @@ from repro.core.batch_engine import (
 from repro.core.cni import CniValue, default_max_p
 from repro.core.engine import QueryStats, search_filtered
 from repro.graphs.csr import Graph, max_degree, to_host
-from repro.graphs.store import GraphSnapshot, GraphStore, as_snapshot
+from repro.graphs.store import BaseGraphStore, GraphSnapshot, as_snapshot
 
 
 from repro.configs.cni_engine import CONFIG as _ENGINE_CONFIG
@@ -69,6 +76,12 @@ class GraphServiceConfig:
     searcher: str = _ENGINE_CONFIG.searcher
     search_vertex_cap: int = 8192
     max_rounds_per_query: int = 1_000  # safety valve: finalize early (sound)
+    # optional device mesh: ticks run the vertex-partitioned peeling round
+    # (core/distributed.py) instead of the single-device one — bit-identical
+    # results, sharded work.  A ShardedGraphStore whose plan matches the
+    # mesh contributes its per-shard tables directly.
+    mesh: object = None
+    shard_axis: str = _ENGINE_CONFIG.distributed_axis
 
 
 @dataclasses.dataclass
@@ -93,19 +106,20 @@ class CancelledRequest(NamedTuple):
 class _EpochEntry(NamedTuple):
     snapshot: GraphSnapshot
     host_graph: Graph  # numpy-backed twin for the search side
+    sharded: Optional[tuple] = None  # (ShardedEdges, PartitionPlan) when meshed
 
 
 class GraphQueryService:
     """Continuous-batching subgraph-query service over one mutable graph.
 
     ``data`` may be a ``Graph`` (static service, mutations raise), a
-    ``GraphStore`` (live updates via ``add_edges``/``remove_edges``), or a
-    ``GraphSnapshot``.
+    ``GraphStore`` / ``ShardedGraphStore`` (live updates via
+    ``add_edges``/``remove_edges``), or a ``GraphSnapshot``.
     """
 
     def __init__(self, data, cfg: GraphServiceConfig | None = None):
-        self.store: GraphStore | None = (
-            data if isinstance(data, GraphStore) else None
+        self.store: BaseGraphStore | None = (
+            data if isinstance(data, BaseGraphStore) else None
         )
         snap = as_snapshot(data)
         self.data = snap.graph
@@ -152,7 +166,17 @@ class GraphQueryService:
     def _cache_epoch(self, snap: GraphSnapshot) -> _EpochEntry:
         entry = self._epochs.get(snap.epoch)
         if entry is None:
-            entry = _EpochEntry(snapshot=snap, host_graph=to_host(snap.graph))
+            sharded = None
+            if self.cfg.mesh is not None:
+                # partition this epoch's edge set once; every tick on the
+                # epoch reuses the buckets (and the cached round trace)
+                from repro.core.distributed import prepare_sharded_edges
+
+                sharded = prepare_sharded_edges(
+                    snap, self.cfg.mesh, self.cfg.shard_axis
+                )[:2]
+            entry = _EpochEntry(snapshot=snap, host_graph=to_host(snap.graph),
+                                sharded=sharded)
             self._epochs[snap.epoch] = entry
         return entry
 
@@ -261,13 +285,26 @@ class GraphQueryService:
                 ords=jnp.where(mask[:, None], self._ords, 0),
                 counts=self._counts, digest=self._digest, mnd=self._mnd,
             )
-            new_alive, cand, changed = batched_ilgf_round(
-                self._epochs[epoch].snapshot.graph, qb,
-                self._alive & mask[:, None],
-                n_labels=self.cfg.max_query_labels,
-                d_max=self.d_max, max_p=self.max_p,
-                variant=self.cfg.filter_variant,
-            )
+            entry = self._epochs[epoch]
+            if entry.sharded is not None:
+                from repro.core.distributed import sharded_batched_ilgf_round
+
+                se, plan = entry.sharded
+                new_alive, cand, changed = sharded_batched_ilgf_round(
+                    se, plan, qb, self._alive & mask[:, None],
+                    mesh=self.cfg.mesh, axis=self.cfg.shard_axis,
+                    n_labels=self.cfg.max_query_labels,
+                    d_max=self.d_max, max_p=self.max_p,
+                    variant=self.cfg.filter_variant,
+                )
+            else:
+                new_alive, cand, changed = batched_ilgf_round(
+                    entry.snapshot.graph, qb,
+                    self._alive & mask[:, None],
+                    n_labels=self.cfg.max_query_labels,
+                    d_max=self.d_max, max_p=self.max_p,
+                    variant=self.cfg.filter_variant,
+                )
             converged = ~np.asarray(changed)
             alive_merged = jnp.where(mask[:, None], new_alive, alive_merged)
             for req in group:
