@@ -1,0 +1,187 @@
+"""Query-planner benches: matching-order speedup + plan-cache hit rate.
+
+The claim behind core/stats.py + core/planner.py: on label-skewed data the
+greedy smallest-|C(u)|-first rule can start enumeration at the wrong end of
+the query and materialize a hub cross-product, while the cost model — fed
+by the maintained label-pair statistics — orders the selective edges first.
+Rows:
+
+    planner/enum_greedy    — bfs_join_search under the built-in greedy order
+    planner/enum_planned   — same search under the planner's order
+    planner/speedup        — derived wall-clock ratio (acceptance: ≥ 1.3×)
+    planner/order_parity   — identical embedding sets under both orders
+    planner/plan           — cold planning cost (fingerprint + beam search)
+    planner/plan_cached    — repeat planning cost (cache hit path)
+    planner/cache_hit_rate — repeat-query service workload (>90% expected)
+
+``run_all(smoke=True)`` is the CI canary: tiny graph, one repetition, the
+same parity assertions.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    GraphStats,
+    IncrementalIndex,
+    QueryPlanner,
+    bfs_join_search,
+    greedy_matching_order,
+)
+from repro.core.ilgf import ilgf
+from repro.core.search import _host_adjacency
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.graphs.csr import build_graph, induced_subgraph, to_host
+from repro.graphs.store import GraphStore
+from repro.serve import GraphQueryService, GraphServiceConfig
+
+
+def _bench(fn, *, reps: int, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    return min(
+        (lambda t0: (fn(), time.perf_counter() - t0)[1])(time.perf_counter())
+        for _ in range(reps)
+    )
+
+
+def skewed_hub_workload(n_a: int, n_b: int, n_c: int, n_sel: int, seed=0):
+    """Label-skewed graph + 4-path query where greedy orders badly.
+
+    Label 0 (A, rare) is complete to label 1 (B, the hub class); B carries a
+    sparse ring (so every B has B-neighbors); label 2 (C, rare) touches B on
+    a common edge label, but only ``n_sel`` B–C edges carry the rare edge
+    label the query asks for.  The query path A–B–B–C forces greedy (which
+    starts at A, the smallest candidate set) through the A×B cross product
+    and the B×B self-join before the selective C edge ever applies; the
+    planner starts from C and keeps every intermediate table tiny.  The
+    vertex-label filter cannot help — edge labels are invisible to the
+    count-based CNI/ILGF stack, so both orders search identical candidates.
+    """
+    rng = np.random.default_rng(seed)
+    vlabels = np.array([0] * n_a + [1] * n_b + [2] * n_c)
+    a = np.arange(n_a)
+    b = n_a + np.arange(n_b)
+    c = n_a + n_b + np.arange(n_c)
+    edges, elabels = [], []
+    for x in a:
+        for y in b:
+            edges.append((x, y))
+            elabels.append(0)
+    for i in range(n_b):
+        edges.append((b[i], b[(i + 1) % n_b]))
+        elabels.append(0)
+    for z in c:
+        edges.append((int(rng.choice(b)), z))
+        elabels.append(0)
+    for y in rng.choice(b, size=n_sel, replace=False):
+        edges.append((int(y), int(rng.choice(c))))
+        elabels.append(1)
+    g = build_graph(vlabels.size, vlabels, np.asarray(edges),
+                    np.asarray(elabels))
+    q = build_graph(4, np.array([0, 1, 1, 2]),
+                    np.array([[0, 1], [1, 2], [2, 3]]),
+                    np.array([0, 0, 1]))
+    return g, q
+
+
+def bench_matching_order(rows: list, *, smoke: bool = False):
+    if smoke:
+        n_a, n_b, n_c, n_sel, reps = 4, 128, 5, 16, 1
+    else:
+        n_a, n_b, n_c, n_sel, reps = 16, 2000, 17, 128, 3
+    g, q = skewed_hub_workload(n_a, n_b, n_c, n_sel)
+    res = ilgf(g, q)
+    alive = np.asarray(res.alive)
+    cand = (np.asarray(res.candidates) & alive[:, None])[alive]
+    sub, _old = induced_subgraph(to_host(g), alive)
+    sizes = cand.sum(axis=0)
+    greedy = greedy_matching_order(sizes, _host_adjacency(q))
+    stats = GraphStats.from_graph(g)
+    planner = QueryPlanner(stats)
+    plan = planner.plan(q, candidate_counts=sizes)
+
+    t_g = _bench(lambda: bfs_join_search(sub, q, cand, order=greedy),
+                 reps=reps)
+    t_p = _bench(lambda: bfs_join_search(sub, q, cand,
+                                         order=list(plan.order)),
+                 reps=reps)
+    rows.append((
+        "planner/enum_greedy", t_g * 1e6,
+        f"order={''.join(map(str, greedy))};V={g.n_vertices}",
+    ))
+    rows.append((
+        "planner/enum_planned", t_p * 1e6,
+        f"order={''.join(map(str, plan.order))};est_cost={plan.est_cost:.3g}",
+    ))
+    rows.append(("planner/speedup", 0.0, f"{t_g / t_p:.2f}x_vs_greedy"))
+
+    e_g = bfs_join_search(sub, q, cand, order=greedy)
+    e_p = bfs_join_search(sub, q, cand, order=list(plan.order))
+    same = ({tuple(r) for r in e_g.tolist()}
+            == {tuple(r) for r in e_p.tolist()})
+    rows.append((
+        "planner/order_parity", 0.0,
+        f"{'ok' if same else 'MISMATCH'};n_emb={e_g.shape[0]}",
+    ))
+    # the canary must fail the CI step, not just print a CSV cell
+    assert same and e_g.shape[0] > 0, "planned order changed the result set"
+
+    # planning overhead: cold (fingerprint + beam) vs cache hit
+    t_cold = _bench(
+        lambda: QueryPlanner(stats).plan(q, candidate_counts=sizes),
+        reps=reps,
+    )
+    t_hit = _bench(lambda: planner.plan(q, candidate_counts=sizes),
+                   reps=reps)
+    rows.append(("planner/plan", t_cold * 1e6, "cold;beam_width=4"))
+    rows.append(("planner/plan_cached", t_hit * 1e6, "cache_hit"))
+    return rows
+
+
+def bench_plan_cache(rows: list, *, smoke: bool = False):
+    """Repeat-query service workload: one shared epoch-aware PlanCache."""
+    if smoke:
+        n_v, n_e, n_q, repeats = 200, 700, 4, 4
+    else:
+        n_v, n_e, n_q, repeats = 1000, 4000, 8, 12
+    g = random_labeled_graph(n_v, n_e, 8, n_edge_labels=2, seed=0)
+    store = GraphStore.from_graph(g, degree_cap=64)
+    store.attach_index(IncrementalIndex())
+    svc = GraphQueryService(store, GraphServiceConfig(
+        max_slots=4, max_query_vertices=8, max_query_labels=8,
+        plan_queries=True,
+    ))
+    queries = [random_walk_query(g, 5, seed=10 + i) for i in range(n_q)]
+    rng = np.random.default_rng(1)
+    submissions = [q for q in queries for _ in range(repeats)]
+    rng.shuffle(submissions)
+
+    t0 = time.perf_counter()
+    rids = []
+    for i, q in enumerate(submissions):
+        rids.append(svc.submit(q))
+        if i == len(submissions) // 2:
+            # live mutation mid-workload: small drift keeps the cache warm
+            svc.add_edges([[0, n_v - 1], [1, n_v - 2]])
+    done = svc.run_to_completion()
+    dt = time.perf_counter() - t0
+    assert {r for r, _, _ in done} == set(rids)
+
+    pc = svc.planner.cache
+    rows.append((
+        "planner/cache_hit_rate", dt * 1e6 / max(1, len(submissions)),
+        f"hit_rate={pc.hit_rate:.3f};hits={pc.hits};misses={pc.misses};"
+        f"epochs={store.epoch + 1}",
+    ))
+    return rows
+
+
+def run_all(*, smoke: bool = False) -> list:
+    rows: list = []
+    bench_matching_order(rows, smoke=smoke)
+    bench_plan_cache(rows, smoke=smoke)
+    return rows

@@ -1,11 +1,13 @@
 """Benchmark harness: one section per paper table/figure + roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] [--section NAME]
+                                            [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     graph    — the paper's experiments (Figs 7-11 analogues, §4)
     batch    — batched multi-query + serving throughput (batch_engine)
     update   — dynamic-graph store: incremental index maintenance throughput
+    planner  — cost-based matching orders vs greedy + plan-cache hit rate
     shard    — vertex-partitioned engine scaling across 1/2/4 devices
                (each device count in a subprocess with
                ``--xla_force_host_platform_device_count``)
@@ -13,28 +15,37 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     roofline — derived terms from the dry-run artifacts (if present)
 
 ``--smoke`` shrinks the selected sections to tiny regression canaries for
-CI (``--smoke`` alone = batch + update canaries on every push; the shard
-canary runs as its own CI step via ``--section shard --smoke``).
+CI (``--smoke`` alone = batch + update + planner canaries on every push;
+the shard canary runs as its own CI step via ``--section shard --smoke``).
+``--json PATH`` additionally writes the emitted rows as a JSON list —
+CI uploads these as ``BENCH_*.json`` workflow artifacts so the smoke
+trajectory is inspectable per commit.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+_COLLECTED: list[tuple[str, float, str]] = []
 
 
 def _emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    _COLLECTED.extend(rows)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "graph", "batch", "update", "shard",
-                             "kernels", "roofline"])
+                    choices=["all", "graph", "batch", "update", "planner",
+                             "shard", "kernels", "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny canary benches only (CI jit-regression check)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI workflow artifact)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -47,10 +58,15 @@ def main() -> None:
             from benchmarks.update_benches import run_all as update_all
 
             _emit(update_all(smoke=True))
+        if args.section in ("all", "planner"):
+            from benchmarks.planner_benches import run_all as planner_all
+
+            _emit(planner_all(smoke=True))
         if args.section == "shard":  # opt-in: spawns one process per D
             from benchmarks.shard_benches import run_all as shard_all
 
             _emit(shard_all(smoke=True))
+        _write_json(args.json)
         return
     if args.section in ("all", "batch"):
         from benchmarks.batch_benches import run_all as batch_all
@@ -60,6 +76,10 @@ def main() -> None:
         from benchmarks.update_benches import run_all as update_all
 
         _emit(update_all())
+    if args.section in ("all", "planner"):
+        from benchmarks.planner_benches import run_all as planner_all
+
+        _emit(planner_all())
     if args.section in ("all", "shard"):
         from benchmarks.shard_benches import run_all as shard_all
 
@@ -91,6 +111,22 @@ def main() -> None:
             _emit(rows)
         except Exception as e:  # noqa: BLE001 — roofline needs dry-run files
             print(f"roofline/unavailable,0.0,{e}", file=sys.stderr)
+    _write_json(args.json)
+
+
+def _write_json(path: str | None) -> None:
+    if not path:
+        return
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(
+            [
+                {"name": name, "us_per_call": us, "derived": derived}
+                for name, us, derived in _COLLECTED
+            ],
+            fh,
+            indent=2,
+        )
+    print(f"wrote {len(_COLLECTED)} rows to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -33,5 +33,18 @@ from repro.core.filters import (
 from repro.core.ilgf import IlgfResult, ilgf, one_shot_filter, prepare_query
 from repro.core.khop import khop_counts, khop_match, refine_candidates_khop
 from repro.core.labels import LabelMap, build_label_map, counts_matrix, ord_of
-from repro.core.search import bfs_join_search, embeddings_equal, host_dfs_search
+from repro.core.planner import (
+    Plan,
+    PlanCache,
+    QueryPlanner,
+    canonical_form,
+    query_fingerprint,
+)
+from repro.core.search import (
+    bfs_join_search,
+    embeddings_equal,
+    greedy_matching_order,
+    host_dfs_search,
+)
+from repro.core.stats import GraphStats
 from repro.core.stream import scan_filter, stream_filter_file

@@ -294,6 +294,7 @@ class BatchQueryEngine:
         max_iters: int = 1_000,
         mesh=None,
         shard_axis: str = "data",
+        planner=None,
     ):
         from repro.graphs.store import as_snapshot
 
@@ -313,6 +314,9 @@ class BatchQueryEngine:
         self.d_max = max(1, max_degree(self.data))
         self.mesh = mesh
         self.shard_axis = shard_axis
+        # one planner (hence one plan cache) across every chunk and batch:
+        # same-fingerprint queries inside a batch plan once
+        self.planner = planner
         self._sharded = None
         if mesh is not None:
             # vertex-partition the data graph once (consuming the sharded
@@ -469,5 +473,6 @@ class BatchQueryEngine:
                 searcher=self.searcher,
                 search_vertex_cap=self.search_vertex_cap,
                 max_embeddings=max_embeddings,
+                planner=self.planner,
             )
             results[i] = (emb, stats)

@@ -580,13 +580,21 @@ def distributed_join_search(
     *,
     axis: str = "data",
     cap: int = 4096,
+    order=None,
 ):
     """Enumerate embeddings with sharded tables.  Returns (emb, overflowed).
 
     ``cap`` rows per shard; overflow is reported (callers fall back to the
     chunked host loop — in production, re-run with a bigger cap/mesh).
+    ``order``: explicit matching order (any permutation; defaults to the
+    shared greedy rule, like the host searchers).
     """
-    from repro.core.search import _dense_edge_labels, _host_adjacency
+    from repro.core.search import (
+        _as_order,
+        _dense_edge_labels,
+        _host_adjacency,
+        greedy_matching_order,
+    )
 
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
@@ -595,15 +603,10 @@ def distributed_join_search(
     q_adj = _host_adjacency(query)
     elab_matrix = jnp.asarray(_dense_edge_labels(data, data.n_vertices))
 
-    sizes = cand.sum(axis=0)
-    order = [int(np.argmin(sizes))]
-    remaining = set(range(n_q)) - set(order)
-    while remaining:
-        connected = [u for u in remaining if any(w in q_adj.get(u, {}) for w in order)]
-        pool = connected if connected else list(remaining)
-        nxt = min(pool, key=lambda u: sizes[u])
-        order.append(nxt)
-        remaining.remove(nxt)
+    if order is None:
+        order = greedy_matching_order(cand.sum(axis=0), q_adj)
+    else:
+        order = _as_order(order, n_q)
     pos_of = {u: i for i, u in enumerate(order)}
 
     seeds = np.nonzero(cand[:, order[0]])[0].astype(np.int32)

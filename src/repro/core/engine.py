@@ -48,15 +48,29 @@ def search_filtered(
     searcher: str = "join",
     search_vertex_cap: int = 8192,
     max_embeddings: int | None = None,
+    planner=None,
 ) -> np.ndarray:
     """Compaction → optional k-hop refinement → enumeration on one query.
 
     ``alive``: (V,) bool fixed-point mask; ``candidates``: (V, U) bool C(u)
     columns over *original* vertex ids.  Returns embeddings over original
     ids and fills the search-side fields of ``stats`` in place.
+
+    ``planner``: optional ``core.planner.QueryPlanner`` — when given, the
+    matching order comes from its cost model (fed the live post-filter
+    candidate counts) instead of the searchers' built-in greedy rule; the
+    chosen plan is recorded in ``stats.extras["plan"]``.  With ``None``
+    behavior is byte-for-byte today's greedy path.
     """
     stats.vertices_after = int(alive.sum())
     if stats.vertices_after == 0:
+        if planner is not None:
+            # keep the contract that a planner-enabled query always records
+            # its plan entry: nothing survived filtering, nothing to order
+            stats.extras["plan"] = {
+                "order": (), "source": "skipped", "est_cost": 0.0,
+                "fingerprint": None, "plan_seconds": 0.0,
+            }
         return np.zeros((0, query.vlabels.shape[0]), np.int64)
 
     sub, old_ids = induced_subgraph(data, alive)
@@ -67,6 +81,19 @@ def search_filtered(
         stats.filter_seconds += time.perf_counter() - t_ref
     stats.candidate_pairs = int(cand.sum())
 
+    order = None
+    if planner is not None:
+        t_plan = time.perf_counter()
+        plan = planner.plan(query, candidate_counts=cand.sum(axis=0))
+        order = plan.order
+        stats.extras["plan"] = {
+            "order": plan.order,
+            "source": plan.source,
+            "est_cost": plan.est_cost,
+            "fingerprint": plan.fingerprint,
+            "plan_seconds": time.perf_counter() - t_plan,
+        }
+
     t1 = time.perf_counter()
     if sub.n_vertices > search_vertex_cap:
         raise ValueError(
@@ -75,9 +102,11 @@ def search_filtered(
             "the distributed engine"
         )
     if searcher == "dfs":
-        emb = host_dfs_search(sub, query, cand, max_embeddings=max_embeddings)
+        emb = host_dfs_search(sub, query, cand, order=order,
+                              max_embeddings=max_embeddings)
     else:
-        emb = bfs_join_search(sub, query, cand, max_embeddings=max_embeddings)
+        emb = bfs_join_search(sub, query, cand, order=order,
+                              max_embeddings=max_embeddings)
     stats.search_seconds = time.perf_counter() - t1
     stats.n_embeddings = int(emb.shape[0])
     return old_ids[emb] if emb.size else emb
@@ -97,6 +126,11 @@ class SubgraphQueryEngine:
     vertex-partitioned across the mesh (``core/distributed.py``), consuming
     the sharded store's per-shard tables when the snapshot carries them.
     Results are bit-identical to the single-device engine (DESIGN.md §9).
+
+    ``planner``: optional ``core.planner.QueryPlanner`` — cost-based
+    matching orders (DESIGN.md §10) instead of the built-in greedy rule.
+    Embedding *sets* are identical either way (enumeration is
+    order-invariant); only enumeration cost changes.
     """
 
     def __init__(
@@ -110,6 +144,7 @@ class SubgraphQueryEngine:
         search_vertex_cap: int = 8192,
         mesh=None,
         shard_axis: str = "data",
+        planner=None,
     ):
         snap = as_snapshot(data)
         self._snapshot = snap
@@ -123,6 +158,7 @@ class SubgraphQueryEngine:
         self.search_vertex_cap = search_vertex_cap
         self.mesh = mesh
         self.shard_axis = shard_axis
+        self.planner = planner
         self._prepared = None
         if mesh is not None:
             # bucket the vertex partition once; every query() reuses it
@@ -168,5 +204,6 @@ class SubgraphQueryEngine:
             searcher=self.searcher,
             search_vertex_cap=self.search_vertex_cap,
             max_embeddings=max_embeddings,
+            planner=self.planner,
         )
         return emb, stats

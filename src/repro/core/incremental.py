@@ -56,6 +56,7 @@ from repro.core.cni import (
     default_max_p,
 )
 from repro.core.batch_engine import ceil_pow2
+from repro.core.stats import GraphStats
 from repro.graphs.store import EdgeBatch, GraphStore
 
 
@@ -89,6 +90,7 @@ class IndexSnapshot(NamedTuple):
     cni_log: np.ndarray    # (V,) float32 log-space CNI (universe ords)
     d_max: int
     max_p: int
+    stats: object = None   # frozen core.stats.GraphStats (planner input)
 
 
 class IncrementalIndex:
@@ -105,6 +107,7 @@ class IncrementalIndex:
         self._d_max_arg = d_max
         self.use_kernel = use_kernel
         self.stats = IndexStats()
+        self.graph_stats: GraphStats | None = None  # set by rebuild()
         self._epoch = -1  # set by rebuild()
 
     # -- (re)build -----------------------------------------------------------
@@ -131,6 +134,9 @@ class IncrementalIndex:
             np.add.at(counts, (hi, col_of[lo]), 1)
         self.counts = counts
         self._encode_all()
+        # planner statistics ride along: label histogram is static (the
+        # vertex set is), edge-dependent aggregates rebuild with the counts
+        self.graph_stats = GraphStats.from_store(store)
         self._epoch = store.epoch
 
     @staticmethod
@@ -166,6 +172,7 @@ class IncrementalIndex:
         st.edges_deleted += int((~applied.insert).sum())
 
         col_of = np.searchsorted(self.universe, self.vlabels)
+        self._fold_graph_stats(store, col_of, lo, hi, sign)
         np.add.at(self.counts, (lo, col_of[hi]), sign)
         np.add.at(self.counts, (hi, col_of[lo]), sign)
 
@@ -199,6 +206,18 @@ class IncrementalIndex:
             self._reencode(redo)
         self._epoch = store.epoch
 
+    def _fold_graph_stats(self, store, col_of, lo, hi, sign) -> None:
+        """Fold applied records into the planner statistics (core/stats.py).
+
+        An O(1)-per-record by-product of the count-delta pass: the column
+        ids are already in hand, so the label-pair frequencies and degree
+        mass update without touching the edge table.
+        """
+        if self.graph_stats is not None:
+            self.graph_stats.apply_records(
+                col_of[lo], col_of[hi], sign, epoch=store.epoch
+            )
+
     def _encode_rows(self, sub: np.ndarray):
         """(k, Lu) count rows -> (u64, canonical log) digest rows."""
         u64, log, _ = cni_from_counts_np(sub, self.d_max, self.max_p)
@@ -231,6 +250,8 @@ class IncrementalIndex:
             cni_log=self.cni_log.copy(),
             d_max=self.d_max,
             max_p=self.max_p,
+            stats=(self.graph_stats.copy()
+                   if self.graph_stats is not None else None),
         )
 
 
@@ -397,6 +418,8 @@ class ShardedIncrementalIndex(IncrementalIndex):
         own_hi = hi // v_local
         st.boundary_exchanged += int((own_lo != own_hi).sum())
         col_of = np.searchsorted(self.universe, self.vlabels)
+        # planner stats are global aggregates — fold once, not per shard
+        self._fold_graph_stats(store, col_of, lo, hi, sign)
 
         # ---- exchange + count deltas: each shard folds in exactly the
         # records that touch a row it owns --------------------------------
@@ -469,6 +492,8 @@ class ShardedIncrementalIndex(IncrementalIndex):
             cni_log=self.cni_log,
             d_max=self.d_max,
             max_p=self.max_p,
+            stats=(self.graph_stats.copy()
+                   if self.graph_stats is not None else None),
         )
 
 

@@ -14,20 +14,70 @@ Two engines:
   survivors.  The jitted inner step has fixed shapes; a host loop chunks
   tables that outgrow the buffer (bounded memory, no recursion).
 
-Both enumerate exactly the same embeddings (tested).  Matching order follows
-the candidate-cardinality greedy rule (smallest |C(u)| first, connected) —
-a global-pruning heuristic consistent with the paper's discussion (§2.2).
+Both enumerate exactly the same embeddings (tested), under *any* valid
+matching order — enumeration is order-invariant because every step checks
+full adjacency/edge-label/injectivity constraints.  By default the order
+follows the candidate-cardinality greedy rule (smallest |C(u)| first,
+connected; ``greedy_matching_order``) — a global-pruning heuristic
+consistent with the paper's discussion (§2.2) — and callers may pass an
+explicit ``order`` (the cost-based planner, core/planner.py, does).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs.csr import Graph
+
+# ---------------------------------------------------------------------------
+# Matching order.
+# ---------------------------------------------------------------------------
+
+
+def greedy_matching_order(sizes, adj) -> list[int]:
+    """Candidate-cardinality greedy matching order (§2.2 heuristic).
+
+    Start at the smallest candidate set, then repeatedly take the
+    smallest-|C(u)| vertex connected to the prefix (falling back to any
+    remaining vertex only when the query is disconnected).  This is the
+    single shared implementation of the rule both search engines used to
+    inline — deduplicated, and *fixed* to break cardinality ties by
+    smallest vertex id explicitly instead of inheriting whatever order a
+    Python set happens to iterate in (identical in practice for small int
+    sets, but now guaranteed, so orders are stable across interpreters).
+    The planner (core/planner.py) reuses it as the no-stats fallback.
+
+    ``sizes``: (U,) per-query-vertex candidate cardinalities;
+    ``adj``: ``{u: {w: edge_label}}`` query adjacency.
+    """
+    sizes = np.asarray(sizes)
+    n_q = int(sizes.shape[0])
+    order: list[int] = [int(np.argmin(sizes))]
+    remaining = [u for u in range(n_q) if u != order[0]]
+    while remaining:
+        connected = [u for u in remaining
+                     if any(w in adj.get(u, {}) for w in order)]
+        pool = connected if connected else remaining
+        nxt = min(pool, key=lambda u: (sizes[u], u))
+        order.append(nxt)
+        remaining.remove(nxt)
+    return order
+
+
+def _as_order(order: Sequence[int], n_q: int) -> list[int]:
+    """Validate a caller-supplied matching order (any permutation is legal)."""
+    o = [int(u) for u in order]
+    if sorted(o) != list(range(n_q)):
+        raise ValueError(
+            f"matching order must be a permutation of range({n_q}), got {o}"
+        )
+    return o
+
 
 # ---------------------------------------------------------------------------
 # Host DFS oracle (Ullmann subroutine, Algorithms 4-5).
@@ -49,27 +99,24 @@ def host_dfs_search(
     query: Graph,
     candidates: np.ndarray,
     *,
+    order: Sequence[int] | None = None,
     max_embeddings: int | None = None,
 ) -> np.ndarray:
     """All embeddings (rows = mappings, columns = query vertices).
 
-    ``candidates``: (V, U) bool — C(u) columns from ILGF.
+    ``candidates``: (V, U) bool — C(u) columns from ILGF.  ``order``: an
+    explicit matching order (any permutation of the query vertices; the
+    planner supplies one); defaults to the greedy rule.
     """
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
     d_adj = _host_adjacency(data)
     q_adj = _host_adjacency(query)
 
-    # matching order: smallest candidate set first, stay connected
-    sizes = cand.sum(axis=0)
-    order: list[int] = [int(np.argmin(sizes))]
-    remaining = set(range(n_q)) - set(order)
-    while remaining:
-        connected = [u for u in remaining if any(w in q_adj.get(u, {}) for w in order)]
-        pool = connected if connected else list(remaining)
-        nxt = min(pool, key=lambda u: sizes[u])
-        order.append(nxt)
-        remaining.remove(nxt)
+    if order is None:
+        order = greedy_matching_order(cand.sum(axis=0), q_adj)
+    else:
+        order = _as_order(order, n_q)
 
     results: list[list[int]] = []
     mapping = [-1] * n_q
@@ -178,6 +225,7 @@ def bfs_join_search(
     query: Graph,
     candidates: np.ndarray,
     *,
+    order: Sequence[int] | None = None,
     chunk_rows: int = 8192,
     max_embeddings: int | None = None,
 ) -> np.ndarray:
@@ -186,6 +234,7 @@ def bfs_join_search(
     Host-side orchestration keeps the result set (it is host data by
     definition); every *large* O(R·C·J) validity evaluation is jitted, and
     small levels run directly in numpy (transfer-overhead-bound regime).
+    ``order``: explicit matching order (see ``host_dfs_search``).
     """
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
@@ -194,15 +243,10 @@ def bfs_join_search(
     elab_np = _dense_edge_labels(data, n_d)
     elab_matrix = None  # device copy made lazily on first jitted level
 
-    sizes = cand.sum(axis=0)
-    order: list[int] = [int(np.argmin(sizes))]
-    remaining = set(range(n_q)) - set(order)
-    while remaining:
-        connected = [u for u in remaining if any(w in q_adj.get(u, {}) for w in order)]
-        pool = connected if connected else list(remaining)
-        nxt = min(pool, key=lambda u: sizes[u])
-        order.append(nxt)
-        remaining.remove(nxt)
+    if order is None:
+        order = greedy_matching_order(cand.sum(axis=0), q_adj)
+    else:
+        order = _as_order(order, n_q)
     pos_of = {u: i for i, u in enumerate(order)}
 
     # seed table with u_0's candidates

@@ -1,0 +1,195 @@
+"""Incrementally-maintained graph statistics for cost-based query planning.
+
+The planner (core/planner.py) needs three aggregate views of the data graph
+to rank matching orders:
+
+* **Label histogram** — how many data vertices carry each label: the round-0
+  candidate-set cardinality estimate for a query vertex of that label.
+* **Per-label degree mass** — Σ deg(v) over the vertices of each label,
+  giving the mean degree (expansion fan-out) of the label class.
+* **Label-pair edge frequencies** — how many (directed) edges join an
+  l₁-vertex to an l₂-vertex: divided by the ordered-pair count
+  ``hist[l₁]·hist[l₂]`` this is the probability a random (l₁, l₂) vertex
+  pair is an edge, i.e. the join selectivity of a query edge.
+
+All three are cheap by-products of the count-delta pass the incremental
+index already runs per applied batch (core/incremental.py): an edge record
+(u, w, ±1) touches one histogram-of-pairs cell per direction and two degree
+cells — O(1) per record, no edge-table scan.  ``GraphStats`` therefore lives
+*inside* ``IncrementalIndex``/``ShardedIncrementalIndex`` (maintained), and
+can also be computed from scratch for any ``Graph``/store (``from_graph`` /
+``from_store``) when no index is attached.
+
+**Versioning.**  ``version`` tracks the store epoch of the last fold.  The
+plan cache must not key on the raw epoch — every mutation would cold-start
+it — so stats also carry a coarse ``bucket`` generation: it bumps only when
+the cumulative number of folded records since the last bump exceeds
+``rebucket_frac`` of the current edge count.  Below that drift the
+statistics cannot have moved enough to re-rank matching orders materially,
+and plan *correctness* never depends on freshness (any valid order
+enumerates the exact embedding set — see DESIGN.md §10).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class GraphStats:
+    """Aggregate label statistics of one data graph, cheap to maintain.
+
+    Arrays are indexed by the position of a label in ``universe`` (the
+    sorted unique vertex labels; fixed, because store vertex sets are).
+    ``pair_counts`` follows the symmetrized-edge convention of
+    ``graphs.csr.Graph``: each undirected edge contributes one count per
+    direction, so the matrix is symmetric and ``pair_counts[l, l]`` counts
+    same-label edges twice.
+    """
+
+    def __init__(
+        self,
+        universe: np.ndarray,
+        label_hist: np.ndarray,
+        deg_sum: np.ndarray,
+        pair_counts: np.ndarray,
+        *,
+        n_vertices: int,
+        n_edges: int,
+        version: int = 0,
+        rebucket_frac: float = 0.25,
+    ):
+        self.universe = np.asarray(universe)
+        self.label_hist = np.asarray(label_hist, dtype=np.int64)
+        self.deg_sum = np.asarray(deg_sum, dtype=np.int64)
+        self.pair_counts = np.asarray(pair_counts, dtype=np.int64)
+        self.n_vertices = int(n_vertices)
+        self.n_edges = int(n_edges)
+        self.version = int(version)
+        self.rebucket_frac = float(rebucket_frac)
+        self.bucket = 0
+        self._drift = 0  # records folded since the last bucket bump
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_graph(cls, g, *, version: int = 0,
+                   rebucket_frac: float = 0.25) -> "GraphStats":
+        """O(V + E) scratch build from an immutable ``Graph``."""
+        vlab = np.asarray(g.vlabels)
+        src = np.asarray(g.src)
+        dst = np.asarray(g.dst)
+        universe = np.unique(vlab)
+        col = np.searchsorted(universe, vlab)
+        lu = int(universe.size)
+        hist = np.bincount(col, minlength=lu).astype(np.int64)
+        pair = np.zeros((lu, lu), dtype=np.int64)
+        if src.size:
+            np.add.at(pair, (col[src], col[dst]), 1)
+        deg = np.bincount(src, minlength=vlab.size)  # symmetrized: true degree
+        deg_sum = np.zeros(lu, dtype=np.int64)
+        np.add.at(deg_sum, col, deg.astype(np.int64))
+        return cls(
+            universe, hist, deg_sum, pair,
+            n_vertices=int(vlab.size), n_edges=int(src.size) // 2,
+            version=version, rebucket_frac=rebucket_frac,
+        )
+
+    @classmethod
+    def from_store(cls, store, *, rebucket_frac: float = 0.25) -> "GraphStats":
+        """Scratch build from a store's alive edge set, at its epoch."""
+        vlab = np.asarray(store.vlabels)
+        lo, hi, _lab = store.alive_edges()
+        universe = np.unique(vlab)
+        col = np.searchsorted(universe, vlab)
+        lu = int(universe.size)
+        hist = np.bincount(col, minlength=lu).astype(np.int64)
+        pair = np.zeros((lu, lu), dtype=np.int64)
+        deg_sum = np.zeros(lu, dtype=np.int64)
+        if lo.size:
+            np.add.at(pair, (col[lo], col[hi]), 1)
+            np.add.at(pair, (col[hi], col[lo]), 1)
+            np.add.at(deg_sum, col[lo], 1)
+            np.add.at(deg_sum, col[hi], 1)
+        return cls(
+            universe, hist, deg_sum, pair,
+            n_vertices=int(vlab.size), n_edges=int(lo.size),
+            version=int(store.epoch), rebucket_frac=rebucket_frac,
+        )
+
+    def copy(self) -> "GraphStats":
+        """Frozen-in-time copy (travels inside ``IndexSnapshot.stats``)."""
+        out = GraphStats(
+            self.universe, self.label_hist.copy(), self.deg_sum.copy(),
+            self.pair_counts.copy(),
+            n_vertices=self.n_vertices, n_edges=self.n_edges,
+            version=self.version, rebucket_frac=self.rebucket_frac,
+        )
+        out.bucket = self.bucket
+        out._drift = self._drift
+        return out
+
+    # -- incremental maintenance ---------------------------------------------
+
+    def apply_records(self, col_lo: np.ndarray, col_hi: np.ndarray,
+                      sign: np.ndarray, *, epoch: int) -> None:
+        """Fold one applied edge batch: ±1 per record per direction, O(k).
+
+        ``col_lo``/``col_hi`` are the universe column ids of the endpoints
+        (the incremental index already computed them for its count deltas);
+        ``sign`` is +1 for insert, -1 for delete.
+        """
+        if col_lo.size:
+            sign = np.asarray(sign, dtype=np.int64)
+            np.add.at(self.pair_counts, (col_lo, col_hi), sign)
+            np.add.at(self.pair_counts, (col_hi, col_lo), sign)
+            np.add.at(self.deg_sum, col_lo, sign)
+            np.add.at(self.deg_sum, col_hi, sign)
+            self.n_edges += int(sign.sum())
+            self._drift += int(sign.size)
+        self.version = int(epoch)
+        if self._drift > self.rebucket_frac * max(1, self.n_edges):
+            self.bucket += 1
+            self._drift = 0
+
+    # -- estimators (the planner's interface) --------------------------------
+
+    def label_columns(self, labels: np.ndarray):
+        """Map raw labels onto universe columns: (cols, present mask)."""
+        labels = np.asarray(labels)
+        if self.universe.size == 0:
+            return (np.zeros(labels.shape, np.int64),
+                    np.zeros(labels.shape, bool))
+        cols = np.clip(np.searchsorted(self.universe, labels), 0,
+                       self.universe.size - 1)
+        present = self.universe[cols] == labels
+        return cols, present
+
+    def query_view(self, labels: np.ndarray):
+        """Per-query-label cardinalities and pairwise edge probabilities.
+
+        Returns ``(hist_q (Lq,) float, prob_q (Lq, Lq) float)`` where
+        ``hist_q[i]`` is the number of data vertices labeled ``labels[i]``
+        and ``prob_q[i, j]`` is the probability that a random ordered
+        (labels[i], labels[j]) vertex pair is an edge.  Labels absent from
+        the universe contribute zero everywhere (no candidates, no edges).
+        """
+        cols, present = self.label_columns(labels)
+        hist_q = np.where(present, self.label_hist[cols], 0).astype(np.float64)
+        pair_q = self.pair_counts[np.ix_(cols, cols)].astype(np.float64)
+        pair_q *= np.outer(present, present)
+        denom = np.maximum(np.outer(hist_q, hist_q), 1.0)
+        return hist_q, pair_q / denom
+
+    def avg_degree(self, label) -> float:
+        """Mean degree of the label class (0 for absent/empty labels)."""
+        cols, present = self.label_columns(np.asarray([label]))
+        if not present[0] or self.label_hist[cols[0]] == 0:
+            return 0.0
+        return float(self.deg_sum[cols[0]]) / float(self.label_hist[cols[0]])
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"GraphStats(V={self.n_vertices}, E={self.n_edges}, "
+            f"L={self.universe.size}, version={self.version}, "
+            f"bucket={self.bucket})"
+        )

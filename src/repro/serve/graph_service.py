@@ -82,6 +82,15 @@ class GraphServiceConfig:
     # mesh contributes its per-shard tables directly.
     mesh: object = None
     shard_axis: str = _ENGINE_CONFIG.distributed_axis
+    # cost-based matching orders (core/planner.py): one QueryPlanner — hence
+    # one epoch-aware PlanCache — shared across every tick and slot, so
+    # repeat queries skip planning entirely.  ``planner`` overrides with a
+    # caller-owned instance (e.g. shared with batch/sequential engines
+    # serving the same store); with ``plan_queries=False`` (default) search
+    # uses the built-in greedy rule, byte-identical to the pre-planner
+    # service.
+    plan_queries: bool = False
+    planner: object = None
 
 
 @dataclasses.dataclass
@@ -159,6 +168,17 @@ class GraphQueryService:
         self._rid = 0
         self._epochs: dict[int, _EpochEntry] = {}
         self._shutting_down = False
+        self.planner = None
+        if self.cfg.planner is not None:
+            self.planner = self.cfg.planner
+        elif self.cfg.plan_queries:
+            from repro.core.planner import QueryPlanner
+
+            # prefer the live store (its index's maintained GraphStats track
+            # mutations, so the plan cache invalidates on real drift)
+            self.planner = QueryPlanner.for_data(
+                self.store if self.store is not None else snap
+            )
         self._cache_epoch(snap)
 
     # -- epoch/snapshot management -------------------------------------------
@@ -420,6 +440,7 @@ class GraphQueryService:
             searcher=self.cfg.searcher,
             search_vertex_cap=self.cfg.search_vertex_cap,
             max_embeddings=req.max_embeddings,
+            planner=self.planner,
         )
         return req.rid, emb, stats
 

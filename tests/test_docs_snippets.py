@@ -64,3 +64,25 @@ def test_snippet_runs(code):
     assert out.returncode == 0, (
         f"snippet failed:\n--- stderr ---\n{out.stderr[-3000:]}"
     )
+
+
+# single-process examples double as docs: they must keep running exactly as
+# the README advertises them (multi-device examples run as a CI step instead)
+_EXAMPLES = ["examples/query_planning.py"]
+
+
+@pytest.mark.parametrize("script", _EXAMPLES)
+def test_example_runs(script):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, script)],
+        env=env,
+        cwd=_ROOT,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, (
+        f"{script} failed:\n--- stderr ---\n{out.stderr[-3000:]}"
+    )

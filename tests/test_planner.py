@@ -1,0 +1,507 @@
+"""Planner subsystem tests (core/stats.py + core/planner.py).
+
+Four invariants anchor the subsystem:
+
+* **Order invariance** — both search engines enumerate the *identical*
+  embedding set under any valid matching order (this is what makes plan
+  staleness a latency concern, never a correctness one).
+* **Greedy bit-identity** — the deduplicated ``greedy_matching_order``
+  helper and a stats-less planner reproduce the exact orders the engines'
+  old inline rule produced, so planner-off and stats-absent paths are
+  regressions-proof.
+* **Stats parity** — incrementally-maintained ``GraphStats`` (flat and
+  sharded index) equal a from-scratch rebuild after arbitrary mutation
+  sequences, with epoch versioning.
+* **Cache semantics** — repeat queries hit, bucket moves invalidate,
+  cached canonical plans map back to valid orders.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BatchQueryEngine,
+    GraphStats,
+    IncrementalIndex,
+    PlanCache,
+    QueryPlanner,
+    ShardedIncrementalIndex,
+    SubgraphQueryEngine,
+    bfs_join_search,
+    greedy_matching_order,
+    host_dfs_search,
+)
+from repro.core.ilgf import ilgf
+from repro.core.planner import canonical_form, query_fingerprint
+from repro.core.search import _host_adjacency
+from repro.graphs import (
+    GraphStore,
+    ShardedGraphStore,
+    random_labeled_graph,
+    random_update_batches,
+    random_walk_query,
+)
+from repro.graphs.csr import build_graph
+from repro.serve import GraphQueryService, GraphServiceConfig
+
+
+def _legacy_greedy(sizes, q_adj):
+    """The pre-planner inline rule, verbatim (regression reference)."""
+    n_q = len(sizes)
+    order = [int(np.argmin(sizes))]
+    remaining = set(range(n_q)) - set(order)
+    while remaining:
+        connected = [u for u in remaining
+                     if any(w in q_adj.get(u, {}) for w in order)]
+        pool = connected if connected else list(remaining)
+        nxt = min(pool, key=lambda u: sizes[u])
+        order.append(nxt)
+        remaining.remove(nxt)
+    return order
+
+
+def _label_candidates(g, q):
+    """Sound (label-only) candidate matrix — a valid search input."""
+    return (np.asarray(g.vlabels)[:, None]
+            == np.asarray(q.vlabels)[None, :])
+
+
+def _emb_set(emb):
+    return {tuple(r) for r in np.asarray(emb).tolist()}
+
+
+def _random_connected_order(q, rng):
+    adj = _host_adjacency(q)
+    n = q.n_vertices
+    order = [int(rng.integers(n))]
+    remaining = set(range(n)) - set(order)
+    while remaining:
+        connected = [u for u in remaining
+                     if any(w in adj.get(u, {}) for w in order)]
+        pool = sorted(connected) if connected else sorted(remaining)
+        nxt = int(rng.choice(pool))
+        order.append(nxt)
+        remaining.discard(nxt)
+    return order
+
+
+def _skewed_graph_and_query(n_a=6, n_b=60, n_c=7, seed=0):
+    """Label-skewed workload where greedy picks a bad starting side.
+
+    Label 0 (A, rare) connects to *every* label-1 vertex (B, huge, zero
+    selectivity); each B has exactly one label-2 neighbor (C, rare, high
+    selectivity).  Greedy starts at A (smallest |C(u)|) and immediately
+    materializes the A×B cross product; starting from C keeps intermediate
+    tables near |B|.
+    """
+    rng = np.random.default_rng(seed)
+    vlabels = np.array([0] * n_a + [1] * n_b + [2] * n_c)
+    a_ids = np.arange(n_a)
+    b_ids = n_a + np.arange(n_b)
+    c_ids = n_a + n_b + np.arange(n_c)
+    edges = [(a, b) for a in a_ids for b in b_ids]
+    edges += [(b, int(rng.choice(c_ids))) for b in b_ids]
+    g = build_graph(vlabels.size, vlabels, np.asarray(edges))
+    q = build_graph(3, np.array([0, 1, 2]), np.array([[0, 1], [1, 2]]))
+    return g, q
+
+
+# ---------------------------------------------------------------------------
+# Greedy helper: deduplicated, bit-identical to the old inline rule.
+# ---------------------------------------------------------------------------
+
+
+class TestGreedyHelper:
+    def test_bit_identical_to_legacy_inline_rule(self):
+        for seed in range(25):
+            g = random_labeled_graph(120, 420, 5, seed=seed)
+            q = random_walk_query(g, 3 + seed % 6, seed=seed + 100)
+            sizes = _label_candidates(g, q).sum(axis=0)
+            adj = _host_adjacency(q)
+            assert greedy_matching_order(sizes, adj) == _legacy_greedy(
+                sizes, adj
+            )
+
+    def test_ties_break_to_smallest_vertex_id(self):
+        # all-equal sizes, triangle query: deterministic 0,1,2
+        q = build_graph(3, np.array([1, 1, 1]),
+                        np.array([[0, 1], [1, 2], [0, 2]]))
+        order = greedy_matching_order(np.array([4, 4, 4]),
+                                      _host_adjacency(q))
+        assert order == [0, 1, 2]
+
+    def test_disconnected_query_covers_all_vertices(self):
+        q = build_graph(4, np.array([0, 1, 0, 1]), np.array([[0, 1]]))
+        order = greedy_matching_order(np.array([2, 3, 4, 5]),
+                                      _host_adjacency(q))
+        assert sorted(order) == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Order invariance of both searchers.
+# ---------------------------------------------------------------------------
+
+
+class TestOrderInvariance:
+    def test_connected_orders_enumerate_identical_sets(self):
+        rng = np.random.default_rng(0)
+        for seed in range(6):
+            g = random_labeled_graph(80, 260, 4, seed=seed)
+            q = random_walk_query(g, 5, seed=seed + 50)
+            res = ilgf(g, q)
+            alive = np.asarray(res.alive)
+            cand = np.asarray(res.candidates) & alive[:, None]
+            ref = _emb_set(host_dfs_search(g, q, cand))
+            assert ref == _emb_set(bfs_join_search(g, q, cand))
+            for _ in range(4):
+                order = _random_connected_order(q, rng)
+                assert ref == _emb_set(
+                    host_dfs_search(g, q, cand, order=order)
+                ), order
+                assert ref == _emb_set(
+                    bfs_join_search(g, q, cand, order=order)
+                ), order
+
+    def test_arbitrary_permutation_still_exact(self):
+        # even a disconnected (worst-case) order must enumerate exactly
+        g = random_labeled_graph(60, 200, 3, seed=7)
+        q = random_walk_query(g, 4, seed=8)
+        cand = _label_candidates(g, q)
+        ref = _emb_set(host_dfs_search(g, q, cand))
+        worst = list(reversed(greedy_matching_order(
+            cand.sum(axis=0), _host_adjacency(q)
+        )))
+        assert ref == _emb_set(host_dfs_search(g, q, cand, order=worst))
+        assert ref == _emb_set(bfs_join_search(g, q, cand, order=worst))
+
+    def test_invalid_order_rejected(self):
+        g = random_labeled_graph(30, 80, 3, seed=1)
+        q = random_walk_query(g, 4, seed=2)
+        cand = _label_candidates(g, q)
+        for bad in ([0, 1, 2], [0, 1, 2, 2], [1, 2, 3, 4]):
+            with pytest.raises(ValueError):
+                host_dfs_search(g, q, cand, order=bad)
+            with pytest.raises(ValueError):
+                bfs_join_search(g, q, cand, order=bad)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_property_random_small_graphs(self, seed):
+        rng = np.random.default_rng(seed)
+        n_v = int(rng.integers(8, 40))
+        n_e = int(rng.integers(n_v, 4 * n_v))
+        g = random_labeled_graph(n_v, n_e, int(rng.integers(2, 5)),
+                                 seed=seed)
+        try:
+            q = random_walk_query(g, int(rng.integers(3, 6)), seed=seed + 1)
+        except ValueError:  # generated graph had no edges
+            return
+        cand = _label_candidates(g, q)
+        ref = _emb_set(host_dfs_search(g, q, cand))
+        for _ in range(3):
+            order = _random_connected_order(q, rng)
+            assert ref == _emb_set(host_dfs_search(g, q, cand, order=order))
+            assert ref == _emb_set(bfs_join_search(g, q, cand, order=order))
+
+
+# ---------------------------------------------------------------------------
+# GraphStats: incremental maintenance == scratch rebuild.
+# ---------------------------------------------------------------------------
+
+
+def _assert_stats_equal(a: GraphStats, b: GraphStats):
+    np.testing.assert_array_equal(a.universe, b.universe)
+    np.testing.assert_array_equal(a.label_hist, b.label_hist)
+    np.testing.assert_array_equal(a.deg_sum, b.deg_sum)
+    np.testing.assert_array_equal(a.pair_counts, b.pair_counts)
+    assert a.n_edges == b.n_edges and a.n_vertices == b.n_vertices
+
+
+class TestGraphStats:
+    @pytest.mark.parametrize("sharded", [False, True])
+    def test_incremental_equals_scratch(self, sharded):
+        g = random_labeled_graph(100, 360, 5, n_edge_labels=2, seed=3)
+        if sharded:
+            store = ShardedGraphStore.from_graph(g, n_shards=4)
+            store.attach_index(ShardedIncrementalIndex())
+        else:
+            store = GraphStore.from_graph(g)
+            store.attach_index(IncrementalIndex())
+        for batch in random_update_batches(g, 6, 40, delete_frac=0.4,
+                                           seed=4):
+            store.apply(batch)
+            _assert_stats_equal(store.index.graph_stats,
+                                GraphStats.from_store(store))
+            assert store.index.graph_stats.version == store.epoch
+
+    def test_from_graph_matches_from_store(self):
+        g = random_labeled_graph(150, 500, 6, seed=5)
+        _assert_stats_equal(GraphStats.from_graph(g),
+                            GraphStats.from_store(GraphStore.from_graph(g)))
+
+    def test_snapshot_carries_frozen_stats(self):
+        g = random_labeled_graph(60, 200, 4, seed=6)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        snap = store.snapshot()
+        assert snap.index.stats is not None
+        frozen = snap.index.stats
+        store.add_edges([[0, 1], [2, 3]])
+        # the frozen copy must not see the mutation; the live object must
+        assert frozen.version != store.epoch
+        assert store.index.graph_stats.version == store.epoch
+
+    def test_bucket_drift_gating(self):
+        g = random_labeled_graph(80, 300, 4, seed=7)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        gs = store.index.graph_stats
+        gs.rebucket_frac = 0.0  # every applied record forces a new bucket
+        b0 = gs.bucket
+        store.add_edges([[0, 50]])
+        assert gs.bucket == b0 + 1
+        gs.rebucket_frac = 0.5  # small drift no longer re-buckets
+        b1 = gs.bucket
+        store.add_edges([[1, 51]])
+        assert gs.bucket == b1
+
+    def test_query_view_bounds_and_absent_labels(self):
+        g = random_labeled_graph(90, 300, 4, seed=8)
+        stats = GraphStats.from_graph(g)
+        labels = np.array([0, 1, 99])  # 99 not in the universe
+        hist_q, prob_q = stats.query_view(labels)
+        assert hist_q[2] == 0.0
+        assert (prob_q >= 0).all() and (prob_q <= 1).all()
+        assert (prob_q[2] == 0).all() and (prob_q[:, 2] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Planner: orders, fingerprints, cost model.
+# ---------------------------------------------------------------------------
+
+
+class TestQueryPlanner:
+    def test_statsless_planner_is_bit_identical_to_greedy(self):
+        planner = QueryPlanner(None)
+        for seed in range(10):
+            g = random_labeled_graph(90, 300, 4, seed=seed)
+            q = random_walk_query(g, 5, seed=seed + 30)
+            sizes = _label_candidates(g, q).sum(axis=0)
+            plan = planner.plan(q, candidate_counts=sizes)
+            assert plan.source == "greedy"
+            assert list(plan.order) == _legacy_greedy(
+                sizes, _host_adjacency(q)
+            )
+        assert len(planner.cache) == 0  # greedy plans are never cached
+
+    def test_plans_are_valid_connected_orders(self):
+        g = random_labeled_graph(150, 600, 5, seed=9)
+        planner = QueryPlanner(GraphStats.from_graph(g))
+        for seed in range(8):
+            q = random_walk_query(g, 6, seed=seed)
+            plan = planner.plan(q)
+            assert sorted(plan.order) == list(range(q.n_vertices))
+            adj = _host_adjacency(q)
+            for t in range(1, len(plan.order)):
+                u = plan.order[t]
+                assert any(w in adj.get(u, {}) for w in plan.order[:t])
+
+    def test_cost_model_beats_greedy_on_skewed_labels(self):
+        g, q = _skewed_graph_and_query()
+        stats = GraphStats.from_graph(g)
+        planner = QueryPlanner(stats)
+        cand = _label_candidates(g, q)
+        sizes = cand.sum(axis=0).astype(float)
+        plan = planner.plan(q, candidate_counts=sizes)
+        adj = _host_adjacency(q)
+        greedy = _legacy_greedy(sizes, adj)
+        hist_q, prob_q, lab_ix = planner._query_stats(q, stats)
+        cost_planned, _, _ = planner._estimate(plan.order, adj, sizes,
+                                               (prob_q, lab_ix))
+        cost_greedy, _, _ = planner._estimate(greedy, adj, sizes,
+                                              (prob_q, lab_ix))
+        assert list(plan.order) != greedy
+        assert cost_planned < cost_greedy
+        # planned order starts from the selective (C) side, not the A hub
+        assert plan.order[0] == 2
+        # and both orders enumerate the identical embedding set
+        ref = _emb_set(bfs_join_search(g, q, cand, order=greedy))
+        assert ref == _emb_set(bfs_join_search(g, q, cand,
+                                               order=list(plan.order)))
+        assert len(ref) > 0
+
+    def test_fingerprint_invariant_under_renumbering(self):
+        # a labeled path is separated by refinement: renumbering it keeps
+        # the canonical form (and thus the fingerprint) identical
+        q1 = build_graph(3, np.array([0, 1, 2]), np.array([[0, 1], [1, 2]]))
+        q2 = build_graph(3, np.array([2, 1, 0]), np.array([[2, 1], [1, 0]]))
+        assert query_fingerprint(q1) == query_fingerprint(q2)
+        _, f1 = canonical_form(q1)
+        _, f2 = canonical_form(q2)
+        assert f1 == f2
+
+    def test_cached_plan_maps_to_renumbered_query(self):
+        g, q1 = _skewed_graph_and_query()
+        q2 = build_graph(3, np.array([2, 1, 0]), np.array([[2, 1], [1, 0]]))
+        planner = QueryPlanner(GraphStats.from_graph(g))
+        planner.plan(q1)
+        plan2 = planner.plan(q2)
+        assert plan2.source == "cache"
+        assert sorted(plan2.order) == [0, 1, 2]
+        # q2's C-labeled vertex is vertex 0; the mapped plan starts there
+        assert plan2.order[0] == 0
+
+    def test_explain_mentions_steps_and_source(self):
+        g, q = _skewed_graph_and_query()
+        plan = QueryPlanner(GraphStats.from_graph(g)).plan(q)
+        text = plan.explain()
+        assert "Plan[stats]" in text and "est_cost" in text
+        assert len(text.splitlines()) == 2 + q.n_vertices
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: hits, LRU, epoch/bucket invalidation.
+# ---------------------------------------------------------------------------
+
+
+class TestPlanCache:
+    def test_repeat_queries_hit(self):
+        g = random_labeled_graph(120, 420, 5, seed=10)
+        planner = QueryPlanner(GraphStats.from_graph(g))
+        q = random_walk_query(g, 5, seed=11)
+        assert planner.plan(q).source == "stats"
+        for _ in range(5):
+            assert planner.plan(q).source == "cache"
+        assert planner.cache.hits == 5 and planner.cache.misses == 1
+        assert planner.cache.hit_rate == 5 / 6
+
+    def test_mutation_epochs_invalidate_via_bucket(self):
+        g = random_labeled_graph(100, 360, 5, seed=12)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        store.index.graph_stats.rebucket_frac = 0.0  # every batch re-buckets
+        planner = QueryPlanner.for_data(store)
+        q = random_walk_query(g, 5, seed=13)
+        assert planner.plan(q).source == "stats"
+        assert planner.plan(q).source == "cache"
+        store.add_edges([[0, 60]])  # bucket moves with the mutation epoch
+        assert planner.plan(q).source == "stats"  # stale plan not served
+        assert planner.cache.invalidated >= 1
+        assert planner.plan(q).source == "cache"
+
+    def test_small_drift_keeps_cache_warm(self):
+        g = random_labeled_graph(200, 800, 5, seed=14)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())  # default rebucket_frac
+        planner = QueryPlanner.for_data(store)
+        q = random_walk_query(g, 5, seed=15)
+        planner.plan(q)
+        store.add_edges([[0, 100]])  # tiny drift: far below the threshold
+        assert planner.plan(q).source == "cache"
+
+    def test_lru_eviction(self):
+        cache = PlanCache(max_entries=2)
+        g = random_labeled_graph(100, 360, 6, seed=16)
+        planner = QueryPlanner(GraphStats.from_graph(g), cache=cache)
+        queries = [random_walk_query(g, 5, seed=20 + i) for i in range(3)]
+        fps = {query_fingerprint(q) for q in queries}
+        if len(fps) < 3:  # pragma: no cover - astronomically unlikely
+            pytest.skip("fingerprint collision in random queries")
+        for q in queries:
+            planner.plan(q)
+        assert len(cache) == 2 and cache.evictions == 1
+        assert planner.plan(queries[0]).source == "stats"  # evicted
+
+
+# ---------------------------------------------------------------------------
+# Integration: engines + service plan before enumeration, results unchanged.
+# ---------------------------------------------------------------------------
+
+
+class TestIntegration:
+    def test_engine_with_planner_matches_without(self):
+        g = random_labeled_graph(250, 900, 6, seed=17)
+        store = GraphStore.from_graph(g)
+        store.attach_index(IncrementalIndex())
+        planner = QueryPlanner.for_data(store)
+        on = SubgraphQueryEngine(store, planner=planner)
+        off = SubgraphQueryEngine(store)
+        dfs = SubgraphQueryEngine(store, planner=planner, searcher="dfs")
+        for seed in range(5):
+            q = random_walk_query(g, 5, seed=30 + seed)
+            e_on, s_on = on.query(q)
+            e_off, _ = off.query(q)
+            e_dfs, _ = dfs.query(q)
+            assert _emb_set(e_on) == _emb_set(e_off) == _emb_set(e_dfs)
+            assert s_on.extras["plan"]["source"] in ("stats", "cache")
+
+    def test_all_pruned_query_still_records_plan_entry(self):
+        # a query whose label is absent prunes to zero survivors; the
+        # planner contract (extras["plan"] always present) must hold
+        g = random_labeled_graph(100, 300, 4, seed=22)
+        from repro.graphs.csr import build_graph
+        q = build_graph(2, np.array([77, 78]), np.array([[0, 1]]))
+        eng = SubgraphQueryEngine(g, planner=QueryPlanner.for_data(g))
+        emb, stats = eng.query(q)
+        assert emb.shape == (0, 2)
+        assert stats.extras["plan"]["source"] == "skipped"
+        assert stats.extras["plan"]["order"] == ()
+
+    def test_batch_engine_plans_and_matches_sequential(self):
+        g = random_labeled_graph(250, 900, 6, seed=18)
+        planner = QueryPlanner.for_data(g)
+        queries = [random_walk_query(g, 4 + i % 3, seed=40 + i)
+                   for i in range(6)]
+        batched = BatchQueryEngine(g, planner=planner).query_batch(queries)
+        seq = SubgraphQueryEngine(g)
+        for q, (emb, stats) in zip(queries, batched):
+            ref, _ = seq.query(q)
+            assert _emb_set(emb) == _emb_set(ref)
+            assert "plan" in stats.extras
+
+    def test_service_shares_cache_across_ticks_and_slots(self):
+        g = random_labeled_graph(200, 700, 6, seed=19)
+        store = GraphStore.from_graph(g, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        svc_on = GraphQueryService(store, GraphServiceConfig(
+            max_slots=3, max_query_vertices=8, max_query_labels=8,
+            plan_queries=True))
+        svc_off = GraphQueryService(store, GraphServiceConfig(
+            max_slots=3, max_query_vertices=8, max_query_labels=8))
+        queries = [random_walk_query(g, 5, seed=50 + i) for i in range(4)]
+        rids_on = [svc_on.submit(q) for q in queries for _ in range(3)]
+        done_on = {rid: emb for rid, emb, _ in svc_on.run_to_completion()}
+        assert set(done_on) == set(rids_on)
+        rids_off = [svc_off.submit(q) for q in queries]
+        done_off = {rid: emb for rid, emb, _ in svc_off.run_to_completion()}
+        for i, q in enumerate(queries):
+            ref = _emb_set(done_off[rids_off[i]])
+            for k in range(3):
+                assert _emb_set(done_on[rids_on[3 * i + k]]) == ref
+        cache = svc_on.planner.cache
+        assert cache.misses <= len(queries)
+        assert cache.hits >= 2 * len(queries)
+
+    def test_service_planning_survives_mutation_epochs(self):
+        g = random_labeled_graph(200, 700, 6, seed=21)
+        store = GraphStore.from_graph(g, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        svc = GraphQueryService(store, GraphServiceConfig(
+            max_slots=2, max_query_vertices=8, max_query_labels=8,
+            plan_queries=True))
+        queries = [random_walk_query(g, 5, seed=60 + i) for i in range(4)]
+        rids = [svc.submit(q) for q in queries[:2]]
+        done = svc.tick()
+        svc.add_edges([[0, 150], [1, 151]])
+        rids += [svc.submit(q) for q in queries[2:]]
+        done += svc.run_to_completion()
+        assert {rid for rid, _, _ in done} == set(rids)
+        # pinned-epoch results still match a sequential engine per epoch
+        for rid, emb, stats in done:
+            q = queries[rids.index(rid)]
+            ref, _ = SubgraphQueryEngine(store).query(q)
+            if stats.extras["service"]["epoch"] == store.epoch:
+                assert _emb_set(emb) == _emb_set(ref)
