@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     batch    — batched multi-query + serving throughput (batch_engine)
     update   — dynamic-graph store: incremental index maintenance throughput
     planner  — cost-based matching orders vs greedy + plan-cache hit rate
+    enum     — device-resident join enumeration vs the chunked host join
+               (incl. bit-parity canary and the overflow-fallback regime)
     shard    — vertex-partitioned engine scaling across 1/2/4 devices
                (each device count in a subprocess with
                ``--xla_force_host_platform_device_count``)
@@ -16,7 +18,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
 
 ``--smoke`` shrinks the selected sections to tiny regression canaries for
 CI (``--smoke`` alone = batch + update + planner canaries on every push;
-the shard canary runs as its own CI step via ``--section shard --smoke``).
+the enum and shard canaries run as their own CI steps via
+``--section enum|shard --smoke``, each with a dedicated JSON artifact).
 ``--json PATH`` additionally writes the emitted rows as a JSON list —
 CI uploads these as ``BENCH_*.json`` workflow artifacts so the smoke
 trajectory is inspectable per commit.
@@ -41,7 +44,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "graph", "batch", "update", "planner",
-                             "shard", "kernels", "roofline"])
+                             "enum", "shard", "kernels", "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny canary benches only (CI jit-regression check)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -62,6 +65,10 @@ def main() -> None:
             from benchmarks.planner_benches import run_all as planner_all
 
             _emit(planner_all(smoke=True))
+        if args.section == "enum":  # opt-in: its own CI step + artifact
+            from benchmarks.enum_benches import run_all as enum_all
+
+            _emit(enum_all(smoke=True))
         if args.section == "shard":  # opt-in: spawns one process per D
             from benchmarks.shard_benches import run_all as shard_all
 
@@ -80,6 +87,10 @@ def main() -> None:
         from benchmarks.planner_benches import run_all as planner_all
 
         _emit(planner_all())
+    if args.section in ("all", "enum"):
+        from benchmarks.enum_benches import run_all as enum_all
+
+        _emit(enum_all())
     if args.section in ("all", "shard"):
         from benchmarks.shard_benches import run_all as shard_all
 

@@ -42,6 +42,7 @@ from repro.core.planner import (
 )
 from repro.core.search import (
     bfs_join_search,
+    device_join_search,
     embeddings_equal,
     greedy_matching_order,
     host_dfs_search,

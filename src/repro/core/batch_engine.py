@@ -295,6 +295,7 @@ class BatchQueryEngine:
         mesh=None,
         shard_axis: str = "data",
         planner=None,
+        enumerator: str = "host",
     ):
         from repro.graphs.store import as_snapshot
 
@@ -317,6 +318,7 @@ class BatchQueryEngine:
         # one planner (hence one plan cache) across every chunk and batch:
         # same-fingerprint queries inside a batch plan once
         self.planner = planner
+        self.enumerator = enumerator
         self._sharded = None
         if mesh is not None:
             # vertex-partition the data graph once (consuming the sharded
@@ -474,5 +476,6 @@ class BatchQueryEngine:
                 search_vertex_cap=self.search_vertex_cap,
                 max_embeddings=max_embeddings,
                 planner=self.planner,
+                enumerator=self.enumerator,
             )
             results[i] = (emb, stats)

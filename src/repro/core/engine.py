@@ -20,7 +20,11 @@ import numpy as np
 
 from repro.core.ilgf import ilgf
 from repro.core.khop import refine_candidates_khop
-from repro.core.search import bfs_join_search, host_dfs_search
+from repro.core.search import (
+    bfs_join_search,
+    device_join_search,
+    host_dfs_search,
+)
 from repro.graphs.csr import Graph, induced_subgraph, to_host
 from repro.graphs.store import as_snapshot
 
@@ -49,6 +53,7 @@ def search_filtered(
     search_vertex_cap: int = 8192,
     max_embeddings: int | None = None,
     planner=None,
+    enumerator: str = "host",
 ) -> np.ndarray:
     """Compaction → optional k-hop refinement → enumeration on one query.
 
@@ -61,7 +66,17 @@ def search_filtered(
     candidate counts) instead of the searchers' built-in greedy rule; the
     chosen plan is recorded in ``stats.extras["plan"]``.  With ``None``
     behavior is byte-for-byte today's greedy path.
+
+    ``enumerator``: ``"host"`` (default — today's ``bfs_join_search``) or
+    ``"device"`` (``device_join_search`` — the partial-embedding table
+    stays on device between rounds; DESIGN.md §11).  Only consulted for
+    ``searcher="join"``; embeddings are bit-identical either way, and the
+    device path records its round telemetry in ``stats.extras["enum"]``.
     """
+    if enumerator not in ("host", "device"):
+        raise ValueError(
+            f"enumerator must be 'host' or 'device', got {enumerator!r}"
+        )
     stats.vertices_after = int(alive.sum())
     if stats.vertices_after == 0:
         if planner is not None:
@@ -104,6 +119,12 @@ def search_filtered(
     if searcher == "dfs":
         emb = host_dfs_search(sub, query, cand, order=order,
                               max_embeddings=max_embeddings)
+    elif enumerator == "device":
+        enum_report: dict = {}
+        emb = device_join_search(sub, query, cand, order=order,
+                                 max_embeddings=max_embeddings,
+                                 report=enum_report)
+        stats.extras["enum"] = enum_report
     else:
         emb = bfs_join_search(sub, query, cand, order=order,
                               max_embeddings=max_embeddings)
@@ -131,6 +152,9 @@ class SubgraphQueryEngine:
     matching orders (DESIGN.md §10) instead of the built-in greedy rule.
     Embedding *sets* are identical either way (enumeration is
     order-invariant); only enumeration cost changes.
+
+    ``enumerator``: ``"host"`` (default) or ``"device"`` — device-resident
+    join enumeration (DESIGN.md §11), bit-identical embeddings.
     """
 
     def __init__(
@@ -145,6 +169,7 @@ class SubgraphQueryEngine:
         mesh=None,
         shard_axis: str = "data",
         planner=None,
+        enumerator: Literal["host", "device"] = "host",
     ):
         snap = as_snapshot(data)
         self._snapshot = snap
@@ -159,6 +184,7 @@ class SubgraphQueryEngine:
         self.mesh = mesh
         self.shard_axis = shard_axis
         self.planner = planner
+        self.enumerator = enumerator
         self._prepared = None
         if mesh is not None:
             # bucket the vertex partition once; every query() reuses it
@@ -205,5 +231,6 @@ class SubgraphQueryEngine:
             search_vertex_cap=self.search_vertex_cap,
             max_embeddings=max_embeddings,
             planner=self.planner,
+            enumerator=self.enumerator,
         )
         return emb, stats

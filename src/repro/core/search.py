@@ -1,6 +1,6 @@
 """Subgraph search over the ILGF-filtered graph (the paper's §3.3).
 
-Two engines:
+Three engines:
 
 * ``host_dfs_search`` — Ullmann's recursive DFS (Algorithm 4/5) verbatim,
   in numpy.  This is the exactness oracle for tests and the faithful
@@ -12,9 +12,19 @@ Two engines:
   the next query vertex's candidate list with a single batched
   adjacency/edge-label/injectivity test (MXU/VPU-friendly), then compacts
   survivors.  The jitted inner step has fixed shapes; a host loop chunks
-  tables that outgrow the buffer (bounded memory, no recursion).
+  tables that outgrow the buffer (bounded memory, no recursion), and the
+  result rows round-trip through the host every level.
 
-Both enumerate exactly the same embeddings (tested), under *any* valid
+* ``device_join_search`` — the device-resident variant (DESIGN.md §11):
+  the partial-embedding table lives in a pow2-padded device buffer across
+  rounds; each round is one fused dispatch (the ``kernels/embed_join``
+  Pallas kernel on TPU, its jnp oracle elsewhere) that evaluates the
+  validity grid *and* compacts survivors back into the buffer.  Only a
+  per-round scalar (the survivor count) syncs to the host; when the table
+  outgrows the buffer the affected level falls back to the chunked host
+  join and hops back onto the device once it fits again.
+
+All three enumerate exactly the same embeddings (tested), under *any* valid
 matching order — enumeration is order-invariant because every step checks
 full adjacency/edge-label/injectivity constraints.  By default the order
 follows the candidate-cardinality greedy rule (smallest |C(u)| first,
@@ -220,6 +230,84 @@ def _expand_step_np(chunk, cand_ids, elab_np, q_pos, q_lab, q_val):
 _HOST_JOIN_CELLS = 1 << 18
 
 
+def _level_constraints(q_adj, pos_of, u: int, t: int):
+    """Matched-neighbor constraint arrays for join level ``t`` (vertex u).
+
+    Returns (q_pos, q_lab, q_val): positions (< t) of already-matched query
+    neighbors, their required edge labels, and a validity mask (at least one
+    inert row is kept so shapes never collapse to zero)."""
+    nbrs = [(pos_of[w], el) for w, el in q_adj.get(u, {}).items()
+            if pos_of[w] < t]
+    j = max(1, len(nbrs))
+    q_pos = np.zeros(j, dtype=np.int32)
+    q_lab = np.zeros(j, dtype=np.int32)
+    q_val = np.zeros(j, dtype=bool)
+    for k, (p, el) in enumerate(nbrs):
+        q_pos[k], q_lab[k], q_val[k] = p, el, True
+    return q_pos, q_lab, q_val
+
+
+def _host_join_level(table, cand_ids, elab_np, elab_matrix,
+                     q_pos, q_lab, q_val, chunk_rows: int, t: int):
+    """One chunked host join level (the classic bfs_join inner loop).
+
+    Returns ``(new_table, elab_matrix)`` — the survivor table of width
+    ``t + 1`` and the lazily-created device copy of the edge-label matrix
+    (made on the first chunk large enough for the jitted path)."""
+    new_rows: list[np.ndarray] = []
+    c_pad = int(2 ** np.ceil(np.log2(max(cand_ids.size, 1))))
+    cand_pad = np.zeros(c_pad, dtype=np.int32)
+    cand_pad[: cand_ids.size] = cand_ids
+    cand_ok = np.zeros(c_pad, dtype=bool)
+    cand_ok[: cand_ids.size] = True
+
+    for lo in range(0, table.shape[0], chunk_rows):
+        chunk = table[lo : lo + chunk_rows]
+        r = chunk.shape[0]
+        if r * cand_ids.size * q_pos.size <= _HOST_JOIN_CELLS:
+            valid_np = _expand_step_np(
+                chunk, cand_ids, elab_np, q_pos, q_lab, q_val
+            )
+            r_idx, c_idx = np.nonzero(valid_np)
+            if r_idx.size:
+                new_rows.append(np.concatenate(
+                    [chunk[r_idx], cand_ids[c_idx][:, None]], axis=1
+                ))
+            continue
+        # pad rows to the next power of two so _expand_step revisits
+        # O(log chunk_rows) traces instead of one per exact row count
+        r_pad = int(2 ** np.ceil(np.log2(max(r, 1))))
+        if r_pad > r:
+            chunk = np.concatenate(
+                [chunk, np.zeros((r_pad - r, chunk.shape[1]), chunk.dtype)]
+            )
+        if elab_matrix is None:
+            elab_matrix = jnp.asarray(elab_np)
+        valid = _expand_step(
+            jnp.asarray(chunk),
+            jnp.arange(r_pad) < r,
+            jnp.asarray(cand_pad),
+            jnp.asarray(cand_ok),
+            elab_matrix,
+            jnp.asarray(q_pos),
+            jnp.asarray(q_lab),
+            jnp.asarray(q_val),
+            t,
+        )
+        r_idx, c_idx = np.nonzero(np.asarray(valid))
+        if r_idx.size:
+            rows = np.concatenate(
+                [chunk[r_idx], cand_pad[c_idx][:, None]], axis=1
+            )
+            new_rows.append(rows)
+    new_table = (
+        np.concatenate(new_rows, axis=0)
+        if new_rows
+        else np.zeros((0, t + 1), dtype=np.int32)
+    )
+    return new_table, elab_matrix
+
+
 def bfs_join_search(
     data: Graph,
     query: Graph,
@@ -255,76 +343,311 @@ def bfs_join_search(
     for t in range(1, n_q):
         u = order[t]
         cand_ids = np.nonzero(cand[:, u])[0].astype(np.int32)
-        nbrs = [(pos_of[w], el) for w, el in q_adj.get(u, {}).items() if pos_of[w] < t]
-        j = max(1, len(nbrs))
-        q_pos = np.zeros(j, dtype=np.int32)
-        q_lab = np.zeros(j, dtype=np.int32)
-        q_val = np.zeros(j, dtype=bool)
-        for k, (p, el) in enumerate(nbrs):
-            q_pos[k], q_lab[k], q_val[k] = p, el, True
-
+        q_pos, q_lab, q_val = _level_constraints(q_adj, pos_of, u, t)
         if table.shape[0] == 0 or cand_ids.size == 0:
             return np.zeros((0, n_q), dtype=np.int64)
-
-        new_rows: list[np.ndarray] = []
-        c_pad = int(2 ** np.ceil(np.log2(max(cand_ids.size, 1))))
-        cand_pad = np.zeros(c_pad, dtype=np.int32)
-        cand_pad[: cand_ids.size] = cand_ids
-        cand_ok = np.zeros(c_pad, dtype=bool)
-        cand_ok[: cand_ids.size] = True
-
-        for lo in range(0, table.shape[0], chunk_rows):
-            chunk = table[lo : lo + chunk_rows]
-            r = chunk.shape[0]
-            if r * cand_ids.size * j <= _HOST_JOIN_CELLS:
-                valid_np = _expand_step_np(
-                    chunk, cand_ids, elab_np, q_pos, q_lab, q_val
-                )
-                r_idx, c_idx = np.nonzero(valid_np)
-                if r_idx.size:
-                    new_rows.append(np.concatenate(
-                        [chunk[r_idx], cand_ids[c_idx][:, None]], axis=1
-                    ))
-                continue
-            # pad rows to the next power of two so _expand_step revisits
-            # O(log chunk_rows) traces instead of one per exact row count
-            r_pad = int(2 ** np.ceil(np.log2(max(r, 1))))
-            if r_pad > r:
-                chunk = np.concatenate(
-                    [chunk, np.zeros((r_pad - r, chunk.shape[1]), chunk.dtype)]
-                )
-            if elab_matrix is None:
-                elab_matrix = jnp.asarray(elab_np)
-            valid = _expand_step(
-                jnp.asarray(chunk),
-                jnp.arange(r_pad) < r,
-                jnp.asarray(cand_pad),
-                jnp.asarray(cand_ok),
-                elab_matrix,
-                jnp.asarray(q_pos),
-                jnp.asarray(q_lab),
-                jnp.asarray(q_val),
-                t,
-            )
-            r_idx, c_idx = np.nonzero(np.asarray(valid))
-            if r_idx.size:
-                rows = np.concatenate(
-                    [chunk[r_idx], cand_pad[c_idx][:, None]], axis=1
-                )
-                new_rows.append(rows)
-        table = (
-            np.concatenate(new_rows, axis=0)
-            if new_rows
-            else np.zeros((0, t + 1), dtype=np.int32)
+        table, elab_matrix = _host_join_level(
+            table, cand_ids, elab_np, elab_matrix,
+            q_pos, q_lab, q_val, chunk_rows, t,
         )
-        if max_embeddings is not None and table.shape[0] > max_embeddings and t == n_q - 1:
-            table = table[:max_embeddings]
+    # truncation happens after the final level (covers single-vertex
+    # queries, whose seed table never enters the loop)
+    if max_embeddings is not None and table.shape[0] > max_embeddings:
+        table = table[:max_embeddings]
+    return _restore_query_order(table, order)
 
-    # columns are in matching order; restore query-vertex order
+
+def _restore_query_order(table: np.ndarray, order: Sequence[int]) -> np.ndarray:
+    """Table columns are in matching order; restore query-vertex order."""
+    n_q = len(order)
     out = np.zeros((table.shape[0], n_q), dtype=np.int64)
     for i, u in enumerate(order):
         out[:, u] = table[:, i]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Device-resident join engine (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+
+# per-dispatch (R·C·J) validity-cell budget: bounds the grid (and its
+# (R, J, C) gather intermediate) exactly like chunk_rows bounds the host path
+_DEVICE_JOIN_CELLS = 1 << 24
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _device_join_valid(
+    table: jnp.ndarray,      # (R, T) int32 — pow2-padded embedding rows
+    n_rows: jnp.ndarray,     # () int32 — live rows (prefix of the buffer)
+    cand: jnp.ndarray,       # (C,) int32 — pow2-padded candidate list
+    n_cand: jnp.ndarray,     # () int32 — live candidates
+    elab_matrix: jnp.ndarray,  # (N, N) int32 data edge labels (−1 = none)
+    q_pos: jnp.ndarray,      # (J,) int32
+    q_lab: jnp.ndarray,      # (J,) int32
+    q_val: jnp.ndarray,      # (J,) bool
+    *,
+    use_kernel: bool,
+):
+    """(R, C) bool validity grid for one expansion round, in one dispatch.
+
+    ``use_kernel=True`` routes through the fused Pallas embed-join kernel
+    (its BlockSpecs tile the candidate-restricted (N, C) adjacency view);
+    otherwise the oracle math runs as the same two-axis gather the chunked
+    host fallback jits (``_expand_step``), so both regimes share one
+    validity implementation."""
+    r = table.shape[0]
+    c = cand.shape[0]
+    row_valid = jnp.arange(r) < n_rows
+    cand_valid = jnp.arange(c) < n_cand
+    if use_kernel:
+        from repro.kernels.embed_join.ops import embed_join
+
+        elab_cols = elab_matrix[:, cand]
+        return embed_join(
+            table, row_valid, cand, cand_valid, elab_cols,
+            q_pos, q_lab, q_val, use_kernel=True,
+        )
+    return _expand_step(
+        table, row_valid, cand, cand_valid, elab_matrix,
+        q_pos, q_lab, q_val, table.shape[1],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap",))
+def _device_join_gather(
+    table: jnp.ndarray,   # (R, T) int32 — resident old table
+    cand: jnp.ndarray,    # (C,) int32
+    r_idx: jnp.ndarray,   # (out_cap,) int32 — survivor rows (host-compacted)
+    c_idx: jnp.ndarray,   # (out_cap,) int32 — survivor candidates
+    n_keep: jnp.ndarray,  # () int32
+    *,
+    out_cap: int,
+):
+    """Build the next pow2-padded table by gathering from the resident one."""
+    new_table = jnp.concatenate(
+        [table[r_idx], cand[c_idx][:, None]], axis=1
+    )
+    slot_ok = jnp.arange(out_cap) < n_keep
+    return jnp.where(slot_ok[:, None], new_table, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap",))
+def _device_join_compact(
+    table: jnp.ndarray,  # (R, T) int32
+    cand: jnp.ndarray,   # (C,) int32
+    valid: jnp.ndarray,  # (R, C) bool
+    *,
+    out_cap: int,
+):
+    """Fully on-device masked compaction (the TPU/kernel path).
+
+    Returns ``(new_table (out_cap, T+1), count)``; ``count`` is the *true*
+    survivor total — when it exceeds ``out_cap`` the table holds only the
+    first ``out_cap`` survivors and the caller falls back to the chunked
+    host join for the level.  Flat row-major survivor order == the host
+    engine's chunk-sequential ``np.nonzero`` order, which is what makes
+    ``max_embeddings`` truncation bit-identical across engines."""
+    c = cand.shape[0]
+    flat = valid.reshape(-1)
+    count = jnp.sum(flat.astype(jnp.int32))
+    idx = jnp.nonzero(flat, size=out_cap, fill_value=0)[0]
+    r_idx = idx // c
+    c_idx = idx - r_idx * c
+    new_table = jnp.concatenate(
+        [table[r_idx], cand[c_idx][:, None]], axis=1
+    )
+    slot_ok = jnp.arange(out_cap) < jnp.minimum(count, out_cap)
+    return jnp.where(slot_ok[:, None], new_table, 0), count
+
+
+def device_join_search(
+    data: Graph,
+    query: Graph,
+    candidates: np.ndarray,
+    *,
+    order: Sequence[int] | None = None,
+    device_rows: int = 1 << 15,
+    chunk_rows: int = 8192,
+    max_embeddings: int | None = None,
+    use_kernel: bool | None = None,
+    report: dict | None = None,
+) -> np.ndarray:
+    """Enumerate all embeddings with the device-resident join plan.
+
+    Bit-identical to ``bfs_join_search`` (same embeddings, same row order,
+    any valid ``order``), but the partial-embedding table stays on device
+    between rounds in a ``device_rows``-row pow2-padded buffer: each round
+    evaluates the full validity grid in (cell-budgeted) fused dispatches,
+    and the compacted next table is built by an on-device gather — the
+    table itself never crosses the host boundary.  Compaction is
+    backend-adaptive: with the Pallas kernel engaged (TPU) survivor indices
+    compact on device; otherwise only the 1-byte validity bitmask comes
+    back for a host ``np.nonzero`` (the same bytes the chunked host join
+    already moves — XLA CPU has no fast compaction primitive, see
+    DESIGN.md §11).  Levels whose survivor total outgrows the buffer run
+    through the chunked host join (bounded memory), hopping back onto the
+    device once the table fits again.
+
+    ``use_kernel``: None = auto (Pallas kernel + device compaction on TPU,
+    oracle + host-assisted compaction elsewhere); True forces the kernel
+    path (interpret mode off-TPU — parity testing); False forces the
+    oracle.  ``report``: optional dict filled with round/fallback
+    telemetry.
+    """
+    cand = np.asarray(candidates)
+    n_q = query.vlabels.shape[0]
+    n_d = data.vlabels.shape[0]
+    q_adj = _host_adjacency(query)
+    elab_np = _dense_edge_labels(data, n_d)
+    elab_dev = None
+    elab_host_dev = None  # _expand_step's device copy (host-fallback path)
+
+    if order is None:
+        order = greedy_matching_order(cand.sum(axis=0), q_adj)
+    else:
+        order = _as_order(order, n_q)
+    pos_of = {u: i for i, u in enumerate(order)}
+    cap = int(2 ** np.ceil(np.log2(max(int(device_rows), 2))))
+
+    stats = {"device_rounds": 0, "host_levels": 0, "table_cap": cap}
+    if report is not None:
+        report.update(stats)
+
+    seed_ids = np.nonzero(cand[:, order[0]])[0].astype(np.int32)
+    table_host: np.ndarray | None = None
+    table_dev = None
+    n_rows = int(seed_ids.size)
+    if n_rows > cap:
+        table_host = seed_ids.reshape(-1, 1)
+    else:
+        r0 = int(2 ** np.ceil(np.log2(max(n_rows, 1))))
+        table_dev = jnp.asarray(
+            np.pad(seed_ids, (0, r0 - n_rows)).reshape(r0, 1)
+        )
+
+    for t in range(1, n_q):
+        u = order[t]
+        cand_ids = np.nonzero(cand[:, u])[0].astype(np.int32)
+        live = table_host.shape[0] if table_host is not None else n_rows
+        if live == 0 or cand_ids.size == 0:
+            if report is not None:
+                report.update(stats)
+            return np.zeros((0, n_q), dtype=np.int64)
+        q_pos, q_lab, q_val = _level_constraints(q_adj, pos_of, u, t)
+
+        if table_host is None:
+            # lane-aligned candidate pad (multiple of 128): ≤ 127 wasted
+            # columns per round instead of pow2's up-to-2x, at a bounded
+            # cost in extra trace shapes
+            c_pad = max(128, -(-cand_ids.size // 128) * 128)
+            if elab_dev is None:
+                elab_dev = jnp.asarray(elab_np)
+            # slice the buffer to the live-row pow2 so a round's work tracks
+            # the actual table size, not the full capacity (pow2 alignment
+            # keeps every further row slice exact)
+            r_active = int(2 ** np.ceil(np.log2(max(n_rows, 1))))
+            active = (table_dev[:r_active]
+                      if r_active < table_dev.shape[0] else table_dev)
+            j = int(q_pos.size)
+            cand_dev = jnp.asarray(
+                np.pad(cand_ids, (0, c_pad - cand_ids.size))
+            )
+            n_cand_dev = jnp.asarray(cand_ids.size, jnp.int32)
+            qp, ql, qv = map(jnp.asarray, (q_pos, q_lab, q_val))
+            kernel_on = (use_kernel if use_kernel is not None
+                         else jax.default_backend() == "tpu")
+            stats["device_rounds"] += 1
+            count = None
+            if kernel_on and r_active * c_pad * j <= _DEVICE_JOIN_CELLS:
+                # fully on-device round: fused kernel grid + compaction;
+                # only the survivor count syncs back
+                valid = _device_join_valid(
+                    active, jnp.asarray(n_rows, jnp.int32), cand_dev,
+                    n_cand_dev, elab_dev, qp, ql, qv, use_kernel=True,
+                )
+                out_cap = min(cap, r_active * c_pad)
+                new_table, count_dev = _device_join_compact(
+                    active, cand_dev, valid, out_cap=out_cap
+                )
+                count = int(count_dev)
+                if count <= cap:
+                    table_dev, n_rows = new_table, count
+                    continue
+            else:
+                # host-assisted compaction: the validity grid is evaluated
+                # in cell-budgeted fused dispatches, the 1-byte bitmask
+                # comes back for numpy's nonzero, and the next table is
+                # built by an on-device gather — the table stays resident
+                rows_per = _DEVICE_JOIN_CELLS // max(1, c_pad * j)
+                rows_per = max(256, 1 << max(0, rows_per.bit_length() - 1))
+                # cap the slice so the final partial slice wastes at most
+                # 4095 padded rows of validity compute
+                rows_per = min(rows_per, 4096, r_active)
+                r_list, c_list = [], []
+                for lo in range(0, n_rows, rows_per):
+                    sl = (active[lo : lo + rows_per]
+                          if rows_per < r_active else active)
+                    n_live = min(n_rows - lo, rows_per)
+                    valid = _device_join_valid(
+                        sl, jnp.asarray(n_live, jnp.int32), cand_dev,
+                        n_cand_dev, elab_dev, qp, ql, qv,
+                        use_kernel=kernel_on,
+                    )
+                    ri, ci = np.nonzero(np.asarray(valid))
+                    if ri.size:
+                        r_list.append(ri.astype(np.int32) + np.int32(lo))
+                        c_list.append(ci.astype(np.int32))
+                count = sum(r.size for r in r_list)
+                if count == 0:
+                    table_dev = jnp.zeros((1, t + 1), jnp.int32)
+                    n_rows = 0
+                    continue
+                if count <= cap:
+                    out_cap = int(2 ** np.ceil(np.log2(count)))
+                    r_idx = np.zeros(out_cap, np.int32)
+                    c_idx = np.zeros(out_cap, np.int32)
+                    r_idx[:count] = np.concatenate(r_list)
+                    c_idx[:count] = np.concatenate(c_list)
+                    table_dev = _device_join_gather(
+                        active, cand_dev, jnp.asarray(r_idx),
+                        jnp.asarray(c_idx),
+                        jnp.asarray(count, jnp.int32), out_cap=out_cap,
+                    )
+                    n_rows = count
+                    continue
+            # buffer overflow (count > cap): replay this level through the
+            # chunked host join — nothing consumed the overflowed output
+            table_host = np.asarray(active[:n_rows])
+            table_dev = None
+
+        stats["host_levels"] += 1
+        table_host, elab_host_dev = _host_join_level(
+            table_host, cand_ids, elab_np, elab_host_dev,
+            q_pos, q_lab, q_val, chunk_rows, t,
+        )
+        if table_host.shape[0] <= cap and t < n_q - 1:
+            # shrank back under the buffer: resume device residency
+            n_rows = table_host.shape[0]
+            r0 = int(2 ** np.ceil(np.log2(max(n_rows, 1))))
+            table_dev = jnp.asarray(np.concatenate([
+                table_host.astype(np.int32),
+                np.zeros((r0 - n_rows, t + 1), np.int32),
+            ]))
+            table_host = None
+
+    if table_host is None:
+        n_keep = n_rows
+        if max_embeddings is not None:
+            n_keep = min(n_keep, max_embeddings)
+        table = np.asarray(table_dev[:n_keep])
+    else:
+        table = table_host
+        if max_embeddings is not None and table.shape[0] > max_embeddings:
+            table = table[:max_embeddings]
+    if report is not None:
+        report.update(stats)
+    return _restore_query_order(table, order)
 
 
 def embeddings_equal(a: np.ndarray, b: np.ndarray) -> bool:

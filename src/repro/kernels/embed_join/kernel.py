@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused BFS-join expansion round.
+
+One pass produces the (R × C) validity grid a join level consumes: for a
+tile of partial-embedding rows and a tile of candidate vertices, the fused
+chain is
+
+    gather matched-neighbor ids → adjacency/edge-label compare → injectivity
+
+with no intermediate round trip to HBM.  The gather that dominates the join
+(``elab[table[r, pos_j], cand_c]``) is phrased as a one-hot matmul so it
+runs on the MXU instead of as scalar loads: each matched query neighbor j
+contributes ``onehot(mapped_j) @ elab_cols`` — a (BR × N) · (N × BC)
+contraction per neighbor, the GSI-style "prefix-table join as matmul".
+
+Edge labels ride through the matmul as f32 (exact for labels < 2²⁴; label
+alphabets are tiny).  The neighbor count J and table width T are static, so
+both loops fully unroll into straight-line VPU/MXU code.
+
+Output is int8 (bool is awkward across Mosaic versions); the wrapper casts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _embed_join_kernel(
+    table_ref,       # (BR, T) int32
+    row_valid_ref,   # (BR,) int32 (0/1)
+    cand_ref,        # (BC,) int32
+    cand_valid_ref,  # (BC,) int32 (0/1)
+    elab_ref,        # (N, BC) f32 — data→candidate edge labels (−1 = none)
+    q_pos_ref,       # (J,) int32
+    q_lab_ref,       # (J,) f32
+    q_valid_ref,     # (J,) int32 (0/1)
+    out_ref,         # (BR, BC) int8
+    *,
+    n_prev: int,
+    n_nbr: int,
+):
+    tab = table_ref[...]                       # (BR, T)
+    cand = cand_ref[...]                       # (BC,)
+    elabs = elab_ref[...]                      # (N, BC)
+    br = tab.shape[0]
+    n = elabs.shape[0]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (br, n), 1)
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (1, n_prev), 1)
+
+    adj = jnp.ones((br, cand.shape[0]), dtype=jnp.bool_)
+    for j in range(n_nbr):
+        pos = q_pos_ref[j]
+        # column-select via one-hot sum (pos is traced; T is static)
+        mapped = jnp.sum(
+            jnp.where(iota_t == pos, tab, 0), axis=1
+        )  # (BR,)
+        onehot = (iota_n == mapped[:, None]).astype(jnp.float32)  # (BR, N)
+        got = jnp.dot(
+            onehot, elabs, preferred_element_type=jnp.float32
+        )  # (BR, BC)
+        ok = (got == q_lab_ref[j]) | (q_valid_ref[j] == 0)
+        adj = adj & ok
+
+    inj = jnp.ones_like(adj)
+    for t in range(n_prev):
+        inj = inj & (tab[:, t][:, None] != cand[None, :])
+
+    valid = (
+        adj & inj
+        & (row_valid_ref[...] > 0)[:, None]
+        & (cand_valid_ref[...] > 0)[None, :]
+    )
+    out_ref[...] = valid.astype(jnp.int8)
+
+
+def embed_join_pallas(
+    table,
+    row_valid,
+    cand_list,
+    cand_valid,
+    elab_cols,
+    q_pos,
+    q_lab,
+    q_valid,
+    *,
+    block_r: int = 256,
+    block_c: int = 128,
+    interpret: bool = False,
+):
+    """(R, C) int8 validity grid; R % block_r == C % block_c == 0 (the
+    wrapper pads).  ``elab_cols`` is (N, C) f32."""
+    r, n_prev = table.shape
+    c = cand_list.shape[0]
+    n = elab_cols.shape[0]
+    j = q_pos.shape[0]
+    assert r % block_r == 0 and c % block_c == 0
+    grid = (r // block_r, c // block_c)
+    kernel = functools.partial(
+        _embed_join_kernel, n_prev=n_prev, n_nbr=j
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, n_prev), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_r,), lambda i, k: (i,)),
+            pl.BlockSpec((block_c,), lambda i, k: (k,)),
+            pl.BlockSpec((block_c,), lambda i, k: (k,)),
+            pl.BlockSpec((n, block_c), lambda i, k: (0, k)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int8),
+        interpret=interpret,
+    )(table, row_valid, cand_list, cand_valid, elab_cols,
+      q_pos, q_lab, q_valid)

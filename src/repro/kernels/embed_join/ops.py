@@ -1,0 +1,74 @@
+"""Jit'd wrapper: pad to tile multiples, dispatch kernel/ref, cast to bool.
+
+On TPU the Pallas kernel compiles to Mosaic; elsewhere ``use_kernel=None``
+(auto) runs the pure-jnp oracle *inside the same jit* — the device-resident
+join (core/search.py::device_join_search) stays one fused dispatch per
+round on every backend, and interpret-mode kernel execution is reserved for
+the parity tests (``use_kernel=True`` off-TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_join.kernel import embed_join_pallas
+from repro.kernels.embed_join.ref import embed_join_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_c", "use_kernel")
+)
+def embed_join(
+    table,       # (R, T) int32 partial embeddings (matching order)
+    row_valid,   # (R,) bool
+    cand_list,   # (C,) int32
+    cand_valid,  # (C,) bool
+    elab_cols,   # (N, C) int32 data→candidate edge labels (−1 = none)
+    q_pos,       # (J,) int32
+    q_lab,       # (J,) int32
+    q_valid,     # (J,) bool
+    *,
+    block_r: int = 256,
+    block_c: int = 128,
+    use_kernel: bool | None = None,
+):
+    """(R, C) bool validity grid for one join expansion round."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return embed_join_ref(
+            table, jnp.asarray(row_valid, bool),
+            cand_list, jnp.asarray(cand_valid, bool),
+            elab_cols, q_pos, q_lab, jnp.asarray(q_valid, bool),
+        )
+    r = table.shape[0]
+    c = cand_list.shape[0]
+    n = elab_cols.shape[0]
+    pad_r = (-r) % block_r
+    pad_c = (-c) % block_c
+    pad_n = (-n) % 128  # lane-align the contraction axis for the MXU
+    mask = embed_join_pallas(
+        jnp.pad(table, ((0, pad_r), (0, 0))),
+        jnp.pad(jnp.asarray(row_valid, jnp.int32), (0, pad_r)),
+        jnp.pad(cand_list, (0, pad_c)),
+        jnp.pad(jnp.asarray(cand_valid, jnp.int32), (0, pad_c)),
+        jnp.pad(
+            jnp.asarray(elab_cols, jnp.float32),
+            ((0, pad_n), (0, pad_c)),
+            constant_values=-1.0,
+        ),
+        jnp.asarray(q_pos, jnp.int32),
+        jnp.asarray(q_lab, jnp.float32),
+        jnp.asarray(q_valid, jnp.int32),
+        block_r=block_r,
+        block_c=block_c,
+        interpret=not _on_tpu(),
+    )
+    return mask[:r, :c].astype(bool)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused embed-join expansion round.
+
+One BFS-join expansion evaluates, for every (partial embedding row r,
+candidate data vertex c) pair, whether appending c to row r is still a
+valid partial embedding:
+
+* **adjacency + edge label** — every already-matched query neighbor of the
+  next query vertex must map to a data neighbor of c whose edge label
+  matches the query edge label;
+* **injectivity** — c must not already appear in row r.
+
+``elab_cols`` is the candidate-restricted adjacency view: column c holds
+the data edge labels from *every* data vertex to candidate c (−1 = no
+edge), so the adjacency test is a pure gather + compare with no host trip.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embed_join_ref(
+    table: jnp.ndarray,       # (R, T) int32 partial embeddings (match order)
+    row_valid: jnp.ndarray,   # (R,) bool
+    cand_list: jnp.ndarray,   # (C,) int32 candidate data vertices
+    cand_valid: jnp.ndarray,  # (C,) bool
+    elab_cols: jnp.ndarray,   # (N, C) int32 edge label data→cand (−1 = none)
+    q_nbr_pos: jnp.ndarray,   # (J,) int32 table positions (<T) of matched nbrs
+    q_nbr_lab: jnp.ndarray,   # (J,) int32 required edge labels
+    q_nbr_valid: jnp.ndarray,  # (J,) bool — padding constraints are inert
+) -> jnp.ndarray:
+    """(R, C) bool: valid[r, c] ⇔ row r extends by candidate c."""
+    mapped = jnp.take_along_axis(
+        table,
+        jnp.broadcast_to(
+            q_nbr_pos[None, :], (table.shape[0], q_nbr_pos.shape[0])
+        ),
+        axis=1,
+    )  # (R, J)
+    got = elab_cols[mapped]                                    # (R, J, C)
+    lab_ok = (got == q_nbr_lab[None, :, None]) | ~q_nbr_valid[None, :, None]
+    adj_ok = jnp.all(lab_ok, axis=1)                           # (R, C)
+    inj_ok = jnp.all(
+        table[:, :, None] != cand_list[None, None, :], axis=1
+    )
+    return adj_ok & inj_ok & row_valid[:, None] & cand_valid[None, :]

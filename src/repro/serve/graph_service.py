@@ -74,6 +74,11 @@ class GraphServiceConfig:
     filter_variant: str = _ENGINE_CONFIG.filter_variant
     khop: int = _ENGINE_CONFIG.khop
     searcher: str = _ENGINE_CONFIG.searcher
+    # "host" | "device": device-resident join enumeration (DESIGN.md §11) —
+    # bit-identical embeddings, the embedding table stays on device between
+    # rounds.  Snapshot-aware: each finalize enumerates against the
+    # request's pinned epoch either way.
+    enumerator: str = _ENGINE_CONFIG.enumerator
     search_vertex_cap: int = 8192
     max_rounds_per_query: int = 1_000  # safety valve: finalize early (sound)
     # optional device mesh: ticks run the vertex-partitioned peeling round
@@ -441,6 +446,7 @@ class GraphQueryService:
             search_vertex_cap=self.cfg.search_vertex_cap,
             max_embeddings=req.max_embeddings,
             planner=self.planner,
+            enumerator=self.cfg.enumerator,
         )
         return req.rid, emb, stats
 

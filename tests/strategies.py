@@ -1,0 +1,159 @@
+"""Shared test generators + hypothesis strategies.
+
+One home for the random labeled-graph / query / update-batch generators and
+small helpers that were previously copy-pasted (with drift) across
+test_incremental.py, test_planner.py, and test_search_stream.py — and for
+the differential oracle harness (test_differential.py) that runs every
+search engine against the same seeds.
+
+Hypothesis strategies degrade gracefully: when the real ``hypothesis`` is
+absent, tests/conftest.py installs a shim whose ``@given`` skips the test,
+and the strategy constructors here return inert ``None`` placeholders so
+module import (collection) still succeeds on a bare machine.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import hypothesis
+from hypothesis import strategies as st
+
+from repro.core.search import _host_adjacency
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.graphs.store import EdgeBatch
+
+HAVE_HYPOTHESIS = not getattr(hypothesis, "__is_repro_shim__", False)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic seed-based generators (usable with plain parametrize).
+# ---------------------------------------------------------------------------
+
+
+def seeded_graph_and_query(
+    seed: int,
+    *,
+    n_vertices: int = 120,
+    n_edges: int = 420,
+    n_labels: int = 4,
+    n_edge_labels: int = 2,
+    query_vertices: int = 4,
+    sparse: bool | None = None,
+):
+    """One (data graph, random-walk query) pair per seed.
+
+    ``sparse=None`` alternates by seed parity — half the pairs get induced
+    (dense) queries, half get tree-plus-extras skeletons."""
+    g = random_labeled_graph(
+        n_vertices, n_edges, n_labels, n_edge_labels=n_edge_labels, seed=seed
+    )
+    if sparse is None:
+        sparse = seed % 2 == 0
+    q = random_walk_query(g, query_vertices, sparse=sparse, seed=seed + 1000)
+    return g, q
+
+
+def random_connected_order(q, rng) -> list[int]:
+    """A random *valid* matching order that keeps the prefix connected
+    whenever possible (falls back to any remaining vertex on disconnected
+    queries) — the order-invariance probe used by planner + search tests."""
+    adj = _host_adjacency(q)
+    n = q.n_vertices
+    order = [int(rng.integers(n))]
+    remaining = set(range(n)) - set(order)
+    while remaining:
+        connected = [u for u in remaining
+                     if any(w in adj.get(u, {}) for w in order)]
+        pool = sorted(connected) if connected else sorted(remaining)
+        nxt = int(rng.choice(pool))
+        order.append(nxt)
+        remaining.discard(nxt)
+    return order
+
+
+def label_candidates(g, q) -> np.ndarray:
+    """Sound (label-only) candidate matrix — a valid search input that
+    exercises the engines without running a filter first."""
+    return (np.asarray(g.vlabels)[:, None]
+            == np.asarray(q.vlabels)[None, :])
+
+
+def emb_set(emb) -> set[tuple]:
+    """Row-order-independent view of an embedding table."""
+    return {tuple(r) for r in np.asarray(emb).tolist()}
+
+
+def graph_chunks(g, chunk_edges: int, *, order=None):
+    """A graph's directed-edge records as (src, dst, elab, valid) stream
+    chunks — the in-memory twin of the edge-file reader."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    elab = np.asarray(g.elabels)
+    if order is not None:
+        src, dst, elab = src[order], dst[order], elab[order]
+    chunks = []
+    for lo in range(0, src.size, chunk_edges):
+        s = src[lo : lo + chunk_edges].astype(np.int32)
+        chunks.append((
+            s,
+            dst[lo : lo + chunk_edges].astype(np.int32),
+            elab[lo : lo + chunk_edges].astype(np.int32),
+            np.ones(s.size, dtype=bool),
+        ))
+    return chunks
+
+
+def edge_batch_from_ops(ops, *, elabel: int = 0) -> EdgeBatch | None:
+    """(a, b, insert) op tuples → an ``EdgeBatch`` (self-loops dropped).
+
+    Returns ``None`` when nothing survives — callers should treat that as
+    an empty (vacuously passing) example."""
+    recs = [(a, b, elabel, ins) for a, b, ins in ops if a != b]
+    if not recs:
+        return None
+    arr = np.asarray([r[:3] for r in recs], dtype=np.int64)
+    return EdgeBatch(
+        src=arr[:, 0], dst=arr[:, 1], elabels=arr[:, 2],
+        insert=np.asarray([r[3] for r in recs], dtype=bool),
+        valid=np.ones(len(recs), dtype=bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis strategies (inert stubs under the conftest shim).
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    def update_ops(max_vertex: int = 29, max_ops: int = 40):
+        """Lists of (a, b, insert) ops against a ``max_vertex + 1``-vertex
+        store — feed through ``edge_batch_from_ops``."""
+        return st.lists(
+            st.tuples(
+                st.integers(0, max_vertex),
+                st.integers(0, max_vertex),
+                st.booleans(),
+            ),
+            min_size=1,
+            max_size=max_ops,
+        )
+
+    def graph_query_seeds(max_seed: int = 10_000):
+        """Seeds for ``seeded_graph_and_query`` — property tests draw the
+        seed and build the pair deterministically, so shrinking converges
+        on a reproducible counterexample."""
+        return st.integers(0, max_seed)
+
+    def query_sizes(lo: int = 2, hi: int = 6):
+        return st.integers(lo, hi)
+
+else:  # pragma: no cover - exercised only on bare machines
+    def update_ops(max_vertex: int = 29, max_ops: int = 40):
+        return None
+
+    def graph_query_seeds(max_seed: int = 10_000):
+        return None
+
+    def query_sizes(lo: int = 2, hi: int = 6):
+        return None

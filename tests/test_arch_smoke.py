@@ -13,6 +13,21 @@ from repro.models import model as M
 
 BATCH, SEQ = 2, 32
 
+# Runtime audit (ISSUE 5): the largest reduced configs dominate the fast
+# tier (20-35s each on CI-class CPUs) while exercising the same model code
+# paths as the small members of their families — keep a representative
+# small arch per family fast, push the giants to the slow tier.
+_SLOW_ARCHS = {
+    "deepseek-v3-671b",       # MLA covered fast by minicpm3-4b
+    "hymba-1.5b",
+    "seamless-m4t-large-v2",
+    "qwen3-moe-30b-a3b",      # MoE paths covered fast by test_optimizations
+}
+_ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS else a
+    for a in ARCHITECTURES
+]
+
 
 def _batch_for(cfg, key):
     ks = jax.random.split(key, 3)
@@ -27,7 +42,7 @@ def _batch_for(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHITECTURES)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_forward_and_grad(arch):
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(0)
@@ -52,7 +67,7 @@ def test_forward_and_grad(arch):
     assert gnorm > 0, f"{arch}: zero gradient"
 
 
-@pytest.mark.parametrize("arch", ARCHITECTURES)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_decode_matches_prefill(arch):
     """Teacher-forced decode step logits == forward logits (last position)."""
     cfg = get_config(arch).reduced()

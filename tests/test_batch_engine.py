@@ -14,10 +14,7 @@ from repro.core import BatchQueryEngine, SubgraphQueryEngine
 from repro.core.batch_engine import bucket_key, ceil_pow2
 from repro.graphs import random_labeled_graph, random_walk_query
 from repro.graphs.csr import build_graph
-
-
-def _emb_set(emb: np.ndarray):
-    return {tuple(r) for r in np.asarray(emb).tolist()}
+from strategies import emb_set as _emb_set
 
 
 def _assert_batch_matches_sequential(data, queries, *, variant="cni",
@@ -50,17 +47,22 @@ def _zero_embedding_data():
     return build_graph(3, [0, 1, 0], [(0, 1), (1, 2)], elabels=[0, 0])
 
 
-def test_batch_of_32_mixed_queries_matches_sequential():
+# the full B=32 sweep covers the same mixed-batch parity assertion as B=12
+# at ~3x the sequential-verification cost — slow tier (ISSUE 5 runtime audit)
+@pytest.mark.parametrize("n_queries", [
+    12, pytest.param(32, marks=pytest.mark.slow),
+])
+def test_batch_of_mixed_queries_matches_sequential(n_queries):
     g = random_labeled_graph(250, 900, 6, n_edge_labels=2, seed=3)
     rng = np.random.default_rng(7)
     queries = [
         random_walk_query(g, int(rng.integers(4, 9)),
                           sparse=bool(i % 2), seed=400 + i)
-        for i in range(30)
+        for i in range(n_queries - 2)
     ]
     queries.insert(5, _all_pruned_query())
-    queries.insert(20, _all_pruned_query())
-    assert len(queries) == 32
+    queries.insert(min(20, len(queries)), _all_pruned_query())
+    assert len(queries) == n_queries
     _assert_batch_matches_sequential(g, queries)
 
 
@@ -92,11 +94,17 @@ def test_batch_matches_sequential_all_variants(variant):
 
 
 def test_small_max_batch_chunks_and_buckets():
-    """Chunking (max_batch < n_queries) must not change any result."""
+    """Chunking (max_batch < n_queries) must not change any result.
+
+    8 queries of sizes 3-4 still land in two distinct buckets (their label
+    alphabets split 2 vs 3-4) AND force a descending-pow2 chunk split under
+    max_batch=4 (the 6-query bucket runs as chunks of 4 then 2) — the same
+    chunk/bucket interactions the original 12-query sweep hit, at ~60% of
+    the sequential-verification cost (ISSUE 5 runtime audit)."""
     g = random_labeled_graph(200, 700, 5, n_edge_labels=2, seed=5)
     queries = [
-        random_walk_query(g, 3 + (i % 6), sparse=bool(i % 2), seed=70 + i)
-        for i in range(12)
+        random_walk_query(g, 3 + (i % 2), sparse=bool(i % 2), seed=70 + i)
+        for i in range(8)
     ]
     _assert_batch_matches_sequential(g, queries, max_batch=4)
     # heterogeneous sizes must land in pow2-padded buckets

@@ -1,0 +1,309 @@
+"""Randomized differential oracle harness: every engine vs brute force.
+
+The load-bearing idea: an *independent* reference matcher — a flat
+``itertools.product`` sweep over label-compatible vertex tuples with a full
+adjacency/edge-label/injectivity check, sharing no code with any engine —
+is run against every enumeration path on the *same* seeds:
+
+    host_dfs_search · bfs_join_search · device_join_search ·
+    SubgraphQueryEngine (host + device enumerator) · BatchQueryEngine ·
+    the sharded (mesh) engine
+
+plus the degenerate corners the random sweep can miss: all-pruned queries,
+zero-embedding queries (edge-label mismatch), self-loop-free multi-label
+edges, saturated-CNI digests, ``max_embeddings`` truncation, disconnected
+queries under explicit orders, and single-vertex queries.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+
+from repro.core import (
+    BatchQueryEngine,
+    SubgraphQueryEngine,
+    bfs_join_search,
+    device_join_search,
+    host_dfs_search,
+)
+from repro.core.cni import SAT64
+from repro.core.incremental import IncrementalIndex
+from repro.graphs import GraphStore, random_labeled_graph, random_walk_query
+from repro.graphs.csr import build_graph
+from strategies import (
+    emb_set,
+    graph_query_seeds,
+    label_candidates,
+    query_sizes,
+    random_connected_order,
+    seeded_graph_and_query,
+)
+
+# one shared shape across the random sweep so jit traces amortize over seeds
+_V, _E, _L, _EL, _U = 36, 90, 3, 2, 4
+_SEEDS = [0, 1, 2, 3, 4, 5]
+
+
+def brute_force_embeddings(g, q, *, product_cap: int = 500_000):
+    """Exhaustive reference matcher (independent of every engine).
+
+    Enumerates the full cross product of label-compatible data vertices per
+    query vertex and keeps exactly the injective tuples whose every query
+    edge maps to a data edge with the same label.  ``product_cap`` guards
+    against accidentally unbounded test inputs."""
+    vlab_g = np.asarray(g.vlabels)
+    vlab_q = np.asarray(q.vlabels)
+    elab = {}
+    for s, d, e in zip(np.asarray(g.src), np.asarray(g.dst),
+                       np.asarray(g.elabels)):
+        elab[(int(s), int(d))] = int(e)
+    q_edges = list(zip(np.asarray(q.src).tolist(),
+                       np.asarray(q.dst).tolist(),
+                       np.asarray(q.elabels).tolist()))
+    pools = [np.nonzero(vlab_g == vlab_q[u])[0].tolist()
+             for u in range(q.n_vertices)]
+    total = 1
+    for p in pools:
+        total *= max(1, len(p))
+    assert total <= product_cap, (
+        f"brute-force product {total} exceeds cap — shrink the test input"
+    )
+    out = set()
+    for tup in itertools.product(*pools):
+        if len(set(tup)) != len(tup):
+            continue
+        if all(elab.get((tup[a], tup[b])) == e for a, b, e in q_edges):
+            out.add(tup)
+    return out
+
+
+def _all_engine_results(g, q, *, max_embeddings=None):
+    """name → embedding table, over every enumeration path."""
+    cand = label_candidates(g, q)
+    out = {
+        "dfs": host_dfs_search(g, q, cand, max_embeddings=max_embeddings),
+        "bfs_join": bfs_join_search(g, q, cand,
+                                    max_embeddings=max_embeddings),
+        "device_join": device_join_search(g, q, cand,
+                                          max_embeddings=max_embeddings),
+        "engine": SubgraphQueryEngine(g).query(
+            q, max_embeddings=max_embeddings)[0],
+        "engine_device": SubgraphQueryEngine(g, enumerator="device").query(
+            q, max_embeddings=max_embeddings)[0],
+        "batch": BatchQueryEngine(g).query_batch(
+            [q], max_embeddings=max_embeddings)[0][0],
+    }
+    from repro.core.distributed import device_mesh
+
+    mesh = device_mesh()  # every visible device (1 on a plain CPU run)
+    out["sharded"] = SubgraphQueryEngine(g, mesh=mesh).query(
+        q, max_embeddings=max_embeddings)[0]
+    return out
+
+
+def _assert_all_match_brute_force(g, q):
+    truth = brute_force_embeddings(g, q)
+    for name, emb in _all_engine_results(g, q).items():
+        assert emb_set(emb) == truth, (
+            f"{name} diverged from brute force "
+            f"({len(emb_set(emb))} vs {len(truth)} embeddings)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# randomized sweep — all engines, same seeds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_differential_random(seed):
+    g, q = seeded_graph_and_query(
+        seed, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    _assert_all_match_brute_force(g, q)
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_query_seeds(), query_sizes(2, 4))  # 4: keeps the brute-force
+def test_differential_property(seed, n_qv):     # product under its cap
+    """Property form (CI): searchers vs brute force on drawn seeds."""
+    g, q = seeded_graph_and_query(
+        seed, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=n_qv,
+    )
+    truth = brute_force_embeddings(g, q)
+    cand = label_candidates(g, q)
+    assert emb_set(host_dfs_search(g, q, cand)) == truth
+    assert emb_set(bfs_join_search(g, q, cand)) == truth
+    assert emb_set(device_join_search(g, q, cand)) == truth
+
+
+# ---------------------------------------------------------------------------
+# degenerate corners
+# ---------------------------------------------------------------------------
+
+
+def test_differential_all_pruned():
+    """Query labels absent from the data: every path returns (0, U)."""
+    g = random_labeled_graph(_V, _E, _L, n_edge_labels=_EL, seed=7)
+    q = build_graph(3, [97, 98, 99], [(0, 1), (1, 2)])
+    assert brute_force_embeddings(g, q) == set()
+    for name, emb in _all_engine_results(g, q).items():
+        assert emb.shape == (0, 3), name
+
+
+def test_differential_zero_embedding_edge_label():
+    """Vertex labels match everywhere but one query edge label exists
+    nowhere: filters keep vertices alive, enumeration must return empty."""
+    g = build_graph(4, [0, 1, 0, 1], [(0, 1), (1, 2), (2, 3)],
+                    elabels=[0, 0, 0])
+    q = build_graph(3, [0, 1, 0], [(0, 1), (1, 2)], elabels=[0, 1])
+    assert brute_force_embeddings(g, q) == set()
+    for name, emb in _all_engine_results(g, q).items():
+        assert emb.shape[0] == 0, name
+
+
+def test_differential_multigraph_labels_no_self_loops():
+    """Distinct edge labels on adjacent pairs (self-loop-free): the label
+    test must bind per-edge, not per-pair."""
+    g = build_graph(
+        5, [0, 1, 0, 1, 0],
+        [(0, 1), (1, 2), (2, 3), (3, 4), (0, 3), (1, 4)],
+        elabels=[0, 1, 0, 2, 1, 2],
+    )
+    for el in (0, 1, 2):
+        q = build_graph(2, [0, 1], [(0, 1)], elabels=[el])
+        _assert_all_match_brute_force(g, q)
+    q = build_graph(3, [0, 1, 0], [(0, 1), (1, 2)], elabels=[0, 1])
+    _assert_all_match_brute_force(g, q)
+
+
+def test_differential_saturated_cni():
+    """A store whose center digest saturates (sticky LOG_SAT64, DESIGN.md
+    §8): engines consuming the *maintained* saturated digests must still
+    enumerate exactly the brute-force set."""
+    n = 64
+    vlab = np.zeros(n, np.int64)
+    vlab[1:] = 2
+    store = GraphStore(n, vlab)
+    store.attach_index(IncrementalIndex(d_max=64))
+    store.add_edges([[0, i] for i in range(1, 40)])
+    assert store.index.cni_u64[0] == SAT64  # the case actually saturates
+    snap = store.snapshot()
+    q = build_graph(3, [0, 2, 2], [(0, 1), (0, 2)])
+    truth = brute_force_embeddings(snap.graph, q)
+    assert truth  # non-degenerate: 39·38 center embeddings
+    for eng in (
+        SubgraphQueryEngine(store),
+        SubgraphQueryEngine(store, enumerator="device"),
+        BatchQueryEngine(store),
+    ):
+        if isinstance(eng, BatchQueryEngine):
+            emb = eng.query_batch([q])[0][0]
+        else:
+            emb = eng.query(q)[0]
+        assert emb_set(emb) == truth
+
+
+# ---------------------------------------------------------------------------
+# enumeration edge cases the suite previously skipped
+# ---------------------------------------------------------------------------
+
+
+def test_max_embeddings_truncation_parity():
+    """Truncation contract across engines: the two join engines share one
+    deterministic row order (bit-identical truncated tables); every engine
+    returns exactly min(cap, total) rows, each a member of the full set."""
+    g, q = seeded_graph_and_query(
+        2, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    truth = brute_force_embeddings(g, q)
+    total = len(truth)
+    assert total >= 3, "workload must have enough embeddings to truncate"
+    cand = label_candidates(g, q)
+    for cap in (1, total - 1, total, total + 5):
+        a = bfs_join_search(g, q, cand, max_embeddings=cap)
+        b = device_join_search(g, q, cand, max_embeddings=cap)
+        np.testing.assert_array_equal(a, b)  # incl. row order
+        # the overflow → chunked-host-fallback → device re-entry regime
+        # must preserve the same bit-order contract (device_rows=8 forces
+        # the fallback on every non-trivial level)
+        c = device_join_search(g, q, cand, max_embeddings=cap,
+                               device_rows=8)
+        np.testing.assert_array_equal(a, c)
+        for name, emb in _all_engine_results(
+                g, q, max_embeddings=cap).items():
+            assert emb.shape[0] == min(cap, total), (name, cap)
+            assert emb_set(emb) <= truth, (name, cap)
+
+
+def test_disconnected_query_explicit_orders():
+    """A two-component query under explicit orders — including orders that
+    interleave the components, where a join level has *no* matched
+    neighbor (pure cross product + injectivity)."""
+    g = random_labeled_graph(24, 70, 2, n_edge_labels=1, seed=9)
+    # component A: an edge; component B: an isolated vertex
+    q = build_graph(3, [0, 1, 0], [(0, 1)])
+    truth = brute_force_embeddings(g, q)
+    cand = label_candidates(g, q)
+    rng = np.random.default_rng(5)
+    orders = [[2, 0, 1], [0, 2, 1], random_connected_order(q, rng)]
+    for order in orders:
+        assert emb_set(host_dfs_search(g, q, cand, order=order)) == truth
+        assert emb_set(bfs_join_search(g, q, cand, order=order)) == truth
+        assert emb_set(
+            device_join_search(g, q, cand, order=order)
+        ) == truth
+    # engine-level: a planner must also produce a valid order for it
+    emb, stats = SubgraphQueryEngine(g, enumerator="device").query(q)
+    assert emb_set(emb) == truth
+
+
+def test_service_device_enumerator_store_aware():
+    """`GraphServiceConfig(enumerator="device")` over a *mutating* store:
+    each request's device-resident enumeration runs against its pinned
+    epoch snapshot, matching the host-enumerator service bit-for-bit."""
+    from repro.serve import GraphQueryService, GraphServiceConfig
+
+    g = random_labeled_graph(60, 160, 3, n_edge_labels=2, seed=21)
+    queries = [random_walk_query(g, 4, sparse=bool(i % 2), seed=30 + i)
+               for i in range(4)]
+
+    def run(enumerator):
+        store = GraphStore.from_graph(g, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        svc = GraphQueryService(store, GraphServiceConfig(
+            max_slots=2, max_query_vertices=8, max_query_labels=8,
+            enumerator=enumerator,
+        ))
+        rids = [svc.submit(q) for q in queries]
+        done = {rid: emb for rid, emb, _ in svc.tick()}  # pins epoch 0
+        svc.add_edges([[i, (i + 11) % 60] for i in range(0, 20, 2)])
+        done.update(
+            (rid, emb) for rid, emb, _ in svc.run_to_completion()
+        )
+        assert sorted(done) == sorted(rids)
+        return [done[r] for r in rids]
+
+    for h, d in zip(run("host"), run("device")):
+        np.testing.assert_array_equal(h, d)
+
+
+def test_single_vertex_query():
+    """U = 1: the join loop never runs; the seed table is the answer."""
+    g = random_labeled_graph(30, 80, 3, seed=11)
+    lab = int(np.asarray(g.vlabels)[0])
+    q = build_graph(1, [lab], np.zeros((0, 2), np.int64))
+    truth = brute_force_embeddings(g, q)
+    assert truth
+    for name, emb in _all_engine_results(g, q).items():
+        assert emb_set(emb) == truth, name
+    # truncation applies to the seed table too (all engines agree)
+    for name, emb in _all_engine_results(g, q, max_embeddings=2).items():
+        assert emb.shape[0] == min(2, len(truth)), name
+        assert emb_set(emb) <= truth, name

@@ -5,6 +5,11 @@ Each snippet runs in its own subprocess with ``PYTHONPATH=src`` (exactly
 how the docs tell users to run them), so stale imports, renamed APIs, or
 pre-PR2 constructor examples fail CI instead of rotting silently.  Shell
 blocks (```` ```bash ````) and diagrams are not executed.
+
+Slow tier (ISSUE 5 runtime audit): every snippet pays a fresh subprocess
+jax import + jit warm-up (~2 min total), and CI runs this module in its own
+dedicated ``docs`` job (see .github/workflows/ci.yml) rather than the fast
+tier — run locally with ``pytest tests/test_docs_snippets.py``.
 """
 
 import os
@@ -13,6 +18,8 @@ import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 _ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)

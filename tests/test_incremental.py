@@ -13,7 +13,6 @@ import numpy as np
 import pytest
 
 from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import SubgraphQueryEngine
 from repro.core.cni import LOG_SAT64, SAT64
@@ -26,7 +25,11 @@ from repro.graphs import (
     random_update_batches,
     random_walk_query,
 )
-from repro.graphs.store import EdgeBatch
+from strategies import (
+    edge_batch_from_ops,
+    emb_set as _embedding_set,
+    update_ops,
+)
 
 
 def _fresh_index_like(idx: IncrementalIndex, store: GraphStore):
@@ -40,10 +43,6 @@ def _assert_index_equal(idx: IncrementalIndex, ref: IncrementalIndex):
     np.testing.assert_array_equal(idx.deg, ref.deg)
     np.testing.assert_array_equal(idx.cni_u64, ref.cni_u64)
     np.testing.assert_array_equal(idx.cni_log, ref.cni_log)
-
-
-def _embedding_set(emb):
-    return {tuple(r) for r in np.asarray(emb).tolist()}
 
 
 # ---------------------------------------------------------------------------
@@ -104,23 +103,14 @@ class TestIncrementalEqualsScratch:
                             _fresh_index_like(store.index, store))
 
     @settings(max_examples=20, deadline=None)
-    @given(st.lists(
-        st.tuples(st.integers(0, 29), st.integers(0, 29), st.booleans()),
-        min_size=1, max_size=40,
-    ))
+    @given(update_ops(max_vertex=29, max_ops=40))
     def test_property_any_op_sequence(self, ops):
         g = random_labeled_graph(30, 60, 3, seed=4)
         store = GraphStore.from_graph(g)
         store.attach_index(IncrementalIndex())
-        recs = [(a, b, 0, ins) for a, b, ins in ops if a != b]
-        if not recs:
+        batch = edge_batch_from_ops(ops)
+        if batch is None:
             return
-        arr = np.asarray([r[:3] for r in recs], dtype=np.int64)
-        batch = EdgeBatch(
-            src=arr[:, 0], dst=arr[:, 1], elabels=arr[:, 2],
-            insert=np.asarray([r[3] for r in recs], dtype=bool),
-            valid=np.ones(len(recs), dtype=bool),
-        )
         store.apply(batch)
         _assert_index_equal(store.index,
                             _fresh_index_like(store.index, store))

@@ -9,6 +9,8 @@ from repro.kernels.candidate_filter.ops import candidate_filter
 from repro.kernels.candidate_filter.ref import candidate_filter_ref
 from repro.kernels.cni_encode.ops import cni_encode
 from repro.kernels.cni_encode.ref import cni_encode_ref
+from repro.kernels.embed_join.ops import embed_join
+from repro.kernels.embed_join.ref import embed_join_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 from repro.kernels.rwkv6_wkv.ops import wkv6
@@ -36,6 +38,50 @@ class TestCniEncodeKernel:
         fin = np.isfinite(lr)
         assert (np.isfinite(lk) == fin).all()
         np.testing.assert_allclose(lk[fin], lr[fin], rtol=1e-5, atol=1e-5)
+
+
+class TestEmbedJoinKernel:
+    def _random_inputs(self, r, t, c, n, j, seed):
+        rng = np.random.default_rng(seed)
+        table = rng.integers(0, n, size=(r, t)).astype(np.int32)
+        row_valid = rng.random(r) < 0.8
+        cand = rng.integers(0, n, size=c).astype(np.int32)
+        cand_valid = rng.random(c) < 0.8
+        # sparse labeled adjacency (−1 = no edge), zero diagonal optional
+        elab_cols = np.where(
+            rng.random((n, c)) < 0.25,
+            rng.integers(0, 3, size=(n, c)),
+            -1,
+        ).astype(np.int32)
+        q_pos = rng.integers(0, t, size=j).astype(np.int32)
+        q_lab = rng.integers(0, 3, size=j).astype(np.int32)
+        q_valid = rng.random(j) < 0.7
+        return (table, row_valid, cand, cand_valid, elab_cols,
+                q_pos, q_lab, q_valid)
+
+    @pytest.mark.parametrize("r,t,c,n,j,br,bc", [
+        (64, 3, 32, 50, 2, 32, 16),
+        (100, 1, 33, 40, 1, 64, 32),   # non-multiples — wrapper pads
+        (16, 5, 128, 130, 4, 256, 64),  # blocks larger than R; N > 128
+    ])
+    def test_matches_ref(self, r, t, c, n, j, br, bc):
+        args = self._random_inputs(r, t, c, n, j, seed=r + c)
+        jargs = tuple(map(jnp.asarray, args))
+        mk = embed_join(*jargs, block_r=br, block_c=bc, use_kernel=True)
+        mr = embed_join_ref(*jargs)
+        np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+
+    def test_inert_constraint_rows_pass_all(self):
+        """q_valid=False rows (padding) must never constrain the join."""
+        args = list(self._random_inputs(32, 2, 16, 20, 1, seed=3))
+        args[7] = np.zeros(1, bool)  # no valid constraints
+        jargs = tuple(map(jnp.asarray, args))
+        got = np.asarray(embed_join(*jargs, block_r=32, block_c=16,
+                                    use_kernel=True))
+        # only injectivity + row/cand validity remain
+        inj = (args[0][:, :, None] != args[2][None, None, :]).all(axis=1)
+        exp = inj & args[1][:, None] & args[3][None, :]
+        np.testing.assert_array_equal(got, exp)
 
 
 class TestCandidateFilterKernel:

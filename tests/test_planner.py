@@ -46,6 +46,11 @@ from repro.graphs import (
 )
 from repro.graphs.csr import build_graph
 from repro.serve import GraphQueryService, GraphServiceConfig
+from strategies import (
+    emb_set as _emb_set,
+    label_candidates as _label_candidates,
+    random_connected_order as _random_connected_order,
+)
 
 
 def _legacy_greedy(sizes, q_adj):
@@ -60,31 +65,6 @@ def _legacy_greedy(sizes, q_adj):
         nxt = min(pool, key=lambda u: sizes[u])
         order.append(nxt)
         remaining.remove(nxt)
-    return order
-
-
-def _label_candidates(g, q):
-    """Sound (label-only) candidate matrix — a valid search input."""
-    return (np.asarray(g.vlabels)[:, None]
-            == np.asarray(q.vlabels)[None, :])
-
-
-def _emb_set(emb):
-    return {tuple(r) for r in np.asarray(emb).tolist()}
-
-
-def _random_connected_order(q, rng):
-    adj = _host_adjacency(q)
-    n = q.n_vertices
-    order = [int(rng.integers(n))]
-    remaining = set(range(n)) - set(order)
-    while remaining:
-        connected = [u for u in remaining
-                     if any(w in adj.get(u, {}) for w in order)]
-        pool = sorted(connected) if connected else sorted(remaining)
-        nxt = int(rng.choice(pool))
-        order.append(nxt)
-        remaining.discard(nxt)
     return order
 
 

@@ -19,6 +19,7 @@ from repro.core import (
 from repro.core.engine import SubgraphQueryEngine
 from repro.graphs import random_labeled_graph, random_walk_query, write_edge_file
 from repro.graphs.csr import induced_subgraph, max_degree
+from strategies import graph_chunks
 
 
 @pytest.mark.parametrize("seed", [1, 2, 3, 4, 5])
@@ -115,30 +116,11 @@ def test_sorted_stream_prunes_early():
     )
 
 
-def _graph_chunks(g, chunk_edges, *, order=None):
-    """Turn a graph's directed-edge records into stream chunks."""
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    elab = np.asarray(g.elabels)
-    if order is not None:
-        src, dst, elab = src[order], dst[order], elab[order]
-    chunks = []
-    for lo in range(0, src.size, chunk_edges):
-        s = src[lo : lo + chunk_edges].astype(np.int32)
-        chunks.append((
-            s,
-            dst[lo : lo + chunk_edges].astype(np.int32),
-            elab[lo : lo + chunk_edges].astype(np.int32),
-            np.ones(s.size, dtype=bool),
-        ))
-    return chunks
-
-
 def test_stream_empty_chunks_equivalent():
     """Zero-length and all-invalid chunks in the stream must be no-ops."""
     g = random_labeled_graph(150, 500, 4, n_edge_labels=2, seed=20)
     q = random_walk_query(g, 4, sparse=True, seed=21)
-    chunks = _graph_chunks(g, 64)
+    chunks = graph_chunks(g, 64)
     empty = (
         np.zeros(0, np.int32), np.zeros(0, np.int32),
         np.zeros(0, np.int32), np.zeros(0, bool),
@@ -179,7 +161,7 @@ def test_stream_unsorted_iterator_equivalent():
     g = random_labeled_graph(200, 700, 5, n_edge_labels=2, seed=24)
     q = random_walk_query(g, 5, sparse=True, seed=25)
     order = np.random.default_rng(3).permutation(g.n_directed_edges)
-    chunks = _graph_chunks(g, 100, order=order)
+    chunks = graph_chunks(g, 100, order=order)
     sr = stream_filter_file(
         chunks, np.asarray(g.vlabels), q,
         d_max=max_degree(g), sorted_stream=False,
