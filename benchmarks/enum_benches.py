@@ -1,28 +1,41 @@
-"""Enumeration: device-resident join vs the chunked host join.
+"""Enumeration: two-phase device-resident join vs the chunked host join.
 
 The device-residency claim behind ``core.search.device_join_search``
-(DESIGN.md §11): keeping the partial-embedding table on device across
+(DESIGN.md §11-§12): keeping the partial-embedding table on device across
 expansion rounds removes the per-level table round-trips and host
-compaction of ``bfs_join_search``, and runs every validity grid as fused
-(multithreaded / MXU) dispatches instead of numpy broadcasting.  Rows:
+compaction of ``bfs_join_search``, and — since the prealloc-combine
+rework — sizes every level's output buffer *exactly* from a count pass
+plus prefix scan, so no level can overflow and no host fallback exists.
+Rows:
 
     enum/host_join       — bfs_join_search on the standard workload
-    enum/device_join     — device_join_search, same inputs
+    enum/device_join     — device_join_search, same inputs; derived field
+                           carries the per-phase split (count/scan/emit)
     enum/speedup         — derived acceptance metric (expect > 1x on CPU;
-                           the margin is the TPU story, where compaction
+                           the margin is the TPU story, where the scan
                            also stays on-device)
     enum/parity_canary   — device rows must equal host rows *bit-for-bit*
-                           (same embeddings, same order)
-    enum/overflow_path   — a workload sized to outgrow the device buffer:
-                           measures the chunked-host-fallback regime and
-                           asserts it actually fired
+                           (same embeddings, same order) and the device
+                           path must report host_levels == 0
+    enum/overflow_regime — a workload whose join tables outgrow the old
+                           fixed device buffer (1 << 12 rows): the regime
+                           that used to drop to the chunked host fallback
+                           per level.  Baseline is the host join (what the
+                           fallback effectively ran); the two-phase path
+                           must beat it while staying fully on the device
+                           path.  The derived field carries the memory
+                           ceiling: exact emit rows vs the true survivor
+                           count vs the pow2 cap a grow-and-retry design
+                           would have allocated.
 
 The standard workload (few labels → large candidate sets, mid-size join
 tables) sits in the regime where the host path's numpy levels are
 compute-bound — the device path's fused validity wins even on CPU.
 
 ``run_all(smoke=True)`` is the CI canary: tiny graph, one repetition —
-enough to catch jit-trace or parity breakage on every push.
+enough to catch jit-trace, parity, or fallback-resurrection breakage on
+every push.  Smoke mode *hard-asserts* bit parity and ``host_levels == 0``
+rather than just annotating the row.
 """
 
 from __future__ import annotations
@@ -38,6 +51,10 @@ from repro.core.search import (
 )
 from repro.graphs import random_labeled_graph, random_walk_query
 from repro.graphs.csr import induced_subgraph
+
+# the fixed table capacity the pre-two-phase enumerator shipped with; any
+# level outgrowing it used to fall back to a chunked host join
+_LEGACY_TABLE_CAP = 1 << 12
 
 
 def _bench(fn, *, reps: int, warmup: int = 1):
@@ -59,24 +76,44 @@ def _search_inputs(v, e, n_labels, u, *, seed=2, sparse=True):
     return sub, q, cand
 
 
+def _phase_fields(report: dict) -> str:
+    return (
+        f"count_us={report['count_seconds'] * 1e6:.0f};"
+        f"scan_us={report['scan_seconds'] * 1e6:.0f};"
+        f"emit_us={report['emit_seconds'] * 1e6:.0f};"
+        f"scan_path={report['scan_path']}"
+    )
+
+
+def _ceiling_fields(report: dict) -> str:
+    true_rows = report["max_table_rows"]
+    pow2 = 1 << max(true_rows - 1, 1).bit_length() if true_rows else 0
+    return (
+        f"emit_rows={report['max_emit_rows']};true_rows={true_rows};"
+        f"pow2_cap={pow2}"
+    )
+
+
 def bench_device_vs_host(rows: list, *, smoke: bool = False):
     if smoke:
-        v, e, u, reps, device_rows = 200, 1100, 4, 1, 1 << 14
+        v, e, u, reps = 200, 1100, 4, 1
     else:
-        v, e, u, reps, device_rows = 600, 3500, 4, 5, 1 << 16
+        v, e, u, reps = 600, 3500, 4, 5
     sub, q, cand = _search_inputs(v, e, 2, u)
 
     host = bfs_join_search(sub, q, cand)
     report: dict = {}
-    dev = device_join_search(sub, q, cand, device_rows=device_rows,
-                             report=report)
+    dev = device_join_search(sub, q, cand, report=report)
     parity = bool(np.array_equal(host, dev))
+    no_fallback = report["host_levels"] == 0
+    if smoke:
+        assert parity, "enum smoke: device rows != host rows"
+        assert no_fallback, "enum smoke: host fallback resurrected"
 
     t_host = _bench(lambda: bfs_join_search(sub, q, cand), reps=reps)
-    t_dev = _bench(
-        lambda: device_join_search(sub, q, cand, device_rows=device_rows),
-        reps=reps,
-    )
+    # timed without a report dict: phase-level block_until_ready is only
+    # paid when telemetry is requested
+    t_dev = _bench(lambda: device_join_search(sub, q, cand), reps=reps)
     n_emb = host.shape[0]
     rows.append((
         "enum/host_join", t_host * 1e6,
@@ -85,7 +122,7 @@ def bench_device_vs_host(rows: list, *, smoke: bool = False):
     rows.append((
         "enum/device_join", t_dev * 1e6,
         f"emb={n_emb};emb_per_s={n_emb / t_dev:.0f};"
-        f"rounds={report['device_rounds']};host_levels={report['host_levels']}",
+        f"rounds={report['device_rounds']};{_phase_fields(report)}",
     ))
     rows.append((
         "enum/speedup", 0.0,
@@ -93,36 +130,41 @@ def bench_device_vs_host(rows: list, *, smoke: bool = False):
     ))
     rows.append((
         "enum/parity_canary", 0.0,
-        "ok" if parity else "MISMATCH — device rows != host rows",
+        "ok" if parity and no_fallback
+        else "MISMATCH — device rows != host rows or fallback fired",
     ))
 
 
-def bench_overflow_path(rows: list, *, smoke: bool = False):
-    """Buffer overflow → chunked host fallback must stay correct + cheap."""
+def bench_overflow_regime(rows: list, *, smoke: bool = False):
+    """Tables past the old fixed cap: two-phase must beat the host join."""
     if smoke:
-        v, e, u, reps, device_rows = 200, 1100, 4, 1, 1 << 6
+        v, e, u, reps = 220, 1400, 5, 1
     else:
-        v, e, u, reps, device_rows = 600, 3500, 4, 3, 1 << 12
+        v, e, u, reps = 600, 3500, 5, 3
     sub, q, cand = _search_inputs(v, e, 2, u)
     host = bfs_join_search(sub, q, cand)
     report: dict = {}
-    dev = device_join_search(sub, q, cand, device_rows=device_rows,
-                             report=report)
-    fired = report["host_levels"] >= 1
+    dev = device_join_search(sub, q, cand, report=report)
     same = bool(np.array_equal(host, dev))  # bit-order contract holds too
-    t_dev = _bench(
-        lambda: device_join_search(sub, q, cand, device_rows=device_rows),
-        reps=reps,
-    )
+    on_device = report["host_levels"] == 0
+    overflowed_legacy = report["max_table_rows"] > _LEGACY_TABLE_CAP
+    if smoke:
+        assert same, "enum overflow smoke: device rows != host rows"
+        assert on_device, "enum overflow smoke: host fallback resurrected"
+    t_host = _bench(lambda: bfs_join_search(sub, q, cand), reps=reps)
+    t_dev = _bench(lambda: device_join_search(sub, q, cand), reps=reps)
+    status = "ok" if same and on_device else "MISMATCH or fallback fired"
+    if not overflowed_legacy:
+        status += ";below_legacy_cap"  # workload too small to prove regime
     rows.append((
-        "enum/overflow_path", t_dev * 1e6,
-        (f"host_levels={report['host_levels']};"
-         + ("ok" if fired and same else "MISMATCH or fallback never fired")),
+        "enum/overflow_regime", t_dev * 1e6,
+        (f"vs_host_fallback={t_host / t_dev:.2f}x;"
+         f"{_ceiling_fields(report)};{_phase_fields(report)};{status}"),
     ))
 
 
 def run_all(*, smoke: bool = False) -> list:
     rows: list = []
     bench_device_vs_host(rows, smoke=smoke)
-    bench_overflow_path(rows, smoke=smoke)
+    bench_overflow_regime(rows, smoke=smoke)
     return rows

@@ -8,8 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     batch    — batched multi-query + serving throughput (batch_engine)
     update   — dynamic-graph store: incremental index maintenance throughput
     planner  — cost-based matching orders vs greedy + plan-cache hit rate
-    enum     — device-resident join enumeration vs the chunked host join
-               (incl. bit-parity canary and the overflow-fallback regime)
+    enum     — two-phase device-resident join enumeration vs the chunked
+               host join (incl. bit-parity canary and the overflow regime
+               that used to require a host fallback)
     shard    — vertex-partitioned engine scaling across 1/2/4 devices
                (each device count in a subprocess with
                ``--xla_force_host_platform_device_count``)
@@ -17,9 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     roofline — derived terms from the dry-run artifacts (if present)
 
 ``--smoke`` shrinks the selected sections to tiny regression canaries for
-CI (``--smoke`` alone = batch + update + planner canaries on every push;
-the enum and shard canaries run as their own CI steps via
-``--section enum|shard --smoke``, each with a dedicated JSON artifact).
+CI (``--smoke`` alone = batch + update + planner + enum canaries on every
+push — the enum canary hard-asserts bit parity and host_levels == 0; the
+shard canary runs as its own CI step via ``--section shard --smoke``, and
+enum also keeps a dedicated step for its per-phase JSON artifact).
 ``--json PATH`` additionally writes the emitted rows as a JSON list —
 CI uploads these as ``BENCH_*.json`` workflow artifacts so the smoke
 trajectory is inspectable per commit.
@@ -65,7 +67,7 @@ def main() -> None:
             from benchmarks.planner_benches import run_all as planner_all
 
             _emit(planner_all(smoke=True))
-        if args.section == "enum":  # opt-in: its own CI step + artifact
+        if args.section in ("all", "enum"):
             from benchmarks.enum_benches import run_all as enum_all
 
             _emit(enum_all(smoke=True))

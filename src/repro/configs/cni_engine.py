@@ -8,7 +8,7 @@ class CniEngineConfig:
     filter_variant: str = "cni"      # cni | cni_log | nlf | label_degree
     khop: int = 1
     searcher: str = "join"           # join | dfs
-    enumerator: str = "host"         # host | device (join-table residency)
+    enumerator: str = "host"         # host | device (two-phase resident join)
     stream_chunk_edges: int = 65_536
     use_kernels: bool = True         # Pallas cni_encode/candidate_filter
     distributed_axis: str = "data"

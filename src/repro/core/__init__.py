@@ -44,6 +44,7 @@ from repro.core.search import (
     bfs_join_search,
     device_join_search,
     embeddings_equal,
+    empty_enum_report,
     greedy_matching_order,
     host_dfs_search,
 )

@@ -280,6 +280,11 @@ class BatchQueryEngine:
     engine per query.  With ``mesh=`` every peeling round additionally runs
     vertex-partitioned under ``shard_map`` (``core/distributed.py``) —
     still bit-identical, still one fused dispatch per round.
+
+    ``enumerator="device"`` routes each surviving query's enumeration
+    through the two-phase device join (DESIGN.md §12); per-query phase
+    telemetry (the ``empty_enum_report()`` schema) lands in each result's
+    ``stats.extras["enum"]``, filter-killed queries included.
     """
 
     def __init__(

@@ -23,6 +23,7 @@ from repro.core.khop import refine_candidates_khop
 from repro.core.search import (
     bfs_join_search,
     device_join_search,
+    empty_enum_report,
     host_dfs_search,
 )
 from repro.graphs.csr import Graph, induced_subgraph, to_host
@@ -69,9 +70,12 @@ def search_filtered(
 
     ``enumerator``: ``"host"`` (default — today's ``bfs_join_search``) or
     ``"device"`` (``device_join_search`` — the partial-embedding table
-    stays on device between rounds; DESIGN.md §11).  Only consulted for
+    stays on device between rounds, each level a two-phase
+    count → scan → emit join; DESIGN.md §11-§12).  Only consulted for
     ``searcher="join"``; embeddings are bit-identical either way, and the
-    device path records its round telemetry in ``stats.extras["enum"]``.
+    device path records its phase telemetry (``empty_enum_report()``
+    schema) in ``stats.extras["enum"]`` on *every* exit path — including
+    queries the filter already killed.
     """
     if enumerator not in ("host", "device"):
         raise ValueError(
@@ -86,6 +90,11 @@ def search_filtered(
                 "order": (), "source": "skipped", "est_cost": 0.0,
                 "fingerprint": None, "plan_seconds": 0.0,
             }
+        if enumerator == "device" and searcher != "dfs":
+            # same contract for enumeration telemetry: a device-enumerator
+            # query always records the full (zeroed) phase schema, so
+            # consumers never read stale or missing counters
+            stats.extras["enum"] = empty_enum_report()
         return np.zeros((0, query.vlabels.shape[0]), np.int64)
 
     sub, old_ids = induced_subgraph(data, alive)
@@ -154,7 +163,8 @@ class SubgraphQueryEngine:
     order-invariant); only enumeration cost changes.
 
     ``enumerator``: ``"host"`` (default) or ``"device"`` — device-resident
-    join enumeration (DESIGN.md §11), bit-identical embeddings.
+    two-phase (count → scan → emit) join enumeration (DESIGN.md §11-§12),
+    bit-identical embeddings; phase telemetry in ``stats.extras["enum"]``.
     """
 
     def __init__(

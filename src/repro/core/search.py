@@ -15,14 +15,18 @@ Three engines:
   tables that outgrow the buffer (bounded memory, no recursion), and the
   result rows round-trip through the host every level.
 
-* ``device_join_search`` — the device-resident variant (DESIGN.md §11):
-  the partial-embedding table lives in a pow2-padded device buffer across
-  rounds; each round is one fused dispatch (the ``kernels/embed_join``
-  Pallas kernel on TPU, its jnp oracle elsewhere) that evaluates the
-  validity grid *and* compacts survivors back into the buffer.  Only a
-  per-round scalar (the survivor count) syncs to the host; when the table
-  outgrows the buffer the affected level falls back to the chunked host
-  join and hops back onto the device once it fits again.
+* ``device_join_search`` — the device-resident variant (DESIGN.md §11-§12):
+  the partial-embedding table lives on device across rounds, and each
+  round is a two-phase GSI-style Prealloc-Combine join: a *count* pass
+  (the ``kernels/embed_join`` count kernel on TPU, its jnp oracle
+  elsewhere) sizes the output, an exclusive *scan* over the per-row counts
+  assigns slots (on-device cumsum on the kernel path; host-assisted on
+  XLA-CPU, where device scans are sequential), and an *emit* pass scatters
+  each survivor into its slot in an exactly-sized lane-aligned buffer.
+  Only a per-round scalar (the survivor total) syncs to the host, the
+  buffer grows to the true survivor count — overflow is impossible, so
+  there is no host-join fallback — and high-cardinality levels stay on
+  device.
 
 All three enumerate exactly the same embeddings (tested), under *any* valid
 matching order — enumeration is order-invariant because every step checks
@@ -36,6 +40,7 @@ explicit ``order`` (the cost-based planner, core/planner.py, does).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -367,13 +372,52 @@ def _restore_query_order(table: np.ndarray, order: Sequence[int]) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Device-resident join engine (DESIGN.md §11).
+# Device-resident join engine (DESIGN.md §11-§12).
 # ---------------------------------------------------------------------------
 
 
 # per-dispatch (R·C·J) validity-cell budget: bounds the grid (and its
 # (R, J, C) gather intermediate) exactly like chunk_rows bounds the host path
 _DEVICE_JOIN_CELLS = 1 << 24
+
+
+def _align_rows(n: int) -> int:
+    """Lane-aligned (multiple-of-128) row allocation for ``n`` live rows.
+
+    The two-phase join sizes every table buffer to the *true* survivor
+    count rounded up to the VPU lane width — at most 127 inert rows ride
+    along, versus the up-to-2x waste (and overflow fallback) of the old
+    pow2 capacity cap."""
+    return max(128, -(-int(n) // 128) * 128)
+
+
+def empty_enum_report() -> dict:
+    """The zeroed two-phase telemetry schema ``device_join_search`` fills.
+
+    Every exit path (empty seed set, single-vertex query, truncation)
+    leaves exactly these keys in ``report`` / ``stats.extras["enum"]``:
+
+    * ``device_rounds`` — expansion rounds executed (all on device);
+    * ``host_levels``   — always 0 since the chunked host fallback was
+      removed (kept so dashboards and the CI canary can assert on it);
+    * ``count_seconds`` / ``scan_seconds`` / ``emit_seconds`` — per-phase
+      wall-clock totals across rounds;
+    * ``max_table_rows`` — peak true survivor count over all levels;
+    * ``max_emit_rows``  — peak allocated emit-buffer rows (lane-aligned
+      exact sizing: always within 127 of ``max_table_rows``, floor 128);
+    * ``scan_path``     — ``"device"`` (kernel path: on-device cumsum) or
+      ``"host"`` (XLA-CPU: host-assisted scan), ``None`` if no round ran.
+    """
+    return {
+        "device_rounds": 0,
+        "host_levels": 0,
+        "count_seconds": 0.0,
+        "scan_seconds": 0.0,
+        "emit_seconds": 0.0,
+        "max_table_rows": 0,
+        "max_emit_rows": 0,
+        "scan_path": None,
+    }
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
@@ -432,33 +476,92 @@ def _device_join_gather(
     return jnp.where(slot_ok[:, None], new_table, 0)
 
 
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _device_join_count(
+    table: jnp.ndarray,      # (R, T) int32 — table slice
+    n_rows: jnp.ndarray,     # () int32 — live rows in this slice
+    cand: jnp.ndarray,       # (C,) int32
+    n_cand: jnp.ndarray,     # () int32
+    elab_matrix: jnp.ndarray,  # (N, N) int32
+    q_pos: jnp.ndarray,
+    q_lab: jnp.ndarray,
+    q_val: jnp.ndarray,
+    *,
+    use_kernel: bool,
+):
+    """(R,) int32 per-row survivor counts — the *count* pass, no writes.
+
+    On the kernel path the row-sum folds inside the Pallas grid loop
+    (``embed_join_count``) so the (R, C) grid never materializes; the
+    oracle reduces the same ref grid the emit pass re-evaluates."""
+    from repro.kernels.embed_join.ops import embed_join_count
+
+    r = table.shape[0]
+    c = cand.shape[0]
+    row_valid = jnp.arange(r) < n_rows
+    cand_valid = jnp.arange(c) < n_cand
+    elab_cols = elab_matrix[:, cand]
+    return embed_join_count(
+        table, row_valid, cand, cand_valid, elab_cols,
+        q_pos, q_lab, q_val, use_kernel=use_kernel,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _device_join_emit(
+    idx_map: jnp.ndarray,    # (out_cap,) int32 — slot → flat cell id
+    table: jnp.ndarray,      # (R, T) int32 — table slice
+    n_rows: jnp.ndarray,     # () int32 — live rows in this slice
+    cand: jnp.ndarray,       # (C,) int32
+    n_cand: jnp.ndarray,     # () int32
+    elab_matrix: jnp.ndarray,  # (N, N) int32
+    q_pos: jnp.ndarray,
+    q_lab: jnp.ndarray,
+    q_val: jnp.ndarray,
+    row_off: jnp.ndarray,    # (R,) int32 — this slice's exclusive-scan slots
+    row_base: jnp.ndarray,   # () int32 — slice's first row in the table
+    *,
+    use_kernel: bool,
+):
+    """One *emit* slice: scatter survivors into their exact output slots.
+
+    Each survivor (r, c) lands at ``row_off[r] + rank-within-row`` — the
+    flat row-major survivor order, i.e. exactly the host engine's
+    chunk-sequential ``np.nonzero`` order, which is what keeps
+    ``max_embeddings`` truncation bit-identical across engines."""
+    from repro.kernels.embed_join.ops import embed_join_emit
+
+    r = table.shape[0]
+    c = cand.shape[0]
+    row_valid = jnp.arange(r) < n_rows
+    cand_valid = jnp.arange(c) < n_cand
+    elab_cols = elab_matrix[:, cand]
+    return embed_join_emit(
+        idx_map, table, row_valid, cand, cand_valid, elab_cols,
+        q_pos, q_lab, q_val, row_off, row_base, use_kernel=use_kernel,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("out_cap",))
-def _device_join_compact(
-    table: jnp.ndarray,  # (R, T) int32
-    cand: jnp.ndarray,   # (C,) int32
-    valid: jnp.ndarray,  # (R, C) bool
+def _device_join_emit_gather(
+    table: jnp.ndarray,    # (R, T) int32 — resident old table
+    cand: jnp.ndarray,     # (C,) int32
+    idx_map: jnp.ndarray,  # (out_cap,) int32 — flat cell id per slot
+    n_keep: jnp.ndarray,   # () int32 — true survivor total
     *,
     out_cap: int,
 ):
-    """Fully on-device masked compaction (the TPU/kernel path).
+    """Decode the emitted cell-id map and build the exactly-sized table.
 
-    Returns ``(new_table (out_cap, T+1), count)``; ``count`` is the *true*
-    survivor total — when it exceeds ``out_cap`` the table holds only the
-    first ``out_cap`` survivors and the caller falls back to the chunked
-    host join for the level.  Flat row-major survivor order == the host
-    engine's chunk-sequential ``np.nonzero`` order, which is what makes
-    ``max_embeddings`` truncation bit-identical across engines."""
+    ``idx_map`` slots past ``n_keep`` hold the zero-init value (cell 0 —
+    a valid address, junk data) and are zeroed by the slot mask; they are
+    only the ≤ 127 lane-alignment rows."""
     c = cand.shape[0]
-    flat = valid.reshape(-1)
-    count = jnp.sum(flat.astype(jnp.int32))
-    idx = jnp.nonzero(flat, size=out_cap, fill_value=0)[0]
-    r_idx = idx // c
-    c_idx = idx - r_idx * c
-    new_table = jnp.concatenate(
-        [table[r_idx], cand[c_idx][:, None]], axis=1
+    r_idx = idx_map // c
+    c_idx = idx_map - r_idx * c
+    return _device_join_gather(
+        table, cand, r_idx, c_idx, n_keep, out_cap=out_cap
     )
-    slot_ok = jnp.arange(out_cap) < jnp.minimum(count, out_cap)
-    return jnp.where(slot_ok[:, None], new_table, 0), count
 
 
 def device_join_search(
@@ -473,178 +576,203 @@ def device_join_search(
     use_kernel: bool | None = None,
     report: dict | None = None,
 ) -> np.ndarray:
-    """Enumerate all embeddings with the device-resident join plan.
+    """Enumerate all embeddings with the two-phase device-resident join.
 
     Bit-identical to ``bfs_join_search`` (same embeddings, same row order,
     any valid ``order``), but the partial-embedding table stays on device
-    between rounds in a ``device_rows``-row pow2-padded buffer: each round
-    evaluates the full validity grid in (cell-budgeted) fused dispatches,
-    and the compacted next table is built by an on-device gather — the
-    table itself never crosses the host boundary.  Compaction is
-    backend-adaptive: with the Pallas kernel engaged (TPU) survivor indices
-    compact on device; otherwise only the 1-byte validity bitmask comes
-    back for a host ``np.nonzero`` (the same bytes the chunked host join
-    already moves — XLA CPU has no fast compaction primitive, see
-    DESIGN.md §11).  Levels whose survivor total outgrows the buffer run
-    through the chunked host join (bounded memory), hopping back onto the
-    device once the table fits again.
+    between rounds and every level runs as a GSI-style Prealloc-Combine
+    join (DESIGN.md §12):
 
-    ``use_kernel``: None = auto (Pallas kernel + device compaction on TPU,
-    oracle + host-assisted compaction elsewhere); True forces the kernel
-    path (interpret mode off-TPU — parity testing); False forces the
-    oracle.  ``report``: optional dict filled with round/fallback
-    telemetry.
+    1. **count** — per-row survivor counts from the fused validity grid
+       (cell-budgeted dispatches; the Pallas count kernel folds the
+       row-sum in-core on TPU), no table writes;
+    2. **scan**  — an exclusive prefix sum over the counts turns them into
+       output slots.  Backend-adaptive: on the kernel path the cumsum runs
+       on device and only the *total* syncs back as one scalar; on XLA-CPU
+       — where device scans lower to sequential code — the per-slice
+       validity bitmask comes back and numpy performs the scan (the
+       host-assisted compaction machinery, DESIGN.md §11);
+    3. **emit**  — survivors scatter into their prefix-summed slots in an
+       exactly-sized, lane-aligned (multiple-of-128) output buffer.
+
+    Because the emit buffer is sized to the *true* survivor count,
+    overflow is impossible and the per-level chunked-host-join fallback of
+    the original engine is gone: every level of every workload runs on
+    device, memory tracks the real table size (≤ 127 alignment rows of
+    slack), and high-cardinality levels — precisely where the old engine
+    abandoned the device — stay fused.
+
+    ``device_rows`` / ``chunk_rows`` are accepted for API compatibility
+    with the capacity-capped engine and ignored — there is no buffer cap
+    left to size.  ``use_kernel``: None = auto (Pallas kernels + on-device
+    scan on TPU, oracle + host-assisted scan elsewhere); True forces the
+    kernel path (interpret mode off-TPU — parity testing); False forces
+    the oracle.  ``report``: optional dict filled with the
+    ``empty_enum_report()`` telemetry schema (phase timings, exact-sizing
+    ceilings); phase timings force a device sync per phase, so pass
+    ``report=None`` on latency-critical calls.
     """
+    del device_rows, chunk_rows  # legacy capacity knobs: nothing to cap
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
     n_d = data.vlabels.shape[0]
     q_adj = _host_adjacency(query)
     elab_np = _dense_edge_labels(data, n_d)
     elab_dev = None
-    elab_host_dev = None  # _expand_step's device copy (host-fallback path)
 
     if order is None:
         order = greedy_matching_order(cand.sum(axis=0), q_adj)
     else:
         order = _as_order(order, n_q)
     pos_of = {u: i for i, u in enumerate(order)}
-    cap = int(2 ** np.ceil(np.log2(max(int(device_rows), 2))))
 
-    stats = {"device_rounds": 0, "host_levels": 0, "table_cap": cap}
+    kernel_on = (use_kernel if use_kernel is not None
+                 else jax.default_backend() == "tpu")
+    stats = empty_enum_report()
+    stats["scan_path"] = "device" if kernel_on else "host"
     if report is not None:
         report.update(stats)
 
     seed_ids = np.nonzero(cand[:, order[0]])[0].astype(np.int32)
-    table_host: np.ndarray | None = None
-    table_dev = None
     n_rows = int(seed_ids.size)
-    if n_rows > cap:
-        table_host = seed_ids.reshape(-1, 1)
-    else:
-        r0 = int(2 ** np.ceil(np.log2(max(n_rows, 1))))
-        table_dev = jnp.asarray(
-            np.pad(seed_ids, (0, r0 - n_rows)).reshape(r0, 1)
-        )
+    r0 = _align_rows(n_rows)
+    table_dev = jnp.asarray(
+        np.pad(seed_ids, (0, r0 - n_rows)).reshape(r0, 1)
+    )
+    stats["max_table_rows"] = n_rows
+    stats["max_emit_rows"] = r0
 
     for t in range(1, n_q):
         u = order[t]
         cand_ids = np.nonzero(cand[:, u])[0].astype(np.int32)
-        live = table_host.shape[0] if table_host is not None else n_rows
-        if live == 0 or cand_ids.size == 0:
+        if n_rows == 0 or cand_ids.size == 0:
             if report is not None:
                 report.update(stats)
             return np.zeros((0, n_q), dtype=np.int64)
         q_pos, q_lab, q_val = _level_constraints(q_adj, pos_of, u, t)
 
-        if table_host is None:
-            # lane-aligned candidate pad (multiple of 128): ≤ 127 wasted
-            # columns per round instead of pow2's up-to-2x, at a bounded
-            # cost in extra trace shapes
-            c_pad = max(128, -(-cand_ids.size // 128) * 128)
-            if elab_dev is None:
-                elab_dev = jnp.asarray(elab_np)
-            # slice the buffer to the live-row pow2 so a round's work tracks
-            # the actual table size, not the full capacity (pow2 alignment
-            # keeps every further row slice exact)
-            r_active = int(2 ** np.ceil(np.log2(max(n_rows, 1))))
-            active = (table_dev[:r_active]
-                      if r_active < table_dev.shape[0] else table_dev)
-            j = int(q_pos.size)
-            cand_dev = jnp.asarray(
-                np.pad(cand_ids, (0, c_pad - cand_ids.size))
-            )
-            n_cand_dev = jnp.asarray(cand_ids.size, jnp.int32)
-            qp, ql, qv = map(jnp.asarray, (q_pos, q_lab, q_val))
-            kernel_on = (use_kernel if use_kernel is not None
-                         else jax.default_backend() == "tpu")
-            stats["device_rounds"] += 1
-            count = None
-            if kernel_on and r_active * c_pad * j <= _DEVICE_JOIN_CELLS:
-                # fully on-device round: fused kernel grid + compaction;
-                # only the survivor count syncs back
-                valid = _device_join_valid(
-                    active, jnp.asarray(n_rows, jnp.int32), cand_dev,
-                    n_cand_dev, elab_dev, qp, ql, qv, use_kernel=True,
-                )
-                out_cap = min(cap, r_active * c_pad)
-                new_table, count_dev = _device_join_compact(
-                    active, cand_dev, valid, out_cap=out_cap
-                )
-                count = int(count_dev)
-                if count <= cap:
-                    table_dev, n_rows = new_table, count
-                    continue
-            else:
-                # host-assisted compaction: the validity grid is evaluated
-                # in cell-budgeted fused dispatches, the 1-byte bitmask
-                # comes back for numpy's nonzero, and the next table is
-                # built by an on-device gather — the table stays resident
-                rows_per = _DEVICE_JOIN_CELLS // max(1, c_pad * j)
-                rows_per = max(256, 1 << max(0, rows_per.bit_length() - 1))
-                # cap the slice so the final partial slice wastes at most
-                # 4095 padded rows of validity compute
-                rows_per = min(rows_per, 4096, r_active)
-                r_list, c_list = [], []
-                for lo in range(0, n_rows, rows_per):
-                    sl = (active[lo : lo + rows_per]
-                          if rows_per < r_active else active)
-                    n_live = min(n_rows - lo, rows_per)
-                    valid = _device_join_valid(
-                        sl, jnp.asarray(n_live, jnp.int32), cand_dev,
-                        n_cand_dev, elab_dev, qp, ql, qv,
-                        use_kernel=kernel_on,
-                    )
-                    ri, ci = np.nonzero(np.asarray(valid))
-                    if ri.size:
-                        r_list.append(ri.astype(np.int32) + np.int32(lo))
-                        c_list.append(ci.astype(np.int32))
-                count = sum(r.size for r in r_list)
-                if count == 0:
-                    table_dev = jnp.zeros((1, t + 1), jnp.int32)
-                    n_rows = 0
-                    continue
-                if count <= cap:
-                    out_cap = int(2 ** np.ceil(np.log2(count)))
-                    r_idx = np.zeros(out_cap, np.int32)
-                    c_idx = np.zeros(out_cap, np.int32)
-                    r_idx[:count] = np.concatenate(r_list)
-                    c_idx[:count] = np.concatenate(c_list)
-                    table_dev = _device_join_gather(
-                        active, cand_dev, jnp.asarray(r_idx),
-                        jnp.asarray(c_idx),
-                        jnp.asarray(count, jnp.int32), out_cap=out_cap,
-                    )
-                    n_rows = count
-                    continue
-            # buffer overflow (count > cap): replay this level through the
-            # chunked host join — nothing consumed the overflowed output
-            table_host = np.asarray(active[:n_rows])
-            table_dev = None
-
-        stats["host_levels"] += 1
-        table_host, elab_host_dev = _host_join_level(
-            table_host, cand_ids, elab_np, elab_host_dev,
-            q_pos, q_lab, q_val, chunk_rows, t,
+        # lane-aligned candidate pad (multiple of 128): ≤ 127 wasted
+        # columns per round instead of pow2's up-to-2x, at a bounded
+        # cost in extra trace shapes
+        c_pad = max(128, -(-cand_ids.size // 128) * 128)
+        if elab_dev is None:
+            elab_dev = jnp.asarray(elab_np)
+        j = int(q_pos.size)
+        cand_dev = jnp.asarray(
+            np.pad(cand_ids, (0, c_pad - cand_ids.size))
         )
-        if table_host.shape[0] <= cap and t < n_q - 1:
-            # shrank back under the buffer: resume device residency
-            n_rows = table_host.shape[0]
-            r0 = int(2 ** np.ceil(np.log2(max(n_rows, 1))))
-            table_dev = jnp.asarray(np.concatenate([
-                table_host.astype(np.int32),
-                np.zeros((r0 - n_rows, t + 1), np.int32),
-            ]))
-            table_host = None
+        n_cand_dev = jnp.asarray(cand_ids.size, jnp.int32)
+        qp, ql, qv = map(jnp.asarray, (q_pos, q_lab, q_val))
+        stats["device_rounds"] += 1
 
-    if table_host is None:
-        n_keep = n_rows
-        if max_embeddings is not None:
-            n_keep = min(n_keep, max_embeddings)
-        table = np.asarray(table_dev[:n_keep])
-    else:
-        table = table_host
-        if max_embeddings is not None and table.shape[0] > max_embeddings:
-            table = table[:max_embeddings]
+        # cell-budgeted row slices bound each dispatch's (R, C, J) grid;
+        # the table allocation is a multiple of 128, so every clipped
+        # slice shape stays lane-aligned
+        rows_per = _DEVICE_JOIN_CELLS // max(1, c_pad * j)
+        rows_per = max(256, 1 << max(0, rows_per.bit_length() - 1))
+        rows_per = min(rows_per, 4096)
+        active = table_dev
+
+        if kernel_on:
+            # -- count: fused kernel dispatches, only (R,) ints produced
+            t0 = time.perf_counter()
+            parts = []
+            for lo in range(0, n_rows, rows_per):
+                sl = active[lo : lo + rows_per]
+                n_live = jnp.asarray(min(n_rows - lo, rows_per), jnp.int32)
+                parts.append(_device_join_count(
+                    sl, n_live, cand_dev, n_cand_dev, elab_dev,
+                    qp, ql, qv, use_kernel=True,
+                ))
+            counts = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            if report is not None:
+                counts.block_until_ready()
+            stats["count_seconds"] += time.perf_counter() - t0
+
+            # -- scan: on-device exclusive prefix sum; one scalar syncs
+            t0 = time.perf_counter()
+            inclusive = jnp.cumsum(counts)
+            row_off = inclusive - counts
+            total = int(inclusive[-1])
+            stats["scan_seconds"] += time.perf_counter() - t0
+
+            if total == 0:
+                table_dev = jnp.zeros((1, t + 1), jnp.int32)
+                n_rows = 0
+                continue
+
+            # -- emit: scatter survivors into the exactly-sized buffer
+            t0 = time.perf_counter()
+            out_cap = _align_rows(total)
+            idx_map = jnp.zeros(out_cap, jnp.int32)
+            for lo in range(0, n_rows, rows_per):
+                sl = active[lo : lo + rows_per]
+                n_live = jnp.asarray(min(n_rows - lo, rows_per), jnp.int32)
+                idx_map = _device_join_emit(
+                    idx_map, sl, n_live, cand_dev, n_cand_dev, elab_dev,
+                    qp, ql, qv, row_off[lo : lo + sl.shape[0]],
+                    jnp.asarray(lo, jnp.int32), use_kernel=True,
+                )
+            table_dev = _device_join_emit_gather(
+                active, cand_dev, idx_map,
+                jnp.asarray(total, jnp.int32), out_cap=out_cap,
+            )
+            if report is not None:
+                table_dev.block_until_ready()
+            stats["emit_seconds"] += time.perf_counter() - t0
+        else:
+            # host-assisted scan (XLA-CPU): the validity grid is evaluated
+            # in cell-budgeted fused dispatches and only the 1-byte
+            # bitmask comes back; numpy's nonzero *is* the count + scan
+            # (survivor indices arrive already in flat row-major order)
+            t0 = time.perf_counter()
+            r_list, c_list = [], []
+            for lo in range(0, n_rows, rows_per):
+                sl = active[lo : lo + rows_per]
+                n_live = min(n_rows - lo, rows_per)
+                valid = _device_join_valid(
+                    sl, jnp.asarray(n_live, jnp.int32), cand_dev,
+                    n_cand_dev, elab_dev, qp, ql, qv, use_kernel=False,
+                )
+                ri, ci = np.nonzero(np.asarray(valid))
+                if ri.size:
+                    r_list.append(ri.astype(np.int32) + np.int32(lo))
+                    c_list.append(ci.astype(np.int32))
+            stats["count_seconds"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            total = sum(r.size for r in r_list)
+            if total == 0:
+                stats["scan_seconds"] += time.perf_counter() - t0
+                table_dev = jnp.zeros((1, t + 1), jnp.int32)
+                n_rows = 0
+                continue
+            out_cap = _align_rows(total)
+            r_idx = np.zeros(out_cap, np.int32)
+            c_idx = np.zeros(out_cap, np.int32)
+            r_idx[:total] = np.concatenate(r_list)
+            c_idx[:total] = np.concatenate(c_list)
+            stats["scan_seconds"] += time.perf_counter() - t0
+
+            # emit: index upload + one on-device gather into the
+            # exactly-sized buffer — the table itself never crosses
+            t0 = time.perf_counter()
+            table_dev = _device_join_gather(
+                active, cand_dev, jnp.asarray(r_idx), jnp.asarray(c_idx),
+                jnp.asarray(total, jnp.int32), out_cap=out_cap,
+            )
+            if report is not None:
+                table_dev.block_until_ready()
+            stats["emit_seconds"] += time.perf_counter() - t0
+
+        n_rows = total
+        stats["max_table_rows"] = max(stats["max_table_rows"], total)
+        stats["max_emit_rows"] = max(stats["max_emit_rows"], out_cap)
+
+    n_keep = n_rows
+    if max_embeddings is not None:
+        n_keep = min(n_keep, max_embeddings)
+    table = np.asarray(table_dev[:n_keep])
     if report is not None:
         report.update(stats)
     return _restore_query_order(table, order)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused BFS-join expansion round.
+"""Pallas TPU kernels: fused BFS-join expansion round (grid + count).
 
 One pass produces the (R × C) validity grid a join level consumes: for a
 tile of partial-embedding rows and a tile of candidate vertices, the fused
@@ -12,11 +12,21 @@ runs on the MXU instead of as scalar loads: each matched query neighbor j
 contributes ``onehot(mapped_j) @ elab_cols`` — a (BR × N) · (N × BC)
 contraction per neighbor, the GSI-style "prefix-table join as matmul".
 
+Two entry points share the validity math (``_validity_tile``):
+
+* ``embed_join_pallas`` — emits the (R, C) int8 grid (the emit pass and the
+  parity tests consume it);
+* ``embed_join_count_pallas`` — the two-phase join's *count* pass: the grid
+  is reduced to per-row survivor counts inside the kernel (accumulated
+  across candidate tiles), so only (R, 1) int32 leaves the core — no
+  (R, C) materialization, no table writes.
+
 Edge labels ride through the matmul as f32 (exact for labels < 2²⁴; label
 alphabets are tiny).  The neighbor count J and table width T are static, so
 both loops fully unroll into straight-line VPU/MXU code.
 
-Output is int8 (bool is awkward across Mosaic versions); the wrapper casts.
+Grid output is int8 (bool is awkward across Mosaic versions); the wrapper
+casts.
 """
 
 from __future__ import annotations
@@ -28,7 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _embed_join_kernel(
+def _validity_tile(
     table_ref,       # (BR, T) int32
     row_valid_ref,   # (BR,) int32 (0/1)
     cand_ref,        # (BC,) int32
@@ -37,11 +47,11 @@ def _embed_join_kernel(
     q_pos_ref,       # (J,) int32
     q_lab_ref,       # (J,) f32
     q_valid_ref,     # (J,) int32 (0/1)
-    out_ref,         # (BR, BC) int8
     *,
     n_prev: int,
     n_nbr: int,
 ):
+    """The fused (BR, BC) bool validity tile both kernels reduce/emit."""
     tab = table_ref[...]                       # (BR, T)
     cand = cand_ref[...]                       # (BC,)
     elabs = elab_ref[...]                      # (N, BC)
@@ -68,12 +78,52 @@ def _embed_join_kernel(
     for t in range(n_prev):
         inj = inj & (tab[:, t][:, None] != cand[None, :])
 
-    valid = (
+    return (
         adj & inj
         & (row_valid_ref[...] > 0)[:, None]
         & (cand_valid_ref[...] > 0)[None, :]
     )
+
+
+def _embed_join_kernel(
+    table_ref, row_valid_ref, cand_ref, cand_valid_ref, elab_ref,
+    q_pos_ref, q_lab_ref, q_valid_ref,
+    out_ref,         # (BR, BC) int8
+    *,
+    n_prev: int,
+    n_nbr: int,
+):
+    valid = _validity_tile(
+        table_ref, row_valid_ref, cand_ref, cand_valid_ref, elab_ref,
+        q_pos_ref, q_lab_ref, q_valid_ref, n_prev=n_prev, n_nbr=n_nbr,
+    )
     out_ref[...] = valid.astype(jnp.int8)
+
+
+def _embed_join_count_kernel(
+    table_ref, row_valid_ref, cand_ref, cand_valid_ref, elab_ref,
+    q_pos_ref, q_lab_ref, q_valid_ref,
+    out_ref,         # (BR, 1) int32 — per-row survivor counts
+    *,
+    n_prev: int,
+    n_nbr: int,
+):
+    valid = _validity_tile(
+        table_ref, row_valid_ref, cand_ref, cand_valid_ref, elab_ref,
+        q_pos_ref, q_lab_ref, q_valid_ref, n_prev=n_prev, n_nbr=n_nbr,
+    )
+    # the candidate axis is the innermost grid dim: the same (BR, 1) output
+    # block is revisited across candidate tiles, so init at k == 0 and
+    # accumulate — the classic Pallas reduction pattern
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(
+        valid.astype(jnp.int32), axis=1, keepdims=True
+    )
 
 
 def embed_join_pallas(
@@ -116,6 +166,54 @@ def embed_join_pallas(
         ],
         out_specs=pl.BlockSpec((block_r, block_c), lambda i, k: (i, k)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.int8),
+        interpret=interpret,
+    )(table, row_valid, cand_list, cand_valid, elab_cols,
+      q_pos, q_lab, q_valid)
+
+
+def embed_join_count_pallas(
+    table,
+    row_valid,
+    cand_list,
+    cand_valid,
+    elab_cols,
+    q_pos,
+    q_lab,
+    q_valid,
+    *,
+    block_r: int = 256,
+    block_c: int = 128,
+    interpret: bool = False,
+):
+    """(R, 1) int32 per-row survivor counts (the two-phase count pass).
+
+    Same tiling contract as ``embed_join_pallas``; the (R, C) grid never
+    leaves the core — each candidate tile folds its row-sums into the
+    revisited (block_r, 1) output block."""
+    r, n_prev = table.shape
+    c = cand_list.shape[0]
+    n = elab_cols.shape[0]
+    j = q_pos.shape[0]
+    assert r % block_r == 0 and c % block_c == 0
+    grid = (r // block_r, c // block_c)
+    kernel = functools.partial(
+        _embed_join_count_kernel, n_prev=n_prev, n_nbr=j
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, n_prev), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_r,), lambda i, k: (i,)),
+            pl.BlockSpec((block_c,), lambda i, k: (k,)),
+            pl.BlockSpec((block_c,), lambda i, k: (k,)),
+            pl.BlockSpec((n, block_c), lambda i, k: (0, k)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+            pl.BlockSpec((j,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
         interpret=interpret,
     )(table, row_valid, cand_list, cand_valid, elab_cols,
       q_pos, q_lab, q_valid)

@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the fused embed-join expansion round.
+"""Pure-jnp oracles for the fused embed-join expansion round.
+
+Three pieces: the (R, C) validity grid (``embed_join_ref``), its row-sum
+(``embed_join_count_ref`` — the two-phase *count* pass), and the emit-slot
+addressing (``emit_slots_ref`` — shared by the kernel and oracle emit
+paths, since the scatter is identical either way).
 
 One BFS-join expansion evaluates, for every (partial embedding row r,
 candidate data vertex c) pair, whether appending c to row r is still a
@@ -44,3 +49,31 @@ def embed_join_ref(
         table[:, :, None] != cand_list[None, None, :], axis=1
     )
     return adj_ok & inj_ok & row_valid[:, None] & cand_valid[None, :]
+
+
+def embed_join_count_ref(
+    table, row_valid, cand_list, cand_valid, elab_cols,
+    q_nbr_pos, q_nbr_lab, q_nbr_valid,
+) -> jnp.ndarray:
+    """(R,) int32 per-row survivor counts — the two-phase *count* pass.
+
+    Definitionally the row-sum of the validity grid; the Pallas twin
+    (``embed_join_count_pallas``) folds the sum inside the kernel so the
+    grid never materializes."""
+    valid = embed_join_ref(
+        table, row_valid, cand_list, cand_valid, elab_cols,
+        q_nbr_pos, q_nbr_lab, q_nbr_valid,
+    )
+    return jnp.sum(valid.astype(jnp.int32), axis=1)
+
+
+def emit_slots_ref(valid: jnp.ndarray, row_off: jnp.ndarray) -> jnp.ndarray:
+    """(R, C) int32 output slot per cell — the two-phase *emit* addressing.
+
+    Survivor (r, c) lands at ``row_off[r] + |{c' < c : valid[r, c']}|``;
+    with ``row_off`` an exclusive scan of per-row counts this is exactly
+    the flat row-major survivor rank, i.e. the host join's
+    chunk-sequential ``np.nonzero`` order.  Invalid cells get slot −1."""
+    vi = valid.astype(jnp.int32)
+    rank = jnp.cumsum(vi, axis=1) - vi          # exclusive, within row
+    return jnp.where(valid, row_off[:, None] + rank, -1)

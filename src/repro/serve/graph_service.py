@@ -74,10 +74,13 @@ class GraphServiceConfig:
     filter_variant: str = _ENGINE_CONFIG.filter_variant
     khop: int = _ENGINE_CONFIG.khop
     searcher: str = _ENGINE_CONFIG.searcher
-    # "host" | "device": device-resident join enumeration (DESIGN.md §11) —
-    # bit-identical embeddings, the embedding table stays on device between
-    # rounds.  Snapshot-aware: each finalize enumerates against the
-    # request's pinned epoch either way.
+    # "host" | "device": device-resident two-phase (count → scan → emit)
+    # join enumeration (DESIGN.md §11-§12) — bit-identical embeddings, the
+    # embedding table stays on device between rounds and every level's emit
+    # buffer is sized to the true survivor count (no host-fallback path).
+    # Snapshot-aware: each finalize enumerates against the request's pinned
+    # epoch either way, and records the ``empty_enum_report()`` phase
+    # telemetry in that result's ``stats.extras["enum"]``.
     enumerator: str = _ENGINE_CONFIG.enumerator
     search_vertex_cap: int = 8192
     max_rounds_per_query: int = 1_000  # safety valve: finalize early (sound)

@@ -27,6 +27,7 @@ from repro.core import (
     SubgraphQueryEngine,
     bfs_join_search,
     device_join_search,
+    empty_enum_report,
     host_dfs_search,
 )
 from repro.core.cni import SAT64
@@ -230,9 +231,10 @@ def test_max_embeddings_truncation_parity():
         a = bfs_join_search(g, q, cand, max_embeddings=cap)
         b = device_join_search(g, q, cand, max_embeddings=cap)
         np.testing.assert_array_equal(a, b)  # incl. row order
-        # the overflow → chunked-host-fallback → device re-entry regime
-        # must preserve the same bit-order contract (device_rows=8 forces
-        # the fallback on every non-trivial level)
+        # the legacy capacity knobs (device_rows / chunk_rows) are accepted
+        # for API compatibility and ignored — two-phase sizing has no
+        # buffer cap left to overflow, so a value that used to force the
+        # chunked host fallback on every level must change nothing
         c = device_join_search(g, q, cand, max_embeddings=cap,
                                device_rows=8)
         np.testing.assert_array_equal(a, c)
@@ -292,6 +294,162 @@ def test_service_device_enumerator_store_aware():
 
     for h, d in zip(run("host"), run("device")):
         np.testing.assert_array_equal(h, d)
+
+
+# ---------------------------------------------------------------------------
+# two-phase enumeration: telemetry contract + overflow-boundary sharp edges
+# ---------------------------------------------------------------------------
+
+
+def _ceil128(n: int) -> int:
+    """The enumerator's lane-aligned emit sizing: max(128, ceil to 128)."""
+    return max(128, -(-int(n) // 128) * 128)
+
+
+def test_enum_telemetry_normal_query():
+    """A full multi-round query fills every telemetry field: one round per
+    join level, no host levels, phase timings accumulated, and the emit
+    ceiling exactly lane-aligned above the true peak table size."""
+    g, q = seeded_graph_and_query(
+        2, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    cand = label_candidates(g, q)
+    report: dict = {}
+    emb = device_join_search(g, q, cand, report=report)
+    assert emb.shape[0] >= 3  # non-degenerate: every level actually ran
+    assert set(report) == set(empty_enum_report())
+    assert report["device_rounds"] == q.n_vertices - 1
+    assert report["host_levels"] == 0
+    assert report["scan_path"] in ("device", "host")
+    assert report["count_seconds"] > 0.0
+    assert report["scan_seconds"] >= 0.0
+    assert report["emit_seconds"] > 0.0
+    assert report["max_table_rows"] >= emb.shape[0]
+    assert report["max_emit_rows"] == _ceil128(report["max_table_rows"])
+    # engine level: the same schema lands in stats.extras["enum"]
+    _, stats = SubgraphQueryEngine(g, enumerator="device").query(q)
+    enum = stats.extras["enum"]
+    assert set(enum) == set(empty_enum_report())
+    assert enum["device_rounds"] >= 1 and enum["host_levels"] == 0
+
+
+def test_enum_telemetry_every_exit_path():
+    """Every early-exit leaves *final*, schema-complete telemetry — never a
+    stale or missing report: filter-killed queries, empty seed tables,
+    single-vertex queries, and truncated queries."""
+    g = random_labeled_graph(_V, _E, _L, n_edge_labels=_EL, seed=7)
+
+    # all-pruned at the filter: search never runs, report still complete
+    q_dead = build_graph(3, [97, 98, 99], [(0, 1), (1, 2)])
+    _, stats = SubgraphQueryEngine(g, enumerator="device").query(q_dead)
+    assert stats.extras["enum"] == empty_enum_report()
+
+    # empty seed / dead level inside the enumerator itself
+    cand = label_candidates(g, q_dead)
+    report: dict = {}
+    emb = device_join_search(g, q_dead, cand, report=report)
+    assert emb.shape == (0, 3)
+    assert set(report) == set(empty_enum_report())
+    assert report["host_levels"] == 0
+
+    # single-vertex query: the join loop never runs
+    lab = int(np.asarray(g.vlabels)[0])
+    q1 = build_graph(1, [lab], np.zeros((0, 2), np.int64))
+    report = {}
+    emb = device_join_search(g, q1, label_candidates(g, q1), report=report)
+    assert emb.shape[0] > 0
+    assert set(report) == set(empty_enum_report())
+    assert report["device_rounds"] == 0
+    assert report["max_table_rows"] == emb.shape[0]
+    assert report["max_emit_rows"] == _ceil128(emb.shape[0])
+    assert report["count_seconds"] == report["emit_seconds"] == 0.0
+
+    # truncation: the cap changes the returned rows, not the telemetry
+    g2, q2 = seeded_graph_and_query(
+        2, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    cand2 = label_candidates(g2, q2)
+    full: dict = {}
+    device_join_search(g2, q2, cand2, report=full)
+    capped: dict = {}
+    emb = device_join_search(g2, q2, cand2, max_embeddings=1, report=capped)
+    assert emb.shape[0] == 1
+    assert capped["device_rounds"] == full["device_rounds"]
+    assert capped["max_table_rows"] == full["max_table_rows"]
+    assert capped["max_emit_rows"] == full["max_emit_rows"]
+
+
+def _star_graph(k: int, edge_label: int = 0):
+    """Center (label 0) with k leaves (label 1): a single join level whose
+    survivor count is exactly k — pins the emit buffer boundary."""
+    vlab = np.ones(k + 1, np.int64)
+    vlab[0] = 0
+    return build_graph(k + 1, vlab, [(0, i) for i in range(1, k + 1)],
+                       elabels=[edge_label] * k)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("k", [127, 128, 129])
+def test_overflow_boundary_exact_fit(k, use_kernel):
+    """Survivor counts straddling the lane-aligned emit capacity (128):
+    count == cap - 1, == cap (exact fit, zero slack), == cap + 1.  The old
+    engine either overflowed or fell back at these edges; two-phase must
+    size the buffer exactly and stay bit-identical on both routes."""
+    g = _star_graph(k)
+    q = build_graph(2, [0, 1], [(0, 1)])
+    cand = label_candidates(g, q)
+    host = bfs_join_search(g, q, cand)
+    assert host.shape[0] == k
+    report: dict = {}
+    dev = device_join_search(g, q, cand, use_kernel=use_kernel,
+                             report=report)
+    np.testing.assert_array_equal(host, dev)
+    assert report["host_levels"] == 0
+    assert report["max_table_rows"] == k
+    assert report["max_emit_rows"] == _ceil128(k)  # 128, 128, 256
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_overflow_boundary_zero_count(use_kernel):
+    """count == 0 on a join level (edge label exists nowhere): the scan
+    short-circuits before any emit allocation and the result is empty on
+    both routes, with final telemetry."""
+    g = _star_graph(8, edge_label=0)
+    q = build_graph(2, [0, 1], [(0, 1)], elabels=[1])
+    cand = label_candidates(g, q)
+    report: dict = {}
+    dev = device_join_search(g, q, cand, use_kernel=use_kernel,
+                             report=report)
+    assert dev.shape == (0, 2)
+    np.testing.assert_array_equal(bfs_join_search(g, q, cand), dev)
+    assert set(report) == set(empty_enum_report())
+    assert report["device_rounds"] == 1
+    assert report["host_levels"] == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(graph_query_seeds(), query_sizes(3, 4))
+def test_truncation_bit_order_parity_property(seed, n_qv):
+    """Property form: wherever ``max_embeddings`` lands — including mid
+    emit level — all three engines return the *same table bit-for-bit*
+    (flat row-major survivor order is the shared contract)."""
+    g, q = seeded_graph_and_query(
+        seed, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=n_qv,
+    )
+    cand = label_candidates(g, q)
+    full = bfs_join_search(g, q, cand)
+    total = full.shape[0]
+    for cap in sorted({1, max(1, total // 2), max(1, total - 1),
+                       total + 1}):
+        a = host_dfs_search(g, q, cand, max_embeddings=cap)
+        b = bfs_join_search(g, q, cand, max_embeddings=cap)
+        c = device_join_search(g, q, cand, max_embeddings=cap)
+        assert a.shape[0] == min(cap, total)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(b, c)
 
 
 def test_single_vertex_query():

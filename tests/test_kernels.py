@@ -9,8 +9,12 @@ from repro.kernels.candidate_filter.ops import candidate_filter
 from repro.kernels.candidate_filter.ref import candidate_filter_ref
 from repro.kernels.cni_encode.ops import cni_encode
 from repro.kernels.cni_encode.ref import cni_encode_ref
-from repro.kernels.embed_join.ops import embed_join
-from repro.kernels.embed_join.ref import embed_join_ref
+from repro.kernels.embed_join.ops import (
+    embed_join,
+    embed_join_count,
+    embed_join_emit,
+)
+from repro.kernels.embed_join.ref import embed_join_count_ref, embed_join_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 from repro.kernels.rwkv6_wkv.ops import wkv6
@@ -70,6 +74,51 @@ class TestEmbedJoinKernel:
         mk = embed_join(*jargs, block_r=br, block_c=bc, use_kernel=True)
         mr = embed_join_ref(*jargs)
         np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+
+    @pytest.mark.parametrize("r,t,c,n,j,br,bc", [
+        (64, 3, 32, 50, 2, 32, 16),
+        (100, 1, 33, 40, 1, 64, 32),   # non-multiples — wrapper pads
+        (16, 5, 128, 130, 4, 256, 64),  # blocks larger than R; N > 128
+    ])
+    def test_count_matches_ref(self, r, t, c, n, j, br, bc):
+        """Count pass: the in-core row-sum kernel == oracle == grid sum."""
+        args = self._random_inputs(r, t, c, n, j, seed=r + c)
+        jargs = tuple(map(jnp.asarray, args))
+        ck = embed_join_count(*jargs, block_r=br, block_c=bc,
+                              use_kernel=True)
+        cr = embed_join_count_ref(*jargs)
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        grid = np.asarray(embed_join_ref(*jargs))
+        np.testing.assert_array_equal(
+            np.asarray(cr), grid.sum(axis=1).astype(np.int32)
+        )
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_emit_flat_row_major_order(self, use_kernel):
+        """Emit pass: slot k of the idx_map holds the k-th survivor in
+        flat row-major grid order (the bit-order contract the enumerator's
+        truncation parity rests on); slack slots stay untouched and
+        row_base shifts only the row component of the cell id."""
+        r, t, c, n, j = 64, 3, 32, 50, 2
+        args = self._random_inputs(r, t, c, n, j, seed=9)
+        jargs = tuple(map(jnp.asarray, args))
+        grid = np.asarray(embed_join_ref(*jargs))
+        counts = grid.sum(axis=1).astype(np.int32)
+        row_off = np.cumsum(counts, dtype=np.int32) - counts
+        total = int(counts.sum())
+        assert total > 0
+        out_cap = total + 5  # deliberate slack: must keep its fill value
+        fill = np.full(out_cap, -7, np.int32)
+        ri, ci = np.nonzero(grid)  # numpy nonzero IS flat row-major order
+        for row_base in (0, 100):
+            got = np.asarray(embed_join_emit(
+                jnp.asarray(fill), *jargs,
+                jnp.asarray(row_off), jnp.asarray(row_base, jnp.int32),
+                block_r=32, block_c=16, use_kernel=use_kernel,
+            ))
+            np.testing.assert_array_equal(got[:total],
+                                          (ri + row_base) * c + ci)
+            np.testing.assert_array_equal(got[total:], -7)
 
     def test_inert_constraint_rows_pass_all(self):
         """q_valid=False rows (padding) must never constrain the join."""
