@@ -27,6 +27,22 @@ Rows:
                            ceiling: exact emit rows vs the true survivor
                            count vs the pow2 cap a grow-and-retry design
                            would have allocated.
+    enum/sharded_D=<d>   — mesh-partitioned enumeration
+                           (sharded_device_join_search, DESIGN.md §13) on
+                           the overflow workload at 1/2/4 forced host
+                           devices, each in its own subprocess (the
+                           shard_benches.py harness idiom).  The derived
+                           field carries shard telemetry: per-shard emit
+                           extremes, rebalance rounds / moved rows /
+                           cost, and per-level rebalance timings.
+    enum/sharded_parity_D=<d> — hard canary per device count: sharded rows
+                           must equal the single-device two-phase rows
+                           bit-for-bit (truncation prefix included)
+    enum/sharded_speedup — max-D sharded time vs 1-device sharded time.
+                           On a single-core CPU host the virtual devices
+                           share one core, so ~1x here is expected; the
+                           ≥1.5x acceptance target is for hosts where
+                           shards map to real parallel silicon.
 
 The standard workload (few labels → large candidate sets, mid-size join
 tables) sits in the regime where the host path's numpy levels are
@@ -40,6 +56,11 @@ rather than just annotating the row.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import numpy as np
@@ -51,6 +72,8 @@ from repro.core.search import (
 )
 from repro.graphs import random_labeled_graph, random_walk_query
 from repro.graphs.csr import induced_subgraph
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # the fixed table capacity the pre-two-phase enumerator shipped with; any
 # level outgrowing it used to fall back to a chunked host join
@@ -163,8 +186,142 @@ def bench_overflow_regime(rows: list, *, smoke: bool = False):
     ))
 
 
+# child for the mesh-partitioned rows: one subprocess per device count
+# (the only way to vary the virtual-device count under one harness run —
+# the shard_benches.py idiom), hard-asserting bit parity before timing
+_SHARDED_CHILD = textwrap.dedent(
+    """
+    import json, os, time
+    import numpy as np
+    import jax
+
+    from repro.core import ilgf
+    from repro.core.distributed import device_mesh
+    from repro.core.search import device_join_search, \\
+        sharded_device_join_search
+    from repro.graphs import random_labeled_graph, random_walk_query
+    from repro.graphs.csr import induced_subgraph
+
+    d = int(os.environ["ENUM_BENCH_DEVICES"])
+    smoke = os.environ.get("ENUM_BENCH_SMOKE") == "1"
+    assert len(jax.devices()) == d, jax.devices()
+    mesh = device_mesh(d)
+
+    if smoke:
+        v, e, u, reps = 220, 1400, 5, 1
+    else:
+        v, e, u, reps = 600, 3500, 5, 3
+    g = random_labeled_graph(v, e, 2, n_edge_labels=1, seed=2)
+    q = random_walk_query(g, u, sparse=True, seed=12)
+    res = ilgf(g, q)
+    alive = np.asarray(res.alive)
+    sub, _ = induced_subgraph(g, alive)
+    cand = np.asarray(res.candidates)[alive]
+
+    ref = device_join_search(sub, q, cand)
+    report = {}
+    sh = sharded_device_join_search(sub, q, cand, mesh=mesh, report=report)
+    parity = bool(np.array_equal(ref, sh))
+    trunc = bool(np.array_equal(
+        device_join_search(sub, q, cand, max_embeddings=7),
+        sharded_device_join_search(sub, q, cand, mesh=mesh,
+                                   max_embeddings=7),
+    ))
+    assert parity and trunc, "sharded enum parity canary failed"
+    assert report["host_levels"] == 0
+
+    def timed(fn):
+        fn()  # warmup (trace + compile)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_sh = timed(
+        lambda: sharded_device_join_search(sub, q, cand, mesh=mesh)
+    )
+    print(json.dumps({
+        "devices": d, "t_sharded": t_sh, "parity": parity and trunc,
+        "emb": int(ref.shape[0]),
+        "max_table_rows": report["max_table_rows"],
+        "emit_rows_max": report["emit_rows_max"],
+        "emit_rows_min": report["emit_rows_min"],
+        "rebalance_rounds": report["rebalance_rounds"],
+        "rebalance_rows_moved": report["rebalance_rows_moved"],
+        "rebalance_seconds": report["rebalance_seconds"],
+        "levels": report["levels"],
+    }))
+    """
+)
+
+
+def _run_sharded_child(devices: int, smoke: bool) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}"
+    )
+    env["ENUM_BENCH_DEVICES"] = str(devices)
+    env["ENUM_BENCH_SMOKE"] = "1" if smoke else "0"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHILD],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded enum bench child (D={devices}) failed:\n"
+            f"{out.stderr[-2000:]}"
+        )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bench_sharded(rows: list, *, smoke: bool = False,
+                  device_counts=(1, 2, 4)):
+    """Mesh-partitioned enumeration rows (overflow workload, DESIGN.md §13).
+
+    Each device count is a subprocess with that many forced host devices;
+    the child hard-asserts bit parity (full table and truncation prefix)
+    against the single-device two-phase join before any timing, so a
+    MISMATCH row can only appear if the canary logic itself is broken.
+    Per-level rebalance timings travel in the JSON detail field.
+    """
+    times: dict[int, float] = {}
+    for d in device_counts:
+        r = _run_sharded_child(d, smoke)
+        times[d] = r["t_sharded"]
+        level_detail = ";".join(
+            f"L{lv['level']}:rows={max(lv['emit_rows'])}"
+            + (f",rebal_us={lv['rebalance_seconds'] * 1e6:.0f}"
+               if lv["rebalanced"] else "")
+            for lv in r["levels"]
+        )
+        rows.append((
+            f"enum/sharded_D={d}", r["t_sharded"] * 1e6,
+            (f"emb={r['emb']};true_rows={r['max_table_rows']};"
+             f"emit_shard_max={r['emit_rows_max']};"
+             f"emit_shard_min={r['emit_rows_min']};"
+             f"rebal_rounds={r['rebalance_rounds']};"
+             f"rebal_moved={r['rebalance_rows_moved']};"
+             f"rebal_us={r['rebalance_seconds'] * 1e6:.0f};"
+             f"{level_detail}"),
+        ))
+        rows.append((
+            f"enum/sharded_parity_D={d}", 0.0,
+            "ok" if r["parity"] else "MISMATCH",
+        ))
+    d_max_count = max(device_counts)
+    rows.append((
+        "enum/sharded_speedup", 0.0,
+        f"D={d_max_count}_vs_D=1="
+        f"{times[1] / times[d_max_count]:.2f}x",
+    ))
+
+
 def run_all(*, smoke: bool = False) -> list:
     rows: list = []
     bench_device_vs_host(rows, smoke=smoke)
     bench_overflow_regime(rows, smoke=smoke)
+    bench_sharded(rows, smoke=smoke)
     return rows

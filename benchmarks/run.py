@@ -10,7 +10,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     planner  — cost-based matching orders vs greedy + plan-cache hit rate
     enum     — two-phase device-resident join enumeration vs the chunked
                host join (incl. bit-parity canary and the overflow regime
-               that used to require a host fallback)
+               that used to require a host fallback), plus the
+               mesh-partitioned enumerator at 1/2/4 forced host devices
+               (subprocess per device count, hard parity canary,
+               per-level rebalance timings in the JSON artifact)
     shard    — vertex-partitioned engine scaling across 1/2/4 devices
                (each device count in a subprocess with
                ``--xla_force_host_platform_device_count``)

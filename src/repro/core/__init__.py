@@ -47,6 +47,7 @@ from repro.core.search import (
     empty_enum_report,
     greedy_matching_order,
     host_dfs_search,
+    sharded_device_join_search,
 )
 from repro.core.stats import GraphStats
 from repro.core.stream import scan_filter, stream_filter_file

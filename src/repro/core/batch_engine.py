@@ -284,7 +284,9 @@ class BatchQueryEngine:
     ``enumerator="device"`` routes each surviving query's enumeration
     through the two-phase device join (DESIGN.md §12); per-query phase
     telemetry (the ``empty_enum_report()`` schema) lands in each result's
-    ``stats.extras["enum"]``, filter-killed queries included.
+    ``stats.extras["enum"]``, filter-killed queries included.  With a
+    ``mesh`` it runs mesh-partitioned with count-driven rebalancing
+    (DESIGN.md §13) — both pipeline halves scale with device count.
     """
 
     def __init__(
@@ -482,5 +484,7 @@ class BatchQueryEngine:
                 max_embeddings=max_embeddings,
                 planner=self.planner,
                 enumerator=self.enumerator,
+                mesh=self.mesh,
+                shard_axis=self.shard_axis,
             )
             results[i] = (emb, stats)

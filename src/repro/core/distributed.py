@@ -652,3 +652,246 @@ def distributed_join_search(
     for i, u in enumerate(order):
         out[:, u] = flat[:, i]
     return out, overflowed
+
+
+# ---------------------------------------------------------------------------
+# Mesh-partitioned two-phase enumeration (DESIGN.md §13).
+#
+# The partial-embedding table is partitioned *by row* into one contiguous
+# block per shard, in shard order — so the global row order (the bit-order
+# contract every searcher shares) is simply the concatenation of the
+# per-shard live prefixes.  Each phase of the PR 6 count → scan → emit join
+# runs per shard under shard_map against replicated candidate / edge-label
+# slices; the count phase's exact per-row output sizes drive both the
+# deterministic shard-offset prefix (per-shard totals → host exclusive
+# scan, the enumeration twin of the ILGF psum/all_gather retirement
+# exchange) and the greedy row rebalancer (core/search.py), whose row
+# moves run through the ``all_gather``-based exchange collective below.
+# ---------------------------------------------------------------------------
+
+
+# per-slice (R·C·J) validity-cell budget inside a shard body — same bound
+# (and same rationale) as core/search.py::_DEVICE_JOIN_CELLS
+_ENUM_CELLS = 1 << 24
+
+
+def _enum_rows_per(c_pad: int, j: int) -> int:
+    rows = _ENUM_CELLS // max(1, c_pad * j)
+    rows = max(256, 1 << max(0, rows.bit_length() - 1))
+    return min(rows, 4096)
+
+
+def enum_row_blocks(weights, n_shards: int) -> np.ndarray:
+    """Contiguous weighted row split: boundaries ``(n_shards + 1,)``.
+
+    Greedily cuts the row sequence at the ideal cumulative-weight quantiles
+    (``i · total / n_shards``), never splitting a row — the atom is a parent
+    row together with *all* its children, which is what keeps shard blocks
+    contiguous in the global row order.  Deterministic: equal prefix sums
+    always cut at the smallest row index.  With unit weights this is the
+    balanced equal-rows partition used to seed the table.
+    """
+    w = np.asarray(weights, dtype=np.int64).reshape(-1)
+    n_rows = int(w.size)
+    bounds = np.zeros(n_shards + 1, dtype=np.int64)
+    bounds[n_shards] = n_rows
+    if n_rows == 0 or n_shards == 1:
+        return bounds
+    prefix = np.cumsum(w)
+    total = int(prefix[-1])
+    if total == 0:
+        # all-zero weights: fall back to equal row counts
+        bounds[1:n_shards] = [
+            (i * n_rows) // n_shards for i in range(1, n_shards)
+        ]
+        return bounds
+    targets = np.arange(1, n_shards, dtype=np.float64) * (total / n_shards)
+    cuts = np.searchsorted(prefix, targets, side="left") + 1
+    bounds[1:n_shards] = np.minimum(cuts, n_rows)
+    return np.maximum.accumulate(bounds)
+
+
+@functools.lru_cache(maxsize=None)
+def _enum_count_fn(mesh: Mesh, axis: str, pcap: int, c_pad: int, j: int,
+                   use_kernel: bool):
+    """Per-shard count phase: ``(D, pcap, t)`` table → per-row survivor
+    counts, their local exclusive scan, and the per-shard total (the only
+    value the host pulls when no rebalance triggers)."""
+    rows_per = _enum_rows_per(c_pad, j)
+
+    def fn(table, n_rows, cand, n_cand, elab, qp, ql, qv):
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(), P(), P(), P(), P(), P()),
+            out_specs=(P(axis), P(axis), P(axis)),
+        )
+        def run(table, n_rows, cand, n_cand, elab, qp, ql, qv):
+            from repro.kernels.embed_join.ops import embed_join_count_raw
+
+            tab = table[0]                     # (pcap, t)
+            nr = n_rows[0, 0]
+            elab_cols = elab[:, cand]          # (N, c_pad)
+            cv = jnp.arange(c_pad) < n_cand
+            parts = []
+            for lo in range(0, pcap, rows_per):
+                sl = tab[lo : lo + rows_per]
+                rv = (jnp.arange(sl.shape[0]) + lo) < nr
+                parts.append(embed_join_count_raw(
+                    sl, rv, cand, cv, elab_cols, qp, ql, qv,
+                    use_kernel=use_kernel,
+                ))
+            counts = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            row_off = jnp.cumsum(counts) - counts
+            total = counts.sum(dtype=jnp.int32)
+            return counts[None], row_off[None], total.reshape(1)
+
+        return run(table, n_rows, cand, n_cand, elab, qp, ql, qv)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _enum_valid_fn(mesh: Mesh, axis: str, pcap: int, c_pad: int, j: int):
+    """Per-shard validity grids for the host-assisted (XLA-CPU) scan route:
+    only the 1-byte masks cross back — numpy's ``nonzero`` then plays the
+    count + scan phases at once, exactly as on the single-device path."""
+    rows_per = _enum_rows_per(c_pad, j)
+
+    def fn(table, n_rows, cand, n_cand, elab, qp, ql, qv):
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(), P(), P(), P(), P(), P()),
+            out_specs=P(axis),
+        )
+        def run(table, n_rows, cand, n_cand, elab, qp, ql, qv):
+            from repro.kernels.embed_join.ops import embed_join_raw
+
+            tab = table[0]
+            nr = n_rows[0, 0]
+            elab_cols = elab[:, cand]
+            cv = jnp.arange(c_pad) < n_cand
+            parts = []
+            for lo in range(0, pcap, rows_per):
+                sl = tab[lo : lo + rows_per]
+                rv = (jnp.arange(sl.shape[0]) + lo) < nr
+                parts.append(embed_join_raw(
+                    sl, rv, cand, cv, elab_cols, qp, ql, qv,
+                    use_kernel=False,
+                ))
+            valid = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            return valid[None]
+
+        return run(table, n_rows, cand, n_cand, elab, qp, ql, qv)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _enum_emit_fn(mesh: Mesh, axis: str, pcap: int, out_cap: int,
+                  c_pad: int, j: int, use_kernel: bool):
+    """Per-shard emit phase: scatter survivors into the shard's exactly
+    sized (lane-aligned, uniform across shards) output block and decode the
+    cell-id map into the next table slice in the same dispatch."""
+    rows_per = _enum_rows_per(c_pad, j)
+
+    def fn(table, n_rows, row_off, n_keep, cand, n_cand, elab, qp, ql, qv):
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis),
+                      P(), P(), P(), P(), P(), P()),
+            out_specs=P(axis),
+        )
+        def run(table, n_rows, row_off, n_keep, cand, n_cand, elab,
+                qp, ql, qv):
+            from repro.kernels.embed_join.ops import embed_join_emit_raw
+
+            tab = table[0]
+            nr = n_rows[0, 0]
+            ro = row_off[0]
+            nk = n_keep[0, 0]
+            elab_cols = elab[:, cand]
+            cv = jnp.arange(c_pad) < n_cand
+            idx_map = jnp.zeros(out_cap, jnp.int32)
+            for lo in range(0, pcap, rows_per):
+                sl = tab[lo : lo + rows_per]
+                rv = (jnp.arange(sl.shape[0]) + lo) < nr
+                idx_map = embed_join_emit_raw(
+                    idx_map, sl, rv, cand, cv, elab_cols, qp, ql, qv,
+                    ro[lo : lo + sl.shape[0]], jnp.asarray(lo, jnp.int32),
+                    use_kernel=use_kernel,
+                )
+            r_i = idx_map // c_pad
+            c_i = idx_map - r_i * c_pad
+            new = jnp.concatenate([tab[r_i], cand[c_i][:, None]], axis=1)
+            ok = jnp.arange(out_cap) < nk
+            return jnp.where(ok[:, None], new, 0)[None]
+
+        return run(table, n_rows, row_off, n_keep, cand, n_cand, elab,
+                   qp, ql, qv)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _enum_gather_fn(mesh: Mesh, axis: str):
+    """Per-shard survivor gather for the host-assisted route: the uploaded
+    index vectors address only shard-local rows, the table never crosses."""
+
+    def fn(table, cand, r_idx, c_idx, n_keep):
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(axis), P(), P(axis), P(axis), P(axis)),
+            out_specs=P(axis),
+        )
+        def run(table, cand, r_idx, c_idx, n_keep):
+            tab = table[0]
+            out_cap = r_idx.shape[1]
+            new = jnp.concatenate(
+                [tab[r_idx[0]], cand[c_idx[0]][:, None]], axis=1
+            )
+            ok = jnp.arange(out_cap) < n_keep[0, 0]
+            return jnp.where(ok[:, None], new, 0)[None]
+
+        return run(table, cand, r_idx, c_idx, n_keep)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _enum_exchange_fn(mesh: Mesh, axis: str, pcap_new: int):
+    """Row-exchange collective behind the count-driven rebalancer.
+
+    Repartitions the globally ordered row sequence (shard ``d`` owns global
+    rows ``[old_off[d], old_off[d+1])``) onto new contiguous blocks: every
+    shard gathers the table (one ``all_gather`` — the boundary-exchange
+    idiom of the peeling rounds, here over rows instead of masks) and
+    slices out exactly its new block by global row id.  Order-preserving by
+    construction, which is what keeps rebalancing invisible to the
+    bit-order contract.
+    """
+    n_shards = mesh.shape[axis]
+
+    def fn(table, old_off, new_start, new_size):
+        @shard_map_nocheck(
+            mesh=mesh,
+            in_specs=(P(axis), P(), P(), P()),
+            out_specs=P(axis),
+        )
+        def run(table, old_off, new_start, new_size):
+            me = jax.lax.axis_index(axis)
+            tab = table[0]                                 # (pcap_old, t)
+            pcap_old = tab.shape[0]
+            gathered = jax.lax.all_gather(tab, axis)       # (D, pcap_old, t)
+            g = new_start[me] + jnp.arange(pcap_new, dtype=jnp.int32)
+            s = jnp.clip(
+                jnp.searchsorted(old_off[1:], g, side="right"),
+                0, n_shards - 1,
+            )
+            r = jnp.clip(g - old_off[s], 0, pcap_old - 1)
+            rows = gathered[s, r]
+            ok = jnp.arange(pcap_new) < new_size[me]
+            return jnp.where(ok[:, None], rows, 0)[None]
+
+        return run(table, old_off, new_start, new_size)
+
+    return jax.jit(fn)

@@ -25,6 +25,7 @@ from repro.core.search import (
     device_join_search,
     empty_enum_report,
     host_dfs_search,
+    sharded_device_join_search,
 )
 from repro.graphs.csr import Graph, induced_subgraph, to_host
 from repro.graphs.store import as_snapshot
@@ -55,6 +56,8 @@ def search_filtered(
     max_embeddings: int | None = None,
     planner=None,
     enumerator: str = "host",
+    mesh=None,
+    shard_axis: str = "data",
 ) -> np.ndarray:
     """Compaction → optional k-hop refinement → enumeration on one query.
 
@@ -76,6 +79,13 @@ def search_filtered(
     device path records its phase telemetry (``empty_enum_report()``
     schema) in ``stats.extras["enum"]`` on *every* exit path — including
     queries the filter already killed.
+
+    ``mesh`` / ``shard_axis``: with ``enumerator="device"`` and a mesh,
+    enumeration runs mesh-partitioned (``sharded_device_join_search``,
+    DESIGN.md §13) — the embedding table is row-sharded across devices
+    with count-driven rebalancing, still bit-identical, with the shard
+    fields of the telemetry schema filled in.  Ignored for the host
+    enumerator (filtering is the sharded stage there).
     """
     if enumerator not in ("host", "device"):
         raise ValueError(
@@ -130,9 +140,16 @@ def search_filtered(
                               max_embeddings=max_embeddings)
     elif enumerator == "device":
         enum_report: dict = {}
-        emb = device_join_search(sub, query, cand, order=order,
-                                 max_embeddings=max_embeddings,
-                                 report=enum_report)
+        if mesh is not None:
+            emb = sharded_device_join_search(
+                sub, query, cand, mesh=mesh, axis=shard_axis,
+                order=order, max_embeddings=max_embeddings,
+                report=enum_report,
+            )
+        else:
+            emb = device_join_search(sub, query, cand, order=order,
+                                     max_embeddings=max_embeddings,
+                                     report=enum_report)
         stats.extras["enum"] = enum_report
     else:
         emb = bfs_join_search(sub, query, cand, order=order,
@@ -156,6 +173,10 @@ class SubgraphQueryEngine:
     vertex-partitioned across the mesh (``core/distributed.py``), consuming
     the sharded store's per-shard tables when the snapshot carries them.
     Results are bit-identical to the single-device engine (DESIGN.md §9).
+    With ``enumerator="device"`` the mesh also partitions *enumeration*:
+    the embedding table is row-sharded with count-driven rebalancing
+    (DESIGN.md §13), so the whole query pipeline — not just its filter
+    half — scales with device count.
 
     ``planner``: optional ``core.planner.QueryPlanner`` — cost-based
     matching orders (DESIGN.md §10) instead of the built-in greedy rule.
@@ -242,5 +263,7 @@ class SubgraphQueryEngine:
             max_embeddings=max_embeddings,
             planner=self.planner,
             enumerator=self.enumerator,
+            mesh=self.mesh,
+            shard_axis=self.shard_axis,
         )
         return emb, stats

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from typing import Sequence
 
 import jax
@@ -392,21 +393,35 @@ def _align_rows(n: int) -> int:
 
 
 def empty_enum_report() -> dict:
-    """The zeroed two-phase telemetry schema ``device_join_search`` fills.
+    """The zeroed two-phase telemetry schema the device joins fill.
 
-    Every exit path (empty seed set, single-vertex query, truncation)
-    leaves exactly these keys in ``report`` / ``stats.extras["enum"]``:
+    Every exit path (empty seed set, single-vertex query, truncation,
+    filter-killed queries) leaves exactly these keys in ``report`` /
+    ``stats.extras["enum"]``:
 
     * ``device_rounds`` — expansion rounds executed (all on device);
     * ``host_levels``   — always 0 since the chunked host fallback was
       removed (kept so dashboards and the CI canary can assert on it);
     * ``count_seconds`` / ``scan_seconds`` / ``emit_seconds`` — per-phase
       wall-clock totals across rounds;
-    * ``max_table_rows`` — peak true survivor count over all levels;
+    * ``max_table_rows`` — peak true survivor count over all levels,
+      summed across shards;
     * ``max_emit_rows``  — peak allocated emit-buffer rows (lane-aligned
-      exact sizing: always within 127 of ``max_table_rows``, floor 128);
+      exact sizing, × ``enum_shards`` uniform SPMD blocks when sharded);
     * ``scan_path``     — ``"device"`` (kernel path: on-device cumsum) or
-      ``"host"`` (XLA-CPU: host-assisted scan), ``None`` if no round ran.
+      ``"host"`` (XLA-CPU: host-assisted scan), ``None`` if no round ran;
+    * ``enum_shards``   — mesh shards the table was partitioned over
+      (1 = single-device ``device_join_search``, 0 = no enumeration ran);
+    * ``emit_rows_max`` / ``emit_rows_min`` — per-shard emitted-row
+      extremes at the heaviest level (their gap is the residual load
+      imbalance the rebalancer could not remove; equal when
+      ``enum_shards == 1``);
+    * ``rebalance_rounds`` / ``rebalance_rows_moved`` /
+      ``rebalance_seconds`` — count-driven rebalancer activity
+      (levels repartitioned, parent rows exchanged, wall-clock cost);
+    * ``levels``        — per-level records ``{"level", "emit_rows":
+      [per-shard rows], "rebalanced", "rebalance_seconds"}`` backing the
+      bench JSON's per-level rebalance timings.
     """
     return {
         "device_rounds": 0,
@@ -417,6 +432,24 @@ def empty_enum_report() -> dict:
         "max_table_rows": 0,
         "max_emit_rows": 0,
         "scan_path": None,
+        "enum_shards": 0,
+        "emit_rows_max": 0,
+        "emit_rows_min": 0,
+        "rebalance_rounds": 0,
+        "rebalance_rows_moved": 0,
+        "rebalance_seconds": 0.0,
+        "levels": [],
+    }
+
+
+def _level_record(level: int, emit_rows, *, rebalanced: bool = False,
+                  rebalance_seconds: float = 0.0) -> dict:
+    """One ``stats["levels"]`` entry (see ``empty_enum_report``)."""
+    return {
+        "level": level,
+        "emit_rows": [int(x) for x in emit_rows],
+        "rebalanced": rebalanced,
+        "rebalance_seconds": rebalance_seconds,
     }
 
 
@@ -570,8 +603,8 @@ def device_join_search(
     candidates: np.ndarray,
     *,
     order: Sequence[int] | None = None,
-    device_rows: int = 1 << 15,
-    chunk_rows: int = 8192,
+    device_rows: int | None = None,
+    chunk_rows: int | None = None,
     max_embeddings: int | None = None,
     use_kernel: bool | None = None,
     report: dict | None = None,
@@ -602,17 +635,25 @@ def device_join_search(
     slack), and high-cardinality levels — precisely where the old engine
     abandoned the device — stay fused.
 
-    ``device_rows`` / ``chunk_rows`` are accepted for API compatibility
-    with the capacity-capped engine and ignored — there is no buffer cap
-    left to size.  ``use_kernel``: None = auto (Pallas kernels + on-device
-    scan on TPU, oracle + host-assisted scan elsewhere); True forces the
-    kernel path (interpret mode off-TPU — parity testing); False forces
-    the oracle.  ``report``: optional dict filled with the
-    ``empty_enum_report()`` telemetry schema (phase timings, exact-sizing
-    ceilings); phase timings force a device sync per phase, so pass
-    ``report=None`` on latency-critical calls.
+    ``device_rows`` / ``chunk_rows`` — the capacity knobs of the old
+    capacity-capped engine — are **deprecated**: the two-phase join has no
+    buffer cap left to size, so passing them emits a ``DeprecationWarning``
+    and they will be removed in the next release.  ``use_kernel``: None =
+    auto (Pallas kernels + on-device scan on TPU, oracle + host-assisted
+    scan elsewhere); True forces the kernel path (interpret mode off-TPU —
+    parity testing); False forces the oracle.  ``report``: optional dict
+    filled with the ``empty_enum_report()`` telemetry schema (phase
+    timings, exact-sizing ceilings); phase timings force a device sync per
+    phase, so pass ``report=None`` on latency-critical calls.
     """
-    del device_rows, chunk_rows  # legacy capacity knobs: nothing to cap
+    if device_rows is not None or chunk_rows is not None:
+        warnings.warn(
+            "device_rows/chunk_rows no longer do anything: the two-phase "
+            "device join sizes every buffer exactly and will drop both "
+            "kwargs in the next release — remove them from the call",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
     n_d = data.vlabels.shape[0]
@@ -629,6 +670,7 @@ def device_join_search(
     kernel_on = (use_kernel if use_kernel is not None
                  else jax.default_backend() == "tpu")
     stats = empty_enum_report()
+    stats["enum_shards"] = 1
     stats["scan_path"] = "device" if kernel_on else "host"
     if report is not None:
         report.update(stats)
@@ -641,6 +683,8 @@ def device_join_search(
     )
     stats["max_table_rows"] = n_rows
     stats["max_emit_rows"] = r0
+    stats["emit_rows_max"] = n_rows
+    stats["emit_rows_min"] = n_rows
 
     for t in range(1, n_q):
         u = order[t]
@@ -699,6 +743,7 @@ def device_join_search(
             if total == 0:
                 table_dev = jnp.zeros((1, t + 1), jnp.int32)
                 n_rows = 0
+                stats["levels"].append(_level_record(t, [0]))
                 continue
 
             # -- emit: scatter survivors into the exactly-sized buffer
@@ -746,6 +791,7 @@ def device_join_search(
                 stats["scan_seconds"] += time.perf_counter() - t0
                 table_dev = jnp.zeros((1, t + 1), jnp.int32)
                 n_rows = 0
+                stats["levels"].append(_level_record(t, [0]))
                 continue
             out_cap = _align_rows(total)
             r_idx = np.zeros(out_cap, np.int32)
@@ -768,6 +814,10 @@ def device_join_search(
         n_rows = total
         stats["max_table_rows"] = max(stats["max_table_rows"], total)
         stats["max_emit_rows"] = max(stats["max_emit_rows"], out_cap)
+        stats["levels"].append(_level_record(t, [total]))
+        if total > stats["emit_rows_max"]:
+            stats["emit_rows_max"] = total
+            stats["emit_rows_min"] = total
 
     n_keep = n_rows
     if max_embeddings is not None:
@@ -776,6 +826,320 @@ def device_join_search(
     if report is not None:
         report.update(stats)
     return _restore_query_order(table, order)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-partitioned device enumeration (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+
+def sharded_device_join_search(
+    data: Graph,
+    query: Graph,
+    candidates: np.ndarray,
+    *,
+    mesh,
+    axis: str = "data",
+    order: Sequence[int] | None = None,
+    max_embeddings: int | None = None,
+    use_kernel: bool | None = None,
+    report: dict | None = None,
+    rebalance_threshold: float = 1.25,
+) -> np.ndarray:
+    """``device_join_search`` partitioned across a device mesh.
+
+    Bit-identical to the single-device two-phase join (same rows, same
+    order, same ``max_embeddings`` truncation prefix) at any shard count:
+    the partial-embedding table is split by row into one *contiguous
+    block per shard, in shard order* — children of contiguous parents are
+    contiguous in the global flat row-major survivor order, so
+    concatenating the per-shard live prefixes reproduces the
+    single-device row order exactly, level after level.  Each count →
+    scan → emit phase runs per shard under ``shard_map``
+    (core/distributed.py) against replicated candidate / edge-label
+    slices; the only per-level host sync on the kernel path is the (D,)
+    per-shard survivor totals, which double as the deterministic
+    shard-offset prefix for the next level's global row numbering.
+
+    Because the count phase prices every parent row's emit for free, a
+    **count-driven rebalancer** runs between count and emit: when the
+    heaviest shard's emit total exceeds ``rebalance_threshold ×`` the
+    mean, parent rows are recut into weight-balanced contiguous blocks
+    (``enum_row_blocks``) and exchanged with one ``all_gather``
+    collective — order-preserving, so rebalancing is invisible to the
+    bit-order contract.  Balanced blocks are also what keep the uniform
+    SPMD buffer shapes (every shard allocates the max block's rows)
+    tight instead of skew-inflated.
+
+    ``mesh`` / ``axis``: the device mesh and axis name to shard over
+    (``core.distributed.device_mesh``).  ``use_kernel`` / ``report`` as
+    in ``device_join_search``; the report additionally carries the shard
+    fields of ``empty_enum_report()``.
+    """
+    from repro.core.distributed import (
+        _enum_count_fn,
+        _enum_emit_fn,
+        _enum_exchange_fn,
+        _enum_gather_fn,
+        _enum_valid_fn,
+        enum_row_blocks,
+    )
+
+    n_shards = int(mesh.shape[axis])
+    cand = np.asarray(candidates)
+    n_q = query.vlabels.shape[0]
+    n_d = data.vlabels.shape[0]
+    q_adj = _host_adjacency(query)
+    elab_np = _dense_edge_labels(data, n_d)
+    elab_dev = None
+
+    if order is None:
+        order = greedy_matching_order(cand.sum(axis=0), q_adj)
+    else:
+        order = _as_order(order, n_q)
+    pos_of = {u: i for i, u in enumerate(order)}
+
+    kernel_on = (use_kernel if use_kernel is not None
+                 else jax.default_backend() == "tpu")
+    stats = empty_enum_report()
+    stats["enum_shards"] = n_shards
+    stats["scan_path"] = "device" if kernel_on else "host"
+    if report is not None:
+        report.update(stats)
+
+    # seed: equal-rows contiguous blocks of u_0's candidate list
+    seed_ids = np.nonzero(cand[:, order[0]])[0].astype(np.int32)
+    total = int(seed_ids.size)
+    bounds = enum_row_blocks(np.ones(total, np.int64), n_shards)
+    sizes = np.diff(bounds).astype(np.int64)
+    pcap = _align_rows(int(sizes.max()))
+    table_h = np.zeros((n_shards, pcap, 1), np.int32)
+    for i in range(n_shards):
+        table_h[i, : sizes[i], 0] = seed_ids[bounds[i] : bounds[i + 1]]
+    table_j = table_h  # device placement happens on the first sharded call
+    n_rows_j = jnp.asarray(sizes.reshape(n_shards, 1).astype(np.int32))
+    stats["max_table_rows"] = total
+    stats["max_emit_rows"] = n_shards * pcap
+    stats["emit_rows_max"] = int(sizes.max())
+    stats["emit_rows_min"] = int(sizes.min())
+
+    for t in range(1, n_q):
+        u = order[t]
+        cand_ids = np.nonzero(cand[:, u])[0].astype(np.int32)
+        if total == 0 or cand_ids.size == 0:
+            if report is not None:
+                report.update(stats)
+            return np.zeros((0, n_q), dtype=np.int64)
+        q_pos, q_lab, q_val = _level_constraints(q_adj, pos_of, u, t)
+        j = int(q_pos.size)
+        c_pad = max(128, -(-cand_ids.size // 128) * 128)
+        if elab_dev is None:
+            elab_dev = jnp.asarray(elab_np)
+        cand_dev = jnp.asarray(np.pad(cand_ids, (0, c_pad - cand_ids.size)))
+        n_cand_dev = jnp.asarray(cand_ids.size, jnp.int32)
+        qp, ql, qv = map(jnp.asarray, (q_pos, q_lab, q_val))
+        stats["device_rounds"] += 1
+        rebalanced = False
+        rebal_dt = 0.0
+
+        if kernel_on:
+            # -- count (scan fused on device): only (D,) totals sync back
+            t0 = time.perf_counter()
+            count_fn = _enum_count_fn(mesh, axis, pcap, c_pad, j, True)
+            counts_j, row_off_j, totals_j = count_fn(
+                table_j, n_rows_j, cand_dev, n_cand_dev, elab_dev,
+                qp, ql, qv,
+            )
+            shard_tot = np.asarray(totals_j).astype(np.int64)
+            stats["count_seconds"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            new_total = int(shard_tot.sum())
+            if new_total == 0:
+                stats["scan_seconds"] += time.perf_counter() - t0
+                total = 0
+                sizes = np.zeros(n_shards, np.int64)
+                stats["levels"].append(_level_record(t, [0] * n_shards))
+                continue
+
+            # -- rebalance: recut parents by exact child weights when the
+            # heaviest shard's emit exceeds the threshold over the mean
+            if (n_shards > 1
+                    and shard_tot.max() * n_shards
+                    > rebalance_threshold * new_total):
+                t_r = time.perf_counter()
+                counts_h = np.asarray(counts_j)  # (D, pcap) — pulled only now
+                weights = np.concatenate(
+                    [counts_h[i, : sizes[i]] for i in range(n_shards)]
+                )
+                new_bounds = enum_row_blocks(weights, n_shards)
+                if not np.array_equal(new_bounds, bounds):
+                    new_sizes = np.diff(new_bounds).astype(np.int64)
+                    pcap_new = _align_rows(int(new_sizes.max()))
+                    exchange_fn = _enum_exchange_fn(mesh, axis, pcap_new)
+                    table_j = exchange_fn(
+                        table_j,
+                        jnp.asarray(bounds.astype(np.int32)),
+                        jnp.asarray(new_bounds[:-1].astype(np.int32)),
+                        jnp.asarray(new_sizes.astype(np.int32)),
+                    )
+                    # host re-derives per-shard counts/offsets from the
+                    # global weights — no device recount needed
+                    row_off_h = np.zeros((n_shards, pcap_new), np.int32)
+                    for i in range(n_shards):
+                        w = weights[new_bounds[i] : new_bounds[i + 1]]
+                        row_off_h[i, : w.size] = np.cumsum(w) - w
+                        shard_tot[i] = w.sum()
+                    row_off_j = jnp.asarray(row_off_h)
+                    moved = int(sum(
+                        max(0, new_sizes[i]
+                            - max(0, min(new_bounds[i + 1], bounds[i + 1])
+                                  - max(new_bounds[i], bounds[i])))
+                        for i in range(n_shards)
+                    ))
+                    bounds, sizes, pcap = new_bounds, new_sizes, pcap_new
+                    n_rows_j = jnp.asarray(
+                        sizes.reshape(n_shards, 1).astype(np.int32)
+                    )
+                    rebalanced = True
+                    rebal_dt = time.perf_counter() - t_r
+                    stats["rebalance_rounds"] += 1
+                    stats["rebalance_rows_moved"] += moved
+                    stats["rebalance_seconds"] += rebal_dt
+            stats["scan_seconds"] += time.perf_counter() - t0 - rebal_dt
+
+            # -- emit: uniform exactly-sized shard blocks
+            t0 = time.perf_counter()
+            out_cap = _align_rows(int(shard_tot.max()))
+            emit_fn = _enum_emit_fn(mesh, axis, pcap, out_cap, c_pad, j, True)
+            table_j = emit_fn(
+                table_j, n_rows_j, row_off_j,
+                jnp.asarray(shard_tot.reshape(n_shards, 1).astype(np.int32)),
+                cand_dev, n_cand_dev, elab_dev, qp, ql, qv,
+            )
+            if report is not None:
+                table_j.block_until_ready()
+            stats["emit_seconds"] += time.perf_counter() - t0
+        else:
+            # host-assisted scan: per-shard validity bitmasks cross back
+            # (same bytes as the single-device path), numpy's nonzero is
+            # the count + scan, and rebalancing recuts the grids on host
+            t0 = time.perf_counter()
+            valid_fn = _enum_valid_fn(mesh, axis, pcap, c_pad, j)
+            valid_j = valid_fn(
+                table_j, n_rows_j, cand_dev, n_cand_dev, elab_dev,
+                qp, ql, qv,
+            )
+            valid_h = np.asarray(valid_j)  # (D, pcap, c_pad) bool
+            stats["count_seconds"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            counts_rows = valid_h.sum(axis=2, dtype=np.int64)  # (D, pcap)
+            shard_tot = counts_rows.sum(axis=1)
+            new_total = int(shard_tot.sum())
+            if new_total == 0:
+                stats["scan_seconds"] += time.perf_counter() - t0
+                total = 0
+                sizes = np.zeros(n_shards, np.int64)
+                stats["levels"].append(_level_record(t, [0] * n_shards))
+                continue
+
+            grids = [valid_h[i, : sizes[i]] for i in range(n_shards)]
+            if (n_shards > 1
+                    and shard_tot.max() * n_shards
+                    > rebalance_threshold * new_total):
+                t_r = time.perf_counter()
+                weights = np.concatenate(
+                    [counts_rows[i, : sizes[i]] for i in range(n_shards)]
+                )
+                new_bounds = enum_row_blocks(weights, n_shards)
+                if not np.array_equal(new_bounds, bounds):
+                    new_sizes = np.diff(new_bounds).astype(np.int64)
+                    pcap_new = _align_rows(int(new_sizes.max()))
+                    exchange_fn = _enum_exchange_fn(mesh, axis, pcap_new)
+                    table_j = exchange_fn(
+                        table_j,
+                        jnp.asarray(bounds.astype(np.int32)),
+                        jnp.asarray(new_bounds[:-1].astype(np.int32)),
+                        jnp.asarray(new_sizes.astype(np.int32)),
+                    )
+                    global_valid = np.concatenate(grids, axis=0)
+                    grids = [
+                        global_valid[new_bounds[i] : new_bounds[i + 1]]
+                        for i in range(n_shards)
+                    ]
+                    moved = int(sum(
+                        max(0, new_sizes[i]
+                            - max(0, min(new_bounds[i + 1], bounds[i + 1])
+                                  - max(new_bounds[i], bounds[i])))
+                        for i in range(n_shards)
+                    ))
+                    bounds, sizes, pcap = new_bounds, new_sizes, pcap_new
+                    n_rows_j = jnp.asarray(
+                        sizes.reshape(n_shards, 1).astype(np.int32)
+                    )
+                    shard_tot = np.asarray(
+                        [g.sum(dtype=np.int64) for g in grids]
+                    )
+                    rebalanced = True
+                    rebal_dt = time.perf_counter() - t_r
+                    stats["rebalance_rounds"] += 1
+                    stats["rebalance_rows_moved"] += moved
+                    stats["rebalance_seconds"] += rebal_dt
+
+            out_cap = _align_rows(int(shard_tot.max()))
+            r_idx_h = np.zeros((n_shards, out_cap), np.int32)
+            c_idx_h = np.zeros((n_shards, out_cap), np.int32)
+            for i in range(n_shards):
+                ri, ci = np.nonzero(grids[i])  # flat row-major per shard
+                r_idx_h[i, : ri.size] = ri
+                c_idx_h[i, : ci.size] = ci
+            stats["scan_seconds"] += time.perf_counter() - t0 - rebal_dt
+
+            # emit: index upload + one sharded gather, table never crosses
+            t0 = time.perf_counter()
+            gather_fn = _enum_gather_fn(mesh, axis)
+            table_j = gather_fn(
+                table_j, cand_dev, jnp.asarray(r_idx_h),
+                jnp.asarray(c_idx_h),
+                jnp.asarray(shard_tot.reshape(n_shards, 1).astype(np.int32)),
+            )
+            if report is not None:
+                table_j.block_until_ready()
+            stats["emit_seconds"] += time.perf_counter() - t0
+
+        # advance: children become the next level's contiguous blocks
+        sizes = shard_tot.astype(np.int64)
+        bounds = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        total = new_total
+        pcap = out_cap
+        n_rows_j = jnp.asarray(sizes.reshape(n_shards, 1).astype(np.int32))
+        stats["max_table_rows"] = max(stats["max_table_rows"], total)
+        stats["max_emit_rows"] = max(
+            stats["max_emit_rows"], n_shards * out_cap
+        )
+        stats["levels"].append(_level_record(
+            t, sizes, rebalanced=rebalanced, rebalance_seconds=rebal_dt
+        ))
+        if int(sizes.max()) > stats["emit_rows_max"]:
+            stats["emit_rows_max"] = int(sizes.max())
+            stats["emit_rows_min"] = int(sizes.min())
+
+    # assembly: concatenating live prefixes in shard order IS the global
+    # row order (contiguous-block invariant), so truncation is a prefix
+    n_keep = total
+    if max_embeddings is not None:
+        n_keep = min(n_keep, max_embeddings)
+    if total == 0:
+        flat = np.zeros((0, n_q), np.int32)
+    else:
+        table_out = np.asarray(table_j)
+        flat = np.concatenate(
+            [table_out[i, : sizes[i]] for i in range(n_shards)], axis=0
+        )[:n_keep]
+    if report is not None:
+        report.update(stats)
+    return _restore_query_order(flat, order)
 
 
 def embeddings_equal(a: np.ndarray, b: np.ndarray) -> bool:

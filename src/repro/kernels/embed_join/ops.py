@@ -9,6 +9,12 @@ Three entry points back the two-phase (count → scan → emit) device join
 * ``embed_join_emit``  — re-evaluates the grid and scatters each survivor's
   flat cell id into its prefix-summed output slot (the *emit* pass).
 
+Each has an un-jitted ``*_raw`` twin with identical semantics — the
+shard_map-compatible entry point: the mesh-partitioned enumerator
+(core/distributed.py, DESIGN.md §13) calls the raw forms inside its
+``shard_map`` bodies, where a nested ``jax.jit`` would only add dispatch
+layering.  The public names below jit the raw forms for direct callers.
+
 On TPU the Pallas kernels compile to Mosaic; elsewhere ``use_kernel=None``
 (auto) runs the pure-jnp oracle *inside the same jit* — the device-resident
 join stays one fused dispatch per phase on every backend, and
@@ -17,8 +23,6 @@ interpret-mode kernel execution is reserved for the parity tests
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -63,10 +67,7 @@ def _padded_kernel_args(table, row_valid, cand_list, cand_valid, elab_cols,
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_r", "block_c", "use_kernel")
-)
-def embed_join(
+def embed_join_raw(
     table,       # (R, T) int32 partial embeddings (matching order)
     row_valid,   # (R,) bool
     cand_list,   # (C,) int32
@@ -80,7 +81,7 @@ def embed_join(
     block_c: int = 128,
     use_kernel: bool | None = None,
 ):
-    """(R, C) bool validity grid for one join expansion round."""
+    """(R, C) bool validity grid for one join expansion round (un-jitted)."""
     if use_kernel is None:
         use_kernel = _on_tpu()
     if not use_kernel:
@@ -102,10 +103,12 @@ def embed_join(
     return mask[:r, :c].astype(bool)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_r", "block_c", "use_kernel")
+embed_join = jax.jit(
+    embed_join_raw, static_argnames=("block_r", "block_c", "use_kernel")
 )
-def embed_join_count(
+
+
+def embed_join_count_raw(
     table,
     row_valid,
     cand_list,
@@ -143,10 +146,13 @@ def embed_join_count(
     return counts[:r, 0]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_r", "block_c", "use_kernel")
+embed_join_count = jax.jit(
+    embed_join_count_raw,
+    static_argnames=("block_r", "block_c", "use_kernel"),
 )
-def embed_join_emit(
+
+
+def embed_join_emit_raw(
     idx_map,     # (out_cap,) int32 — slot → flat cell id, scattered into
     table,       # (R, T) int32
     row_valid,   # (R,) bool
@@ -172,7 +178,7 @@ def embed_join_emit(
     buffer is written exactly ``Σ counts`` times — the exact-sizing
     invariant.  Returns the updated ``idx_map``; the caller decodes it
     with one gather (``table[idx // C]``, ``cand[idx % C]``)."""
-    valid = embed_join(
+    valid = embed_join_raw(
         table, row_valid, cand_list, cand_valid, elab_cols,
         q_pos, q_lab, q_valid,
         block_r=block_r, block_c=block_c, use_kernel=use_kernel,
@@ -190,3 +196,9 @@ def embed_join_emit(
     return idx_map.at[slots.reshape(-1)].set(
         cells.reshape(-1), mode="drop"
     )
+
+
+embed_join_emit = jax.jit(
+    embed_join_emit_raw,
+    static_argnames=("block_r", "block_c", "use_kernel"),
+)

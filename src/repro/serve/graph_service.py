@@ -87,7 +87,11 @@ class GraphServiceConfig:
     # optional device mesh: ticks run the vertex-partitioned peeling round
     # (core/distributed.py) instead of the single-device one — bit-identical
     # results, sharded work.  A ShardedGraphStore whose plan matches the
-    # mesh contributes its per-shard tables directly.
+    # mesh contributes its per-shard tables directly.  With
+    # enumerator="device", finalize also enumerates mesh-partitioned
+    # (DESIGN.md §13): the embedding table row-shards across the mesh with
+    # count-driven rebalancing, per epoch-pinned snapshot, still
+    # bit-identical.
     mesh: object = None
     shard_axis: str = _ENGINE_CONFIG.distributed_axis
     # cost-based matching orders (core/planner.py): one QueryPlanner — hence
@@ -450,6 +454,8 @@ class GraphQueryService:
             max_embeddings=req.max_embeddings,
             planner=self.planner,
             enumerator=self.cfg.enumerator,
+            mesh=self.cfg.mesh,
+            shard_axis=self.cfg.shard_axis,
         )
         return req.rid, emb, stats
 

@@ -4,12 +4,32 @@ Provides a minimal ``hypothesis`` fallback shim so the suite *collects* on a
 bare machine (the property tests are skipped with a clear reason instead of
 crashing collection with ``ModuleNotFoundError``).  Install the real thing
 with ``pip install -r requirements-dev.txt`` to run the property tests.
+
+Also drops jax's compiled-executable caches between test modules: a full
+``pytest -x -q`` run jit-compiles many hundreds of programs into one
+process, and XLA-CPU's JIT has been observed to segfault inside
+``backend_compile`` once enough live executables accumulate (the crash
+lands in whichever module compiles next — reproducible at module N from a
+cold start, gone when the module runs alone).  Per-module cache drops keep
+the live-executable count bounded; within a module the jit caches still
+amortize as before.
 """
 
 from __future__ import annotations
 
 import sys
 import types
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jax_cache():
+    """Clear jax compile caches after each test module (see module docstring)."""
+    yield
+    import jax
+
+    jax.clear_caches()
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401

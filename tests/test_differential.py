@@ -6,16 +6,24 @@ adjacency/edge-label/injectivity check, sharing no code with any engine —
 is run against every enumeration path on the *same* seeds:
 
     host_dfs_search · bfs_join_search · device_join_search ·
-    SubgraphQueryEngine (host + device enumerator) · BatchQueryEngine ·
-    the sharded (mesh) engine
+    sharded_device_join_search · SubgraphQueryEngine (host + device
+    enumerator, with and without a mesh) · BatchQueryEngine
 
 plus the degenerate corners the random sweep can miss: all-pruned queries,
 zero-embedding queries (edge-label mismatch), self-loop-free multi-label
 edges, saturated-CNI digests, ``max_embeddings`` truncation, disconnected
 queries under explicit orders, and single-vertex queries.
+
+Multi-device coverage (the mesh-partitioned enumerator is SPMD code whose
+shard count changes with the device count) runs the same corners in
+subprocesses under ``--xla_force_host_platform_device_count`` at 1/2/4
+virtual devices, asserting bit-parity against the single-device engine.
 """
 
 import itertools
+import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -29,6 +37,7 @@ from repro.core import (
     device_join_search,
     empty_enum_report,
     host_dfs_search,
+    sharded_device_join_search,
 )
 from repro.core.cni import SAT64
 from repro.core.incremental import IncrementalIndex
@@ -101,6 +110,11 @@ def _all_engine_results(g, q, *, max_embeddings=None):
 
     mesh = device_mesh()  # every visible device (1 on a plain CPU run)
     out["sharded"] = SubgraphQueryEngine(g, mesh=mesh).query(
+        q, max_embeddings=max_embeddings)[0]
+    out["sharded_join"] = sharded_device_join_search(
+        g, q, cand, mesh=mesh, max_embeddings=max_embeddings)
+    out["sharded_engine_device"] = SubgraphQueryEngine(
+        g, mesh=mesh, enumerator="device").query(
         q, max_embeddings=max_embeddings)[0]
     return out
 
@@ -231,13 +245,17 @@ def test_max_embeddings_truncation_parity():
         a = bfs_join_search(g, q, cand, max_embeddings=cap)
         b = device_join_search(g, q, cand, max_embeddings=cap)
         np.testing.assert_array_equal(a, b)  # incl. row order
-        # the legacy capacity knobs (device_rows / chunk_rows) are accepted
-        # for API compatibility and ignored — two-phase sizing has no
-        # buffer cap left to overflow, so a value that used to force the
-        # chunked host fallback on every level must change nothing
-        c = device_join_search(g, q, cand, max_embeddings=cap,
-                               device_rows=8)
+        # the legacy capacity knobs (device_rows / chunk_rows) are on
+        # their removal path: still accepted for one release, but now
+        # warn — and a value that used to force the chunked host fallback
+        # on every level must still change nothing
+        with pytest.warns(DeprecationWarning, match="device_rows"):
+            c = device_join_search(g, q, cand, max_embeddings=cap,
+                                   device_rows=8)
         np.testing.assert_array_equal(a, c)
+        with pytest.warns(DeprecationWarning):
+            device_join_search(g, q, cand, max_embeddings=cap,
+                               chunk_rows=4096)
         for name, emb in _all_engine_results(
                 g, q, max_embeddings=cap).items():
             assert emb.shape[0] == min(cap, total), (name, cap)
@@ -327,11 +345,26 @@ def test_enum_telemetry_normal_query():
     assert report["emit_seconds"] > 0.0
     assert report["max_table_rows"] >= emb.shape[0]
     assert report["max_emit_rows"] == _ceil128(report["max_table_rows"])
+    # shard fields on the single-device path: one shard, no rebalancing,
+    # per-shard emit extremes collapse to the peak table size, and the
+    # per-level records cover every executed round
+    assert report["enum_shards"] == 1
+    assert report["rebalance_rounds"] == 0
+    assert report["rebalance_rows_moved"] == 0
+    assert report["rebalance_seconds"] == 0.0
+    assert report["emit_rows_max"] == report["max_table_rows"]
+    assert report["emit_rows_min"] == report["emit_rows_max"]
+    assert len(report["levels"]) == report["device_rounds"]
+    for lvl in report["levels"]:
+        assert set(lvl) == {"level", "emit_rows", "rebalanced",
+                            "rebalance_seconds"}
+        assert len(lvl["emit_rows"]) == report["enum_shards"]
     # engine level: the same schema lands in stats.extras["enum"]
     _, stats = SubgraphQueryEngine(g, enumerator="device").query(q)
     enum = stats.extras["enum"]
     assert set(enum) == set(empty_enum_report())
     assert enum["device_rounds"] >= 1 and enum["host_levels"] == 0
+    assert enum["enum_shards"] == 1
 
 
 def test_enum_telemetry_every_exit_path():
@@ -379,6 +412,44 @@ def test_enum_telemetry_every_exit_path():
     assert capped["device_rounds"] == full["device_rounds"]
     assert capped["max_table_rows"] == full["max_table_rows"]
     assert capped["max_emit_rows"] == full["max_emit_rows"]
+
+
+def test_enum_telemetry_sharded_exit_paths():
+    """The mesh-partitioned enumerator records the same schema-complete
+    telemetry on every exit path (single-device mesh in-process; the
+    multi-device twins run in the subprocess sweep below)."""
+    from repro.core.distributed import device_mesh
+
+    mesh = device_mesh()
+    n_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    g = random_labeled_graph(_V, _E, _L, n_edge_labels=_EL, seed=7)
+
+    # all-pruned inside the enumerator: empty result, full schema
+    q_dead = build_graph(3, [97, 98, 99], [(0, 1), (1, 2)])
+    report: dict = {}
+    emb = sharded_device_join_search(
+        g, q_dead, label_candidates(g, q_dead), mesh=mesh, report=report)
+    assert emb.shape == (0, 3)
+    assert set(report) == set(empty_enum_report())
+    assert report["enum_shards"] == n_shards
+    assert report["host_levels"] == 0
+
+    # filter-killed through the meshed engine: verbatim zeroed schema
+    _, stats = SubgraphQueryEngine(
+        g, mesh=mesh, enumerator="device").query(q_dead)
+    assert stats.extras["enum"] == empty_enum_report()
+
+    # single-vertex query: the join loop never runs, shard fields filled
+    lab = int(np.asarray(g.vlabels)[0])
+    q1 = build_graph(1, [lab], np.zeros((0, 2), np.int64))
+    report = {}
+    emb = sharded_device_join_search(
+        g, q1, label_candidates(g, q1), mesh=mesh, report=report)
+    assert emb.shape[0] > 0
+    assert set(report) == set(empty_enum_report())
+    assert report["device_rounds"] == 0
+    assert report["enum_shards"] == n_shards
+    assert report["max_table_rows"] == emb.shape[0]
 
 
 def _star_graph(k: int, edge_label: int = 0):
@@ -465,3 +536,117 @@ def test_single_vertex_query():
     for name, emb in _all_engine_results(g, q, max_embeddings=2).items():
         assert emb.shape[0] == min(2, len(truth)), name
         assert emb_set(emb) <= truth, name
+
+
+# ---------------------------------------------------------------------------
+# mesh-partitioned enumeration at real shard counts (subprocess sweep)
+# ---------------------------------------------------------------------------
+
+
+def _run_forced_devices(script: str, n_devices: int, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices}"
+    )
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# bit-parity of the partitioned enumerator against the single-device
+# two-phase join at a *real* shard count: random workload (rebalancer
+# forced on with a low threshold), max_embeddings truncation prefixes,
+# all-pruned and single-vertex corners, and a mutating-store service whose
+# meshed finalize must match the unmeshed one per pinned epoch.
+_SHARDED_ENUM_SCRIPT = """
+import numpy as np, jax
+from repro.graphs import GraphStore, random_labeled_graph, random_walk_query
+from repro.graphs.csr import build_graph
+from repro.core import (SubgraphQueryEngine, device_join_search,
+                        empty_enum_report, sharded_device_join_search)
+from repro.core.incremental import IncrementalIndex
+from repro.core.distributed import device_mesh
+from repro.serve import GraphQueryService, GraphServiceConfig
+
+D = len(jax.devices())
+mesh = device_mesh(D)
+
+def label_cands(g, q):
+    vg, vq = np.asarray(g.vlabels), np.asarray(q.vlabels)
+    return vg[:, None] == vq[None, :]
+
+# random workload: full-table and truncation-prefix bit-parity
+g = random_labeled_graph(48, 150, 3, n_edge_labels=2, seed=5)
+q = random_walk_query(g, 4, seed=9)
+cand = label_cands(g, q)
+ref = device_join_search(g, q, cand)
+rep = {}
+sh = sharded_device_join_search(g, q, cand, mesh=mesh, report=rep,
+                                rebalance_threshold=1.05)
+assert np.array_equal(ref, sh), "row-order parity broke"
+assert rep["enum_shards"] == D and rep["host_levels"] == 0
+assert set(rep) == set(empty_enum_report())
+total = ref.shape[0]
+assert total > 0
+for cap in (1, max(1, total // 2), total, total + 3):
+    a = device_join_search(g, q, cand, max_embeddings=cap)
+    b = sharded_device_join_search(g, q, cand, mesh=mesh,
+                                   max_embeddings=cap,
+                                   rebalance_threshold=1.05)
+    assert np.array_equal(a, b), ("truncation parity", cap)
+
+# all-pruned corner: empty result + schema-complete telemetry
+q_dead = build_graph(3, [97, 98, 99], [(0, 1), (1, 2)])
+rep = {}
+emb = sharded_device_join_search(g, q_dead, label_cands(g, q_dead),
+                                 mesh=mesh, report=rep)
+assert emb.shape == (0, 3) and rep["enum_shards"] == D
+
+# single-vertex corner: seed table is the answer, truncation included
+lab = int(np.asarray(g.vlabels)[0])
+q1 = build_graph(1, [lab], np.zeros((0, 2), np.int64))
+for cap in (None, 2):
+    a = device_join_search(g, q1, label_cands(g, q1), max_embeddings=cap)
+    b = sharded_device_join_search(g, q1, label_cands(g, q1), mesh=mesh,
+                                   max_embeddings=cap)
+    assert np.array_equal(a, b), ("single-vertex", cap)
+
+# mutating-store service: meshed finalize enumerates each request against
+# its pinned epoch snapshot, matching the unmeshed service bit-for-bit
+g2 = random_labeled_graph(60, 160, 3, n_edge_labels=2, seed=21)
+queries = [random_walk_query(g2, 4, sparse=bool(i % 2), seed=30 + i)
+           for i in range(3)]
+
+def run(mesh_arg):
+    store = GraphStore.from_graph(g2, degree_cap=64)
+    store.attach_index(IncrementalIndex())
+    svc = GraphQueryService(store, GraphServiceConfig(
+        max_slots=2, max_query_vertices=8, max_query_labels=8,
+        enumerator="device", mesh=mesh_arg,
+    ))
+    rids = [svc.submit(qq) for qq in queries]
+    done = {rid: emb for rid, emb, _ in svc.tick()}  # pins epoch 0
+    svc.add_edges([[i, (i + 11) % 60] for i in range(0, 20, 2)])
+    done.update((rid, emb) for rid, emb, _ in svc.run_to_completion())
+    assert sorted(done) == sorted(rids)
+    return [done[r] for r in rids]
+
+for a, b in zip(run(None), run(mesh)):
+    np.testing.assert_array_equal(a, b)
+print("OK D=%d" % D)
+"""
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_sharded_enum_parity_forced_devices(n_devices):
+    out = _run_forced_devices(_SHARDED_ENUM_SCRIPT, n_devices)
+    assert f"OK D={n_devices}" in out
