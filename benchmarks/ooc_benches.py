@@ -1,0 +1,185 @@
+"""Out-of-core disk tier vs the in-memory engine (graphs/ooc.py, §14).
+
+Two regimes:
+
+* **overlap** — a graph that would comfortably fit in memory, queried
+  through both tiers.  This prices the disk tier's overhead (restricted
+  fetch + cache) when it buys nothing, and hard-asserts bit parity across
+  every enumeration path (including a ``max_embeddings`` truncation prefix)
+  — the canary CI runs on every push.
+* **big** — a chunk directory ~10-20x the resident chunk-cache budget,
+  streamed to disk without ever materializing the edge table, carrying a
+  rare-label region.  The prefiltered query must touch a strict subset of
+  chunks and keep the cache under its byte cap; the row's ``derived``
+  column records chunks_read/n_chunks, bytes_read, cache hits, and the
+  cache high-water mark against the budget.
+
+Rows:
+    ooc/query_mem      — engine query, in-memory GraphStore snapshot
+    ooc/query_ooc      — same query, OutOfCoreGraphStore snapshot
+    ooc/parity         — hard bit-parity canary (asserts; derived=ok)
+    ooc/big_query      — prefiltered query over the over-budget graph
+    ooc/big_telemetry  — chunk/cache counters of one cold-cache query
+
+``run_all(smoke=True)`` shrinks both regimes to CI-sized canaries with the
+same hard asserts.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BatchQueryEngine, SubgraphQueryEngine
+from repro.core.incremental import IncrementalIndex
+from repro.graphs import (
+    GraphStore,
+    OutOfCoreGraphStore,
+    random_labeled_graph,
+    random_walk_query,
+)
+from repro.graphs.csr import build_graph
+from repro.graphs.io import ChunkDirWriter
+
+
+def _bench(fn, *, reps: int, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    return min(
+        (lambda t0: (fn(), time.perf_counter() - t0)[1])(time.perf_counter())
+        for _ in range(reps)
+    )
+
+
+def bench_overlap_regime(rows: list, *, smoke: bool = False) -> None:
+    if smoke:
+        n_v, n_e, n_q, reps = 192, 520, 3, 1
+    else:
+        n_v, n_e, n_q, reps = 2048, 8192, 6, 3
+    g = random_labeled_graph(n_v, n_e, 4, n_edge_labels=2, seed=0)
+    queries = [random_walk_query(g, 4, sparse=bool(i % 2), seed=100 + i)
+               for i in range(n_q)]
+
+    mem = GraphStore.from_graph(g)
+    mem.attach_index(IncrementalIndex())
+    ooc = OutOfCoreGraphStore.from_graph(g, chunk_edges=256)
+    e_mem = SubgraphQueryEngine(mem.snapshot())
+    e_ooc = SubgraphQueryEngine(ooc.snapshot())
+
+    dt_mem = _bench(lambda: [e_mem.query(q) for q in queries], reps=reps)
+    dt_ooc = _bench(lambda: [e_ooc.query(q) for q in queries], reps=reps)
+    rows.append((f"ooc/query_mem_V={n_v}", dt_mem / n_q * 1e6,
+                 f"E={n_e};queries={n_q}"))
+    rows.append((f"ooc/query_ooc_V={n_v}", dt_ooc / n_q * 1e6,
+                 f"E={n_e};queries={n_q};"
+                 f"overhead={dt_ooc / max(dt_mem, 1e-12):.2f}x"))
+
+    # hard parity canary: every enumeration path, full + truncated tables
+    checked = 0
+    for q in queries:
+        for kw in ({"searcher": "dfs"}, {"searcher": "join"},
+                   {"enumerator": "device"}):
+            a = SubgraphQueryEngine(mem.snapshot(), **kw).query(q)[0]
+            b = SubgraphQueryEngine(ooc.snapshot(), **kw).query(q)[0]
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                f"OOC parity broke: {kw} on query {q.n_vertices}v"
+            )
+            checked += 1
+        cap = max(1, int(np.asarray(a).shape[0]) // 2)
+        am = BatchQueryEngine(mem.snapshot()).query_batch(
+            [q], max_embeddings=cap)[0][0]
+        ao = BatchQueryEngine(ooc.snapshot()).query_batch(
+            [q], max_embeddings=cap)[0][0]
+        assert np.array_equal(np.asarray(am), np.asarray(ao)), (
+            "OOC batch truncation parity broke"
+        )
+        checked += 1
+    rows.append(("ooc/parity", 0.0, f"ok;paths_checked={checked}"))
+
+
+def _stream_spine_graph(root: str, n_spine: int, chunk_edges: int):
+    """Stream a 2-spine path graph to a chunk dir; label 1 lives only on
+    vertices 0..9, so a label-1 query prunes to the first chunk."""
+    v = n_spine + 2
+    vlab = np.zeros(v, np.int64)
+    vlab[:10] = 1
+    w = ChunkDirWriter(os.path.join(root, "gen-00000"), v, vlab,
+                       chunk_edges=chunk_edges)
+    step = max(chunk_edges * 2, 8192)
+    for start in range(0, n_spine, step):
+        i = np.arange(start, min(start + step, n_spine), dtype=np.int64)
+        lo = np.repeat(i, 2)
+        hi = np.empty_like(lo)
+        hi[0::2] = i + 1
+        hi[1::2] = i + 2
+        w.add(lo, hi, np.zeros(lo.size, np.int64))
+    return w.close()
+
+
+def bench_big_graph(rows: list, *, smoke: bool = False) -> None:
+    if smoke:
+        n_spine, chunk_edges, budget, reps = 20_000, 512, 32 << 10, 1
+    else:
+        n_spine, chunk_edges, budget, reps = 450_000, 4096, 1 << 20, 3
+    root = tempfile.mkdtemp(prefix="ooc-bench-")
+    try:
+        manifest = _stream_spine_graph(root, n_spine, chunk_edges)
+        disk_bytes = 24 * manifest["n_records"]
+        assert disk_bytes >= 10 * budget, (disk_bytes, budget)
+
+        store = OutOfCoreGraphStore.open(root,
+                                         resident_budget_bytes=budget)
+        q = build_graph(3, [1, 1, 1], [(0, 1), (1, 2)])
+        eng = SubgraphQueryEngine(store.snapshot())
+
+        def one_query():
+            emb, stats = eng.query(q)
+            return emb, stats
+
+        dt = _bench(one_query, reps=reps)
+        emb, stats = one_query()
+        # one cold-cache pass so the telemetry row reports real disk reads
+        store.cache.drop_generation(store.generation)
+        _, cold_stats = eng.query(q)
+        tel = cold_stats.extras["ooc"]
+        cache = store.cache
+
+        assert emb.shape[0] > 0
+        assert tel["chunks_read"] < tel["n_chunks"], tel
+        assert cache.peak_resident_bytes <= budget + chunk_edges * 24
+
+        rows.append((
+            f"ooc/big_query_E={manifest['n_records']}",
+            dt * 1e6,
+            f"disk_mb={disk_bytes / 2 ** 20:.1f};"
+            f"budget_mb={budget / 2 ** 20:.2f};"
+            f"ratio={disk_bytes / budget:.0f}x",
+        ))
+        rows.append((
+            "ooc/big_telemetry",
+            tel["fetch_seconds"] * 1e6,
+            f"chunks={tel['chunks_read']}/{tel['n_chunks']};"
+            f"bytes_read={tel['bytes_read']};"
+            f"cache_hits={tel['cache_hits']};"
+            f"peak_resident={cache.peak_resident_bytes};"
+            f"budget={budget}",
+        ))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run_all(*, smoke: bool = False):
+    rows: list = []
+    bench_overlap_regime(rows, smoke=smoke)
+    bench_big_graph(rows, smoke=smoke)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run_all(smoke=True):
+        print(f"{name},{us:.1f},{derived}")

@@ -17,12 +17,16 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
     shard    — vertex-partitioned engine scaling across 1/2/4 devices
                (each device count in a subprocess with
                ``--xla_force_host_platform_device_count``)
+    ooc      — out-of-core disk tier vs the in-memory engine: overlap
+               regime with a hard bit-parity canary, plus a graph ~10-20x
+               the resident chunk-cache budget (prefiltered chunk access,
+               cache high-water vs cap in the derived column)
     kernels  — kernel-path microbenchmarks
     roofline — derived terms from the dry-run artifacts (if present)
 
 ``--smoke`` shrinks the selected sections to tiny regression canaries for
-CI (``--smoke`` alone = batch + update + planner + enum canaries on every
-push — the enum canary hard-asserts bit parity and host_levels == 0; the
+CI (``--smoke`` alone = batch + update + planner + enum + ooc canaries on
+every push — the enum canary hard-asserts bit parity and host_levels == 0; the
 shard canary runs as its own CI step via ``--section shard --smoke``, and
 enum also keeps a dedicated step for its per-phase JSON artifact).
 ``--json PATH`` additionally writes the emitted rows as a JSON list —
@@ -49,7 +53,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "graph", "batch", "update", "planner",
-                             "enum", "shard", "kernels", "roofline"])
+                             "enum", "ooc", "shard", "kernels", "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny canary benches only (CI jit-regression check)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -74,6 +78,10 @@ def main() -> None:
             from benchmarks.enum_benches import run_all as enum_all
 
             _emit(enum_all(smoke=True))
+        if args.section in ("all", "ooc"):
+            from benchmarks.ooc_benches import run_all as ooc_all
+
+            _emit(ooc_all(smoke=True))
         if args.section == "shard":  # opt-in: spawns one process per D
             from benchmarks.shard_benches import run_all as shard_all
 
@@ -96,6 +104,10 @@ def main() -> None:
         from benchmarks.enum_benches import run_all as enum_all
 
         _emit(enum_all())
+    if args.section in ("all", "ooc"):
+        from benchmarks.ooc_benches import run_all as ooc_all
+
+        _emit(ooc_all())
     if args.section in ("all", "shard"):
         from benchmarks.shard_benches import run_all as shard_all
 

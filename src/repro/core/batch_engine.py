@@ -303,6 +303,7 @@ class BatchQueryEngine:
         shard_axis: str = "data",
         planner=None,
         enumerator: str = "host",
+        d_max: int | None = None,
     ):
         from repro.graphs.store import as_snapshot
 
@@ -312,6 +313,18 @@ class BatchQueryEngine:
         self.data = snap.graph
         self.epoch = snap.epoch
         self._index = snap.index
+        self._ooc = getattr(snap, "ooc", None)
+        if self._ooc is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "out-of-core stores run single-host; build the batch "
+                    "engine without mesh="
+                )
+            if self._index is None:
+                raise ValueError(
+                    "OutOfCoreGraphStore needs an attached incremental "
+                    "index — its digests drive the chunk prefilter"
+                )
         self._host_data = to_host(snap.graph)  # search re-reads fields often
         self.filter_variant = filter_variant
         self.khop = khop
@@ -319,7 +332,16 @@ class BatchQueryEngine:
         self.search_vertex_cap = search_vertex_cap
         self.max_batch = max_batch
         self.max_iters = max_iters
-        self.d_max = max(1, max_degree(self.data))
+        # ``d_max`` override: the out-of-core path pins the digest bound to
+        # the *full* graph's resident max degree so bucket keys and CNI
+        # encodings match the in-memory engine bit-for-bit even though the
+        # engine only ever sees a restricted edge set
+        if d_max is not None:
+            self.d_max = int(d_max)
+        elif self._ooc is not None:
+            self.d_max = self._ooc.d_max
+        else:
+            self.d_max = max(1, max_degree(self.data))
         self.mesh = mesh
         self.shard_axis = shard_axis
         # one planner (hence one plan cache) across every chunk and batch:
@@ -360,6 +382,9 @@ class BatchQueryEngine:
         # one host copy per query up front: every later stage (bucketing,
         # digest prep, search) reads fields repeatedly on the host
         queries = [to_host(q) for q in queries]
+        if self._ooc is not None:
+            return self._query_batch_ooc(queries,
+                                         max_embeddings=max_embeddings)
         results: list = [None] * len(queries)
         buckets: dict[tuple[int, int, int], list[int]] = defaultdict(list)
         for i, q in enumerate(queries):
@@ -380,6 +405,43 @@ class BatchQueryEngine:
                     d_max=d_max, l_pad=l_pad, u_pad=u_pad, max_p=max_p,
                     max_embeddings=max_embeddings,
                 )
+        return results
+
+    def _query_batch_ooc(self, queries, *, max_embeddings):
+        """One chunk fetch for the whole batch, then the standard path.
+
+        The union of the per-query digest prefilters bounds every query's
+        fixed point (each row's alive mask only shrinks from its own sound
+        seed), so a single restricted fetch covers the entire batch; an
+        inner engine over that restricted snapshot — pinned to the *full*
+        graph's ``d_max`` — then reproduces the in-memory batch results
+        bit-for-bit.  Fetch telemetry is attached to every result.
+        """
+        from repro.core.incremental import store_prefilter
+        from repro.graphs.store import GraphSnapshot
+
+        union = np.zeros(self.data.n_vertices, bool)
+        digest_cache: dict = {}
+        for q in queries:
+            union |= store_prefilter(self._index, q,
+                                     variant=self.filter_variant,
+                                     digest_cache=digest_cache)
+        restricted, tel = self._ooc.fetch_restricted(union)
+        inner = BatchQueryEngine(
+            GraphSnapshot(self.epoch, restricted, self._index),
+            filter_variant=self.filter_variant,
+            khop=self.khop,
+            searcher=self.searcher,
+            search_vertex_cap=self.search_vertex_cap,
+            max_batch=self.max_batch,
+            max_iters=self.max_iters,
+            planner=self.planner,
+            enumerator=self.enumerator,
+            d_max=self.d_max,
+        )
+        results = inner.query_batch(queries, max_embeddings=max_embeddings)
+        for _emb, stats in results:
+            stats.extras["ooc"] = tel
         return results
 
     def _run_chunk(self, queries, chunk, results, *, d_max, l_pad, u_pad,

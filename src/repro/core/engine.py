@@ -207,6 +207,19 @@ class SubgraphQueryEngine:
         self.data = snap.graph
         self.epoch = snap.epoch
         self._index = snap.index
+        self._ooc = getattr(snap, "ooc", None)
+        if self._ooc is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "out-of-core stores run single-host (resident digests + "
+                    "chunk fetch); build the engine without mesh="
+                )
+            if self._index is None:
+                raise ValueError(
+                    "OutOfCoreGraphStore needs an attached incremental "
+                    "index — its digests drive the chunk prefilter "
+                    "(construct the store with index='auto')"
+                )
         self._host_data = to_host(snap.graph)  # search re-reads fields often
         self.filter_variant = filter_variant
         self.khop = khop
@@ -227,6 +240,8 @@ class SubgraphQueryEngine:
 
     def query(self, q: Graph, *, max_embeddings: int | None = None):
         """Returns (embeddings (M, |V(Q)|) int64 over original ids, stats)."""
+        if self._ooc is not None:
+            return self._query_ooc(q, max_embeddings=max_embeddings)
         stats = QueryStats(vertices_before=self.data.n_vertices)
         t0 = time.perf_counter()
         alive0 = None
@@ -265,5 +280,45 @@ class SubgraphQueryEngine:
             enumerator=self.enumerator,
             mesh=self.mesh,
             shard_axis=self.shard_axis,
+        )
+        return emb, stats
+
+    def _query_ooc(self, q: Graph, *, max_embeddings: int | None):
+        """Digest-prefilter first, then fetch only intersecting edge chunks.
+
+        Bit-identical to the in-memory engine at the same epoch: the
+        restricted graph contains every edge with both endpoints in the
+        (sound) prefilter mask, each ILGF round masks counts by the current
+        alive set at both endpoints, and ``d_max`` is pinned to the store's
+        resident full-graph bound — so the fixed point, the candidate
+        columns, and the enumeration inputs all match exactly.  Chunk-level
+        IO telemetry lands in ``stats.extras["ooc"]``.
+        """
+        from repro.core.incremental import store_prefilter
+
+        stats = QueryStats(vertices_before=self.data.n_vertices)
+        t0 = time.perf_counter()
+        alive0 = store_prefilter(self._index, to_host(q),
+                                 variant=self.filter_variant)
+        stats.extras["store_prefilter_alive"] = int(alive0.sum())
+        restricted, tel = self._ooc.fetch_restricted(alive0)
+        stats.extras["ooc"] = tel
+        res = ilgf(restricted, q, variant=self.filter_variant,
+                   alive0=alive0, d_max=self._ooc.d_max)
+        alive = np.asarray(res.alive)
+        stats.ilgf_iterations = int(res.iterations)
+        stats.filter_seconds = time.perf_counter() - t0
+        emb = search_filtered(
+            to_host(restricted),
+            q,
+            alive,
+            np.asarray(res.candidates),
+            stats,
+            khop=self.khop,
+            searcher=self.searcher,
+            search_vertex_cap=self.search_vertex_cap,
+            max_embeddings=max_embeddings,
+            planner=self.planner,
+            enumerator=self.enumerator,
         )
         return emb, stats

@@ -127,11 +127,16 @@ class IncrementalIndex:
         self.max_p = default_max_p(self.d_max, lu)
         self._col = {int(l): i for i, l in enumerate(self.universe)}
         counts = np.zeros((v, lu), np.int32)
-        lo, hi, _lab = store.alive_edges()
-        if lo.size:
-            col_of = np.searchsorted(self.universe, self.vlabels)
-            np.add.at(counts, (lo, col_of[hi]), 1)
-            np.add.at(counts, (hi, col_of[lo]), 1)
+        col_of = np.searchsorted(self.universe, self.vlabels)
+        # stores with a disk-resident edge table (graphs/ooc.py) stream the
+        # build chunk by chunk — counts accumulate identically, but the full
+        # edge list is never materialized in memory
+        chunks = getattr(store, "iter_alive_edge_chunks", None)
+        blocks = chunks() if chunks is not None else [store.alive_edges()]
+        for lo, hi, _lab in blocks:
+            if lo.size:
+                np.add.at(counts, (lo, col_of[hi]), 1)
+                np.add.at(counts, (hi, col_of[lo]), 1)
         self.counts = counts
         self._encode_all()
         # planner statistics ride along: label histogram is static (the

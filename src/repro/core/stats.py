@@ -96,23 +96,32 @@ class GraphStats:
 
     @classmethod
     def from_store(cls, store, *, rebucket_frac: float = 0.25) -> "GraphStats":
-        """Scratch build from a store's alive edge set, at its epoch."""
+        """Scratch build from a store's alive edge set, at its epoch.
+
+        Streams ``iter_alive_edge_chunks`` when the store offers it (the
+        out-of-core tier, graphs/ooc.py) so the edge table is never
+        materialized; the accumulated aggregates are identical.
+        """
         vlab = np.asarray(store.vlabels)
-        lo, hi, _lab = store.alive_edges()
         universe = np.unique(vlab)
         col = np.searchsorted(universe, vlab)
         lu = int(universe.size)
         hist = np.bincount(col, minlength=lu).astype(np.int64)
         pair = np.zeros((lu, lu), dtype=np.int64)
         deg_sum = np.zeros(lu, dtype=np.int64)
-        if lo.size:
-            np.add.at(pair, (col[lo], col[hi]), 1)
-            np.add.at(pair, (col[hi], col[lo]), 1)
-            np.add.at(deg_sum, col[lo], 1)
-            np.add.at(deg_sum, col[hi], 1)
+        n_edges = 0
+        chunks = getattr(store, "iter_alive_edge_chunks", None)
+        blocks = chunks() if chunks is not None else [store.alive_edges()]
+        for lo, hi, _lab in blocks:
+            if lo.size:
+                np.add.at(pair, (col[lo], col[hi]), 1)
+                np.add.at(pair, (col[hi], col[lo]), 1)
+                np.add.at(deg_sum, col[lo], 1)
+                np.add.at(deg_sum, col[hi], 1)
+                n_edges += int(lo.size)
         return cls(
             universe, hist, deg_sum, pair,
-            n_vertices=int(vlab.size), n_edges=int(lo.size),
+            n_vertices=int(vlab.size), n_edges=n_edges,
             version=int(store.epoch), rebucket_frac=rebucket_frac,
         )
 

@@ -15,11 +15,17 @@ from repro.graphs.generators import (
 )
 from repro.graphs.datasets import paper_dataset, PAPER_DATASETS
 from repro.graphs.io import (
+    ChunkDirWriter,
+    ChunkIOError,
+    load_manifest,
+    read_chunk,
+    write_chunk_dir,
     write_edge_file,
     stream_edge_chunks,
     read_edge_file,
     iter_update_batches,
 )
+from repro.graphs.ooc import ChunkCache, OocSnapshot, OutOfCoreGraphStore
 from repro.graphs.store import (
     EdgeBatch,
     GraphSnapshot,
@@ -55,4 +61,12 @@ __all__ = [
     "write_edge_file",
     "stream_edge_chunks",
     "read_edge_file",
+    "ChunkDirWriter",
+    "ChunkIOError",
+    "ChunkCache",
+    "OocSnapshot",
+    "OutOfCoreGraphStore",
+    "load_manifest",
+    "read_chunk",
+    "write_chunk_dir",
 ]

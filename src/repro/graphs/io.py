@@ -4,10 +4,20 @@ A data graph on disk is a sequence of ``src dst elabel`` records.  The stream
 reader yields fixed-size chunks so the filtering scan (core/stream.py) sees
 exactly the access pattern of the paper's Algorithm 6: one sequential pass,
 no random access, bounded memory.
+
+The second half of this module is the **chunk directory** — the random-access
+on-disk format behind ``graphs/ooc.py::OutOfCoreGraphStore`` (DESIGN.md §14):
+the canonical (lo < hi) edge table sorted by ``(lo, hi)`` and split into
+fixed-size chunk files, each carrying a self-describing header with its
+vertex-range bounds, plus a JSON manifest that doubles as the interval index
+the CNI prefilter prunes against.  Every read path validates byte counts and
+headers against the manifest and raises the typed ``ChunkIOError`` on any
+mismatch — the disk tier fails closed, never with a silently wrong edge set.
 """
 
 from __future__ import annotations
 
+import json
 import os
 from typing import Iterator
 
@@ -16,6 +26,48 @@ import numpy as np
 from repro.graphs.csr import Graph
 
 _HEADER_DTYPE = np.int64
+
+
+class ChunkIOError(RuntimeError):
+    """On-disk graph data failed validation (truncated, corrupt, missing).
+
+    Raised by every disk-tier read path — edge files and chunk directories
+    alike — whenever the bytes on disk do not match what their header or
+    manifest promises.  Callers holding epoch pins release them on the way
+    out (serve/graph_service.py), so the store stays recoverable.
+    """
+
+
+def _read_edge_header(path: str) -> tuple[int, int]:
+    """Validated ``(n_vertices, n_records)`` from an edge-file header.
+
+    The int64 header used to be trusted outright; a truncated or corrupted
+    file then yielded short reads that numpy silently reshaped into a wrong
+    (smaller) edge set.  Validate against the actual byte count instead.
+    """
+    try:
+        size = os.path.getsize(path)
+    except OSError as e:
+        raise ChunkIOError(f"edge file missing or unreadable: {path}") from e
+    if size < 16:
+        raise ChunkIOError(
+            f"edge file {path} has {size} bytes — too short for a header"
+        )
+    with open(path, "rb") as f:
+        header = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
+    n_v, n_rec = int(header[0]), int(header[1])
+    if n_v < 0 or n_rec < 0:
+        raise ChunkIOError(
+            f"edge file {path} header is corrupt: "
+            f"n_vertices={n_v}, n_records={n_rec}"
+        )
+    expect = 16 + 8 * n_v + 24 * n_rec
+    if size != expect:
+        raise ChunkIOError(
+            f"edge file {path} is {size} bytes but its header "
+            f"(n_vertices={n_v}, n_records={n_rec}) requires {expect}"
+        )
+    return n_v, n_rec
 
 
 def write_edge_file(path: str, g: Graph, *, sorted_by_src: bool = True) -> None:
@@ -36,10 +88,11 @@ def write_edge_file(path: str, g: Graph, *, sorted_by_src: bool = True) -> None:
 
 
 def read_edge_file(path: str) -> Graph:
+    n_v, n_rec = _read_edge_header(path)
     with open(path, "rb") as f:
-        n_v, n_rec = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
-        vlab = np.fromfile(f, dtype=np.int64, count=int(n_v))
-        rec = np.fromfile(f, dtype=np.int64, count=int(n_rec) * 3).reshape(-1, 3)
+        f.seek(16)
+        vlab = np.fromfile(f, dtype=np.int64, count=n_v)
+        rec = np.fromfile(f, dtype=np.int64, count=n_rec * 3).reshape(-1, 3)
     import jax.numpy as jnp
 
     return Graph(
@@ -58,11 +111,11 @@ def stream_edge_chunks(
     The last chunk is padded (valid=0 rows) so downstream jitted scans see a
     fixed shape.  One sequential pass over the file; O(chunk) memory.
     """
+    n_v, n_rec = _read_edge_header(path)
     with open(path, "rb") as f:
-        n_v, n_rec = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
-        # skip the label block
-        f.seek(int(n_v) * 8, os.SEEK_CUR)
-        remaining = int(n_rec)
+        # skip the header + label block
+        f.seek(16 + n_v * 8)
+        remaining = n_rec
         while remaining > 0:
             take = min(chunk_edges, remaining)
             rec = np.fromfile(f, dtype=np.int64, count=take * 3).reshape(-1, 3)
@@ -81,9 +134,10 @@ def stream_edge_chunks(
 
 
 def read_vertex_labels(path: str) -> np.ndarray:
+    n_v, _ = _read_edge_header(path)
     with open(path, "rb") as f:
-        n_v, _ = np.fromfile(f, dtype=_HEADER_DTYPE, count=2)
-        return np.fromfile(f, dtype=np.int64, count=int(n_v)).astype(np.int32)
+        f.seek(16)
+        return np.fromfile(f, dtype=np.int64, count=n_v).astype(np.int32)
 
 
 def iter_update_batches(source, chunk_edges: int):
@@ -145,3 +199,229 @@ def iter_update_batches(source, chunk_edges: int):
                 np.asarray(valid, dtype=bool),
                 np.ones(np.asarray(s).shape[0], dtype=bool),
             )
+
+
+# ---------------------------------------------------------------------------
+# Chunk directory: the out-of-core store's on-disk edge table (DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+MANIFEST_NAME = "manifest.json"
+_CHUNK_MAGIC = 0x434E4943  # "CNIC"
+_CHUNK_HEADER_BYTES = 6 * 8  # magic, n_records, lo_min, lo_max, hi_min, hi_max
+_REC_BYTES = 3 * 8           # (lo, hi, elabel) int64
+
+
+class ChunkDirWriter:
+    """Stream globally-(lo, hi)-sorted canonical edge records into a chunk
+    directory: ``chunk_%05d.bin`` files of ``chunk_edges`` records each, plus
+    ``vlabels.bin``, ``degrees.bin`` and the JSON manifest.
+
+    ``add`` accepts pre-sorted blocks of any size (O(block) memory — callers
+    can build multi-GB tables without materializing them); sortedness across
+    calls is validated because the manifest's per-chunk key ranges double as
+    the binary-search index for point probes.  Duplicate keys are a caller
+    bug and rejected.
+    """
+
+    def __init__(self, path: str, n_vertices: int, vlabels, *,
+                 chunk_edges: int = 4096):
+        if chunk_edges <= 0:
+            raise ValueError(f"chunk_edges must be positive, got {chunk_edges}")
+        os.makedirs(path, exist_ok=True)
+        self.path = path
+        self.n_vertices = int(n_vertices)
+        self.chunk_edges = int(chunk_edges)
+        self._vlabels = np.asarray(vlabels, dtype=np.int64)
+        assert self._vlabels.shape == (self.n_vertices,)
+        self._degrees = np.zeros(self.n_vertices, dtype=np.int64)
+        self._pending: list[np.ndarray] = []
+        self._n_pending = 0
+        self._entries: list[dict] = []
+        self._last_key = (-1, -1)
+        self._closed = False
+
+    def add(self, lo, hi, lab) -> None:
+        lo = np.asarray(lo, dtype=np.int64)
+        hi = np.asarray(hi, dtype=np.int64)
+        lab = np.asarray(lab, dtype=np.int64)
+        if lo.size == 0:
+            return
+        if lo.min() < 0 or hi.max() >= self.n_vertices or (lo >= hi).any():
+            raise ValueError("records must be canonical: 0 <= lo < hi < V")
+        key = lo * np.int64(self.n_vertices) + hi
+        if (np.diff(key) <= 0).any() or (
+            int(lo[0]), int(hi[0])
+        ) <= self._last_key:
+            raise ValueError(
+                "chunk-dir records must be strictly increasing by (lo, hi) "
+                "across all add() calls"
+            )
+        self._last_key = (int(lo[-1]), int(hi[-1]))
+        np.add.at(self._degrees, lo, 1)
+        np.add.at(self._degrees, hi, 1)
+        self._pending.append(np.stack([lo, hi, lab], axis=1))
+        self._n_pending += lo.size
+        while self._n_pending >= self.chunk_edges:
+            buf = np.concatenate(self._pending, axis=0)
+            self._write_chunk(buf[: self.chunk_edges])
+            rest = buf[self.chunk_edges:]
+            self._pending = [rest] if rest.size else []
+            self._n_pending = rest.shape[0]
+
+    def _write_chunk(self, rec: np.ndarray) -> None:
+        cid = len(self._entries)
+        name = f"chunk_{cid:05d}.bin"
+        header = np.array(
+            [_CHUNK_MAGIC, rec.shape[0],
+             rec[0, 0], rec[-1, 0],
+             rec[:, 1].min(), rec[:, 1].max()],
+            dtype=np.int64,
+        )
+        with open(os.path.join(self.path, name), "wb") as f:
+            header.tofile(f)
+            rec.tofile(f)
+        self._entries.append({
+            "file": name,
+            "n_records": int(rec.shape[0]),
+            "lo_min": int(rec[0, 0]),
+            "lo_max": int(rec[-1, 0]),
+            "hi_min": int(rec[:, 1].min()),
+            "hi_max": int(rec[:, 1].max()),
+            # first/last full (lo, hi) keys: the point-probe binary search
+            "hi_first": int(rec[0, 1]),
+            "hi_last": int(rec[-1, 1]),
+        })
+
+    def close(self) -> dict:
+        """Flush the tail chunk and write sidecars + manifest; returns it."""
+        if self._closed:
+            raise RuntimeError("ChunkDirWriter already closed")
+        self._closed = True
+        if self._n_pending:
+            self._write_chunk(np.concatenate(self._pending, axis=0))
+            self._pending = []
+            self._n_pending = 0
+        self._vlabels.tofile(os.path.join(self.path, "vlabels.bin"))
+        self._degrees.tofile(os.path.join(self.path, "degrees.bin"))
+        manifest = {
+            "version": 1,
+            "n_vertices": self.n_vertices,
+            "chunk_edges": self.chunk_edges,
+            "n_records": int(sum(e["n_records"] for e in self._entries)),
+            "chunks": self._entries,
+        }
+        tmp = os.path.join(self.path, MANIFEST_NAME + ".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, os.path.join(self.path, MANIFEST_NAME))
+        return manifest
+
+
+def write_chunk_dir(path: str, n_vertices: int, vlabels, lo, hi, lab, *,
+                    chunk_edges: int = 4096) -> dict:
+    """One-shot chunk directory from in-memory canonical records.
+
+    Sorts by ``(lo, hi)`` (the writer's required order) first; use
+    ``ChunkDirWriter`` directly for tables too large to materialize.
+    """
+    lo = np.asarray(lo, dtype=np.int64)
+    hi = np.asarray(hi, dtype=np.int64)
+    lab = np.asarray(lab, dtype=np.int64)
+    order = np.lexsort((hi, lo))
+    w = ChunkDirWriter(path, n_vertices, vlabels, chunk_edges=chunk_edges)
+    w.add(lo[order], hi[order], lab[order])
+    return w.close()
+
+
+def load_manifest(path: str) -> dict:
+    """Parse + structurally validate a chunk directory's manifest."""
+    mpath = os.path.join(path, MANIFEST_NAME)
+    try:
+        with open(mpath, "r", encoding="utf-8") as f:
+            manifest = json.load(f)
+    except OSError as e:
+        raise ChunkIOError(f"chunk directory {path} has no manifest") from e
+    except json.JSONDecodeError as e:
+        raise ChunkIOError(f"manifest {mpath} is not valid JSON") from e
+    for field in ("version", "n_vertices", "chunk_edges", "n_records",
+                  "chunks"):
+        if field not in manifest:
+            raise ChunkIOError(f"manifest {mpath} is missing field {field!r}")
+    for entry in manifest["chunks"]:
+        for field in ("file", "n_records", "lo_min", "lo_max",
+                      "hi_min", "hi_max", "hi_first", "hi_last"):
+            if field not in entry:
+                raise ChunkIOError(
+                    f"manifest {mpath} chunk entry is missing {field!r}"
+                )
+    return manifest
+
+
+def load_chunk_sidecars(path: str, n_vertices: int):
+    """``(vlabels (V,) int32, degrees (V,) int64)`` with size validation."""
+    out = []
+    for name, dtype in (("vlabels.bin", np.int32), ("degrees.bin", np.int64)):
+        fp = os.path.join(path, name)
+        try:
+            size = os.path.getsize(fp)
+        except OSError as e:
+            raise ChunkIOError(f"chunk directory {path} missing {name}") from e
+        if size != n_vertices * 8:
+            raise ChunkIOError(
+                f"{fp} is {size} bytes, expected {n_vertices * 8} "
+                f"(n_vertices={n_vertices})"
+            )
+        out.append(np.fromfile(fp, dtype=np.int64).astype(dtype))
+    return out[0], out[1]
+
+
+def read_chunk(path: str, entry: dict, n_vertices: int) -> np.ndarray:
+    """Read + validate one chunk: ``(n_records, 3)`` int64 ``(lo, hi, lab)``.
+
+    mmap-backed: the header is checked against both the manifest entry and
+    the actual file size before any record is trusted, then the record block
+    is copied out of the mapping (the LRU cache owns plain arrays, so the
+    resident budget accounting is exact).  Any mismatch — missing file,
+    truncation, bad magic, bounds drift, out-of-range endpoints — raises
+    ``ChunkIOError``.
+    """
+    fp = os.path.join(path, entry["file"])
+    n = int(entry["n_records"])
+    try:
+        size = os.path.getsize(fp)
+    except OSError as e:
+        raise ChunkIOError(
+            f"chunk file {fp} listed in the manifest is missing"
+        ) from e
+    expect = _CHUNK_HEADER_BYTES + n * _REC_BYTES
+    if size != expect:
+        raise ChunkIOError(
+            f"chunk file {fp} is {size} bytes but the manifest requires "
+            f"{expect} (n_records={n})"
+        )
+    try:
+        mm = np.memmap(fp, dtype=np.int64, mode="r")
+    except (OSError, ValueError) as e:
+        raise ChunkIOError(f"chunk file {fp} could not be mapped") from e
+    try:
+        header = np.asarray(mm[:6])
+        if int(header[0]) != _CHUNK_MAGIC:
+            raise ChunkIOError(f"chunk file {fp} has a corrupted header "
+                               f"(bad magic {int(header[0]):#x})")
+        if (int(header[1]) != n
+                or int(header[2]) != int(entry["lo_min"])
+                or int(header[3]) != int(entry["lo_max"])
+                or int(header[4]) != int(entry["hi_min"])
+                or int(header[5]) != int(entry["hi_max"])):
+            raise ChunkIOError(
+                f"chunk file {fp} header disagrees with the manifest entry"
+            )
+        rec = np.array(mm[6:]).reshape(n, 3)
+    finally:
+        del mm
+    if n and (rec[:, 0].min() < 0 or rec[:, 1].max() >= n_vertices
+              or (rec[:, 0] >= rec[:, 1]).any()):
+        raise ChunkIOError(
+            f"chunk file {fp} contains non-canonical or out-of-range records"
+        )
+    return rec

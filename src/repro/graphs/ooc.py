@@ -1,0 +1,598 @@
+"""Out-of-core graph store: resident digests, disk-resident edge table.
+
+``OutOfCoreGraphStore`` is the ``BaseGraphStore`` for graphs that do not fit
+in main memory — the deployment the paper's encoding exists for: the CNI
+digests, label counts, degrees and ``GraphStats`` stay resident (all O(V·L)),
+maintained incrementally by ``IncrementalIndex`` exactly as for the RAM
+stores, while the canonical edge table lives on disk as a **chunk directory**
+(graphs/io.py): ``(lo, hi, label)`` records sorted by ``(lo, hi)`` and split
+into fixed-size chunk files whose manifest doubles as an interval index.
+
+Query execution inverts the usual order of operations: the ILGF prefilter
+runs *first*, against the resident digests only (``store_prefilter``), and
+only then are edge chunks fetched — just the ones whose ``lo``/``hi`` vertex
+ranges intersect the surviving candidate set — through a byte-budgeted LRU
+``ChunkCache``.  The fetched *restricted* graph (every edge with both
+endpoints in the prefilter mask) then feeds the standard pipeline.  This is
+exact, not approximate: every ILGF round masks counts by the current alive
+set at both endpoints (core/labels.py), so an edge with a pruned endpoint
+never contributes — running the fixed point over the restricted graph from
+the same seed is bit-identical to running it over the full graph, and the
+final enumeration inputs (alive mask, candidates, induced edge set) are
+identical too.  The one parity condition is the digest table bound: the
+restricted graph's max degree may undershoot the full graph's, so engines
+pass the store's resident ``d_max`` explicitly.
+
+Mutations follow the LSM pattern: ``apply`` writes to a small resident
+**overlay** (inserts, re-labels, and tombstones keyed by ``(lo, hi)``);
+``compact()`` streams base chunks + sorted overlay through a merge into a
+new on-disk **generation**, O(chunk) memory.  Snapshots carry an
+``OocSnapshot`` handle (``GraphSnapshot.ooc``) that refcounts its
+generation: epoch pins therefore pin chunk *files* — a compaction between
+ticks never deletes a generation a pinned query still reads.
+
+Failure model: every disk read validates sizes and headers against the
+manifest and raises the typed ``ChunkIOError`` (graphs/io.py) — the tier
+fails closed, never with a silently wrong edge set.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import tempfile
+import time
+import weakref
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.graphs.csr import Graph, build_graph
+from repro.graphs.io import (
+    ChunkDirWriter,
+    ChunkIOError,
+    load_chunk_sidecars,
+    load_manifest,
+    read_chunk,
+)
+from repro.graphs.store import BaseGraphStore, GraphSnapshot
+
+_GEN_RE = re.compile(r"^gen-(\d{5})$")
+
+
+class ChunkCache:
+    """Byte-budgeted LRU over immutable chunk arrays, keyed (gen, chunk).
+
+    ``budget_bytes`` bounds the *resident* set of fetched edge data (the
+    digests and other O(V·L) state are accounted separately by callers).
+    A single chunk larger than the whole budget is still admitted — the
+    cache never holds fewer than one entry — so progress is always possible;
+    ``peak_resident_bytes`` records the high-water mark the telemetry and
+    the resident-set tests assert against.
+    """
+
+    def __init__(self, budget_bytes: int):
+        self.budget_bytes = int(budget_bytes)
+        self._entries: OrderedDict[tuple[int, int], np.ndarray] = OrderedDict()
+        self.resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self.accesses = 0
+        self.hits = 0
+        self.misses = 0
+        self.bytes_read = 0
+
+    def load(self, key: tuple[int, int], loader) -> np.ndarray:
+        self.accesses += 1
+        rec = self._entries.get(key)
+        if rec is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return rec
+        self.misses += 1
+        rec = loader()
+        self.bytes_read += rec.nbytes
+        self._entries[key] = rec
+        self.resident_bytes += rec.nbytes
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes)
+        while self.resident_bytes > self.budget_bytes and len(self._entries) > 1:
+            _, old = self._entries.popitem(last=False)
+            self.resident_bytes -= old.nbytes
+        return rec
+
+    def drop_generation(self, gen_id: int) -> None:
+        for key in [k for k in self._entries if k[0] == gen_id]:
+            self.resident_bytes -= self._entries.pop(key).nbytes
+
+    def counters(self) -> dict:
+        return {
+            "chunks_read": self.accesses,
+            "cache_hits": self.hits,
+            "cache_misses": self.misses,
+            "bytes_read": self.bytes_read,
+        }
+
+
+class _Generation:
+    """Immutable view over one on-disk generation (chunk directory)."""
+
+    def __init__(self, path: str, gen_id: int, manifest: dict,
+                 n_vertices: int):
+        self.path = path
+        self.gen_id = int(gen_id)
+        self.manifest = manifest
+        self.n_vertices = int(n_vertices)
+        self.entries = manifest["chunks"]
+        v = np.int64(self.n_vertices)
+        # lexicographic (lo, hi) key ranges per chunk: point-probe index
+        self._first_key = np.array(
+            [e["lo_min"] * v + e["hi_first"] for e in self.entries], np.int64
+        )
+        self._last_key = np.array(
+            [e["lo_max"] * v + e["hi_last"] for e in self.entries], np.int64
+        )
+        self.lo_min = np.array([e["lo_min"] for e in self.entries], np.int64)
+        self.lo_max = np.array([e["lo_max"] for e in self.entries], np.int64)
+        self.hi_min = np.array([e["hi_min"] for e in self.entries], np.int64)
+        self.hi_max = np.array([e["hi_max"] for e in self.entries], np.int64)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.entries)
+
+    @property
+    def n_records(self) -> int:
+        return int(self.manifest["n_records"])
+
+    def chunk(self, cid: int, cache: ChunkCache) -> np.ndarray:
+        return cache.load(
+            (self.gen_id, cid),
+            lambda: read_chunk(self.path, self.entries[cid], self.n_vertices),
+        )
+
+    def label_of(self, lo: int, hi: int, cache: ChunkCache):
+        """Base-table point probe: edge label, or None if absent."""
+        if not self.entries:
+            return None
+        key = np.int64(lo) * np.int64(self.n_vertices) + np.int64(hi)
+        cid = int(np.searchsorted(self._first_key, key, side="right")) - 1
+        if cid < 0 or key > self._last_key[cid]:
+            return None
+        rec = self.chunk(cid, cache)
+        keys = rec[:, 0] * np.int64(self.n_vertices) + rec[:, 1]
+        pos = int(np.searchsorted(keys, key))
+        if pos < keys.size and keys[pos] == key:
+            return int(rec[pos, 2])
+        return None
+
+
+class OocSnapshot:
+    """Frozen read handle over one epoch: generation + overlay copy.
+
+    Travels in ``GraphSnapshot.ooc``.  Holding it refcounts the generation
+    (the owning store will not delete its chunk files), which is what makes
+    epoch pinning pin *files*: a pinned query keeps reading exactly the
+    edge set it was admitted on, across compactions.
+    """
+
+    def __init__(self, *, base: _Generation, overlay: dict,
+                 cache: ChunkCache, n_vertices: int, vlabels: np.ndarray,
+                 d_max: int, epoch: int):
+        self.base = base
+        self.cache = cache
+        self.n_vertices = int(n_vertices)
+        self.vlabels = vlabels
+        self.d_max = int(d_max)
+        self.epoch = int(epoch)
+        v = np.int64(self.n_vertices)
+        ov_rows = sorted(
+            (int(lo), int(hi), lab) for (lo, hi), lab in overlay.items()
+        )
+        # every overlay key overrides (drops) its base record …
+        self._ov_keys = np.array(
+            [lo * v + hi for lo, hi, _ in ov_rows], np.int64
+        )
+        # … and the non-tombstone entries re-emit from the overlay side
+        self._ov_edges = np.array(
+            [[lo, hi, lab] for lo, hi, lab in ov_rows if lab is not None],
+            np.int64,
+        ).reshape(-1, 3)
+
+    @property
+    def n_chunks(self) -> int:
+        return self.base.n_chunks
+
+    def fetch_restricted(self, alive0) -> tuple[Graph, dict]:
+        """Edges with *both* endpoints in ``alive0``, as a full-V ``Graph``.
+
+        Chunk selection is interval pruning on the manifest: a chunk is
+        touched only when the alive set intersects both its ``lo`` and its
+        ``hi`` range.  Returns ``(graph, telemetry)`` — the telemetry dict
+        is what engines surface as ``stats.extras["ooc"]``.
+        """
+        t0 = time.perf_counter()
+        alive0 = np.asarray(alive0, dtype=bool)
+        if alive0.shape != (self.n_vertices,):
+            raise ValueError(
+                f"alive0 must be ({self.n_vertices},) bool, "
+                f"got shape {alive0.shape}"
+            )
+        before = self.cache.counters()
+        psum = np.zeros(self.n_vertices + 1, np.int64)
+        np.cumsum(alive0, out=psum[1:])
+        hit_lo = psum[self.base.lo_max + 1] > psum[self.base.lo_min]
+        hit_hi = psum[self.base.hi_max + 1] > psum[self.base.hi_min]
+        parts = []
+        for cid in np.nonzero(hit_lo & hit_hi)[0]:
+            rec = self.base.chunk(int(cid), self.cache)
+            keep = alive0[rec[:, 0]] & alive0[rec[:, 1]]
+            if self._ov_keys.size:
+                keys = rec[:, 0] * np.int64(self.n_vertices) + rec[:, 1]
+                pos = np.searchsorted(self._ov_keys, keys)
+                pos_c = np.minimum(pos, self._ov_keys.size - 1)
+                keep &= ~(self._ov_keys[pos_c] == keys)
+            if keep.any():
+                parts.append(rec[keep])
+        if self._ov_edges.shape[0]:
+            ov = self._ov_edges
+            keep = alive0[ov[:, 0]] & alive0[ov[:, 1]]
+            if keep.any():
+                parts.append(ov[keep])
+        rows = (np.concatenate(parts, axis=0) if parts
+                else np.zeros((0, 3), np.int64))
+        g = build_graph(self.n_vertices, self.vlabels, rows[:, :2], rows[:, 2])
+        after = self.cache.counters()
+        tel = {k: after[k] - before[k] for k in after}
+        tel.update(
+            n_chunks=self.base.n_chunks,
+            edges_fetched=int(rows.shape[0]),
+            peak_resident_bytes=self.cache.peak_resident_bytes,
+            resident_budget_bytes=self.cache.budget_bytes,
+            fetch_seconds=time.perf_counter() - t0,
+        )
+        return g, tel
+
+
+class OutOfCoreGraphStore(BaseGraphStore):
+    """Disk-backed ``BaseGraphStore``: same mutation/snapshot/pin contract
+    as ``GraphStore``, bit-identical query results, bounded resident edges.
+
+    ``storage_dir`` owns generations ``gen-00000``, ``gen-00001``, … (the
+    newest is live; older ones survive while a snapshot handle references
+    them).  Omitting it uses a private temp directory deleted with the
+    store.  ``resident_budget_bytes`` caps the chunk cache.  ``index``
+    (default ``"auto"``) attaches a fresh ``IncrementalIndex`` — the OOC
+    query path *requires* resident digests, so opting out (``index=None``)
+    is for storage-level tests only.
+    """
+
+    def __init__(self, n_vertices, vlabels, *, storage_dir: str | None = None,
+                 chunk_edges: int = 2048,
+                 resident_budget_bytes: int = 16 << 20,
+                 index="auto", **kwargs):
+        super().__init__(n_vertices, vlabels, **kwargs)
+        if storage_dir is None:
+            storage_dir = tempfile.mkdtemp(prefix="ooc-store-")
+            weakref.finalize(self, shutil.rmtree, storage_dir,
+                             ignore_errors=True)
+        self._root = storage_dir
+        self.chunk_edges = int(chunk_edges)
+        self.resident_budget_bytes = int(resident_budget_bytes)
+        self.cache = ChunkCache(resident_budget_bytes)
+        self._overlay: dict[tuple[int, int], int | None] = {}
+        self._gen_refs: dict[int, int] = {}
+        gens = self._list_generations()
+        if gens:
+            gen_id, gpath = gens[-1]
+            manifest = load_manifest(gpath)
+            if int(manifest["n_vertices"]) != self.n_vertices:
+                raise ChunkIOError(
+                    f"generation {gpath} has n_vertices="
+                    f"{manifest['n_vertices']}, store expects "
+                    f"{self.n_vertices}"
+                )
+            vlab_disk, deg = load_chunk_sidecars(gpath, self.n_vertices)
+            if not np.array_equal(vlab_disk, self.vlabels):
+                raise ChunkIOError(
+                    f"generation {gpath} vertex labels disagree with the "
+                    "store's"
+                )
+            self._deg = deg
+        else:
+            gen_id = 0
+            gpath = self._gen_path(0)
+            ChunkDirWriter(gpath, self.n_vertices, self.vlabels,
+                           chunk_edges=self.chunk_edges).close()
+            manifest = load_manifest(gpath)
+        self._base = _Generation(gpath, gen_id, manifest, self.n_vertices)
+        self._n_alive = self._base.n_records
+        if index == "auto":
+            from repro.core.incremental import IncrementalIndex
+
+            self.attach_index(IncrementalIndex())
+        elif index is not None:
+            self.attach_index(index)
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def open(cls, path: str, **kwargs):
+        """Open an existing store root (its newest generation)."""
+        gens = cls._scan_generations(path)
+        if not gens:
+            raise ChunkIOError(f"{path} contains no gen-NNNNN chunk directory")
+        gpath = gens[-1][1]
+        manifest = load_manifest(gpath)
+        n_vertices = int(manifest["n_vertices"])
+        vlab, _deg = load_chunk_sidecars(gpath, n_vertices)
+        kwargs.setdefault("chunk_edges", int(manifest["chunk_edges"]))
+        return cls(n_vertices, vlab, storage_dir=path, **kwargs)
+
+    @classmethod
+    def from_graph(cls, g: Graph, **kwargs):
+        """Seed from an immutable Graph; its edges become base generation 0."""
+        vlab = np.asarray(g.vlabels)
+        index = kwargs.pop("index", "auto")
+        store = cls(int(vlab.shape[0]), vlab, index=None, **kwargs)
+        src = np.asarray(g.src, dtype=np.int64)
+        dst = np.asarray(g.dst, dtype=np.int64)
+        keep = src < dst  # one canonical record per undirected edge
+        store._install_generation(
+            src[keep], dst[keep], np.asarray(g.elabels, dtype=np.int64)[keep]
+        )
+        if index == "auto":
+            from repro.core.incremental import IncrementalIndex
+
+            store.attach_index(IncrementalIndex())
+        elif index is not None:
+            store.attach_index(index)
+        return store
+
+    # -- generation plumbing --------------------------------------------------
+
+    def _gen_path(self, gen_id: int) -> str:
+        return os.path.join(self._root, f"gen-{gen_id:05d}")
+
+    @staticmethod
+    def _scan_generations(root: str) -> list[tuple[int, str]]:
+        out = []
+        if os.path.isdir(root):
+            for name in os.listdir(root):
+                m = _GEN_RE.match(name)
+                if m:
+                    out.append((int(m.group(1)), os.path.join(root, name)))
+        return sorted(out)
+
+    def _list_generations(self) -> list[tuple[int, str]]:
+        return self._scan_generations(self._root)
+
+    def _install_generation(self, lo, hi, lab) -> None:
+        """Write + adopt a new generation from sorted-or-sortable records."""
+        lo = np.asarray(lo, dtype=np.int64)
+        hi = np.asarray(hi, dtype=np.int64)
+        lab = np.asarray(lab, dtype=np.int64)
+        order = np.lexsort((hi, lo))
+        gen_id = self._base.gen_id + 1 if hasattr(self, "_base") else 0
+        gpath = self._gen_path(gen_id)
+        w = ChunkDirWriter(gpath, self.n_vertices, self.vlabels,
+                           chunk_edges=self.chunk_edges)
+        w.add(lo[order], hi[order], lab[order])
+        manifest = w.close()
+        self._adopt_generation(gen_id, gpath, manifest)
+
+    def _adopt_generation(self, gen_id: int, gpath: str,
+                          manifest: dict) -> None:
+        self._base = _Generation(gpath, gen_id, manifest, self.n_vertices)
+        _vlab, self._deg = load_chunk_sidecars(gpath, self.n_vertices)
+        self._n_alive = self._base.n_records
+        self._gc_generations()
+
+    def _ref_generation(self, handle: OocSnapshot) -> None:
+        gen_id = handle.base.gen_id
+        self._gen_refs[gen_id] = self._gen_refs.get(gen_id, 0) + 1
+        weakref.finalize(handle, self._unref_generation, gen_id)
+
+    def _unref_generation(self, gen_id: int) -> None:
+        n = self._gen_refs.get(gen_id, 0) - 1
+        if n <= 0:
+            self._gen_refs.pop(gen_id, None)
+        else:
+            self._gen_refs[gen_id] = n
+        self._gc_generations()
+
+    def _gc_generations(self) -> None:
+        """Delete generation directories no live snapshot handle references."""
+        live = set(self._gen_refs) | {self._base.gen_id}
+        for gen_id, gpath in self._list_generations():
+            if gen_id not in live:
+                shutil.rmtree(gpath, ignore_errors=True)
+                self.cache.drop_generation(gen_id)
+
+    def _gc_snapshots(self) -> None:
+        super()._gc_snapshots()
+        self._gc_generations()
+
+    # -- storage interface ----------------------------------------------------
+
+    def _base_label(self, lo: int, hi: int):
+        return self._base.label_of(lo, hi, self.cache)
+
+    def has_edge(self, u: int, v: int) -> bool:
+        key = (min(u, v), max(u, v))
+        if key in self._overlay:
+            return self._overlay[key] is not None
+        return self._base_label(*key) is not None
+
+    def _apply_planned(self, plan, lo, hi, lab, ins):
+        from repro.graphs.store import EdgeBatch
+
+        app_lo, app_hi, app_lab, app_ins = [], [], [], []
+        n_ins = n_del = 0
+        for i in plan:
+            key = (int(lo[i]), int(hi[i]))
+            if ins[i]:
+                self._overlay[key] = int(lab[i])
+                self._deg[key[0]] += 1
+                self._deg[key[1]] += 1
+                self._n_alive += 1
+                n_ins += 1
+            else:
+                cur = self._overlay.get(key)
+                if cur is not None:  # overlay insert or re-label
+                    lab[i] = cur
+                    if self._base_label(*key) is None:
+                        del self._overlay[key]  # never reached the base
+                    else:
+                        self._overlay[key] = None
+                else:  # plain base edge: tombstone it
+                    lab[i] = self._base_label(*key)
+                    self._overlay[key] = None
+                self._deg[key[0]] -= 1
+                self._deg[key[1]] -= 1
+                self._n_alive -= 1
+                n_del += 1
+            app_lo.append(lo[i])
+            app_hi.append(hi[i])
+            app_lab.append(lab[i])
+            app_ins.append(bool(ins[i]))
+        applied = EdgeBatch(
+            src=np.asarray(app_lo, dtype=np.int64),
+            dst=np.asarray(app_hi, dtype=np.int64),
+            elabels=np.asarray(app_lab, dtype=np.int64),
+            insert=np.asarray(app_ins, dtype=bool),
+            valid=np.ones(len(app_lo), dtype=bool),
+        )
+        return applied, n_ins, n_del
+
+    def compact(self) -> int:
+        """Merge the overlay into a new on-disk generation, O(chunk) memory.
+
+        Returns tombstones reclaimed.  Old generations survive while any
+        snapshot handle references them (``_gc_generations``); the epoch,
+        the logical edge set, and the attached index are unchanged.
+        """
+        if not self._overlay:
+            return 0
+        dead = sum(1 for v in self._overlay.values() if v is None)
+        v = np.int64(self.n_vertices)
+        ov = sorted(
+            (int(k[0]) * v + k[1], k[0], k[1], lab)
+            for k, lab in self._overlay.items()
+        )
+        ov_keys = np.array([r[0] for r in ov], np.int64)
+        gen_id = self._base.gen_id + 1
+        gpath = self._gen_path(gen_id)
+        w = ChunkDirWriter(gpath, self.n_vertices, self.vlabels,
+                           chunk_edges=self.chunk_edges)
+        cursor = 0  # overlay rows merged so far
+
+        def take_overlay(stop: int) -> np.ndarray:
+            nonlocal cursor
+            rows = [(olo, ohi, olab) for _, olo, ohi, olab in ov[cursor:stop]
+                    if olab is not None]
+            cursor = stop
+            return np.asarray(rows, np.int64).reshape(-1, 3)
+
+        for cid in range(self._base.n_chunks):
+            rec = self._base.chunk(cid, self.cache)
+            keys = rec[:, 0] * v + rec[:, 1]
+            # base rows overridden by *any* overlay entry drop out here;
+            # live (non-tombstone) overlay rows re-enter via the merge
+            pos = np.minimum(np.searchsorted(ov_keys, keys),
+                             ov_keys.size - 1)
+            base_rows = rec[~(ov_keys[pos] == keys)]
+            ov_rows = take_overlay(
+                int(np.searchsorted(ov_keys, keys[-1], side="right"))
+            )
+            merged = np.concatenate([base_rows, ov_rows], axis=0)
+            merged = merged[np.lexsort((merged[:, 1], merged[:, 0]))]
+            if merged.shape[0]:
+                w.add(merged[:, 0], merged[:, 1], merged[:, 2])
+        tail = take_overlay(len(ov))
+        if tail.shape[0]:
+            w.add(tail[:, 0], tail[:, 1], tail[:, 2])
+        manifest = w.close()
+        self._overlay.clear()
+        self._adopt_generation(gen_id, gpath, manifest)
+        if dead:
+            self._n_compactions += 1
+        return dead
+
+    def alive_edges(self):
+        chunks = list(self.iter_alive_edge_chunks())
+        if not chunks:
+            z = np.zeros(0, np.int64)
+            return z, z.copy(), z.copy()
+        return tuple(
+            np.concatenate([c[i] for c in chunks]) for i in range(3)
+        )
+
+    def iter_alive_edge_chunks(self):
+        """Stream the alive edge set as ``(lo, hi, lab)`` blocks, O(chunk)
+        memory — the duck-typed hook ``IncrementalIndex.rebuild`` and
+        ``GraphStats.from_store`` use to avoid materializing the table."""
+        v = np.int64(self.n_vertices)
+        ov_keys = np.sort(np.array(
+            [int(k[0]) * v + k[1] for k in self._overlay], np.int64
+        ))
+        for cid in range(self._base.n_chunks):
+            rec = self._base.chunk(cid, self.cache)
+            keep = np.ones(rec.shape[0], bool)
+            if ov_keys.size:
+                keys = rec[:, 0] * v + rec[:, 1]
+                pos = np.minimum(np.searchsorted(ov_keys, keys),
+                                 ov_keys.size - 1)
+                keep = ~(ov_keys[pos] == keys)
+            if keep.any():
+                yield rec[keep, 0], rec[keep, 1], rec[keep, 2]
+        live = np.asarray(
+            [[k[0], k[1], lab] for k, lab in sorted(self._overlay.items())
+             if lab is not None],
+            np.int64,
+        ).reshape(-1, 3)
+        if live.shape[0]:
+            yield live[:, 0], live[:, 1], live[:, 2]
+
+    @property
+    def n_edges(self) -> int:
+        return int(self._n_alive)
+
+    def _n_edges_dead(self) -> int:
+        return sum(1 for lab in self._overlay.values() if lab is None)
+
+    @property
+    def overlay_edges(self) -> int:
+        """Resident overlay entries awaiting the next compaction."""
+        return len(self._overlay)
+
+    @property
+    def generation(self) -> int:
+        return self._base.gen_id
+
+    @property
+    def n_chunks(self) -> int:
+        return self._base.n_chunks
+
+    # -- snapshots ------------------------------------------------------------
+
+    def snapshot(self) -> GraphSnapshot:
+        """Epoch view whose ``graph`` holds labels but *no* edges; the
+        ``ooc`` handle fetches them on demand and pins this generation."""
+        snap = self._snapshots.get(self.epoch)
+        if snap is None:
+            idx = self._index.freeze() if self._index is not None else None
+            handle = OocSnapshot(
+                base=self._base, overlay=dict(self._overlay),
+                cache=self.cache, n_vertices=self.n_vertices,
+                vlabels=self.vlabels,
+                d_max=max(1, int(self._deg.max()) if self._deg.size else 0),
+                epoch=self.epoch,
+            )
+            self._ref_generation(handle)
+            empty = np.zeros(0, np.int32)
+            g = Graph(vlabels=self.vlabels, src=empty, dst=empty.copy(),
+                      elabels=empty.copy())
+            snap = GraphSnapshot(self.epoch, g, idx, None, handle)
+            self._snapshots[self.epoch] = snap
+        return snap

@@ -143,12 +143,20 @@ class GraphSnapshot(NamedTuple):
     (``core/distributed.py``) consume directly.  Engines accept a snapshot
     anywhere they accept a Graph and use ``index`` to skip the from-scratch
     digest recompute.
+
+    ``ooc`` is populated by ``OutOfCoreGraphStore`` only: a frozen
+    ``graphs.ooc.OocSnapshot`` handle over this epoch's on-disk generation
+    (+ its resident overlay).  When present, ``graph`` carries the resident
+    vertex labels but an *empty* edge list — consumers must fetch edges
+    through the handle (engines do; see core/engine.py), and holding the
+    snapshot pins the generation's chunk files on disk.
     """
 
     epoch: int
     graph: Graph
     index: Optional[object]
     shards: Optional[tuple] = None
+    ooc: Optional[object] = None
 
 
 class StoreStats(NamedTuple):

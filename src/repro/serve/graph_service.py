@@ -57,6 +57,7 @@ from repro.core.batch_engine import (
 from repro.core.cni import CniValue, default_max_p
 from repro.core.engine import QueryStats, search_filtered
 from repro.graphs.csr import Graph, max_degree, to_host
+from repro.graphs.io import ChunkIOError
 from repro.graphs.store import BaseGraphStore, GraphSnapshot, as_snapshot
 
 
@@ -145,8 +146,28 @@ class GraphQueryService:
         snap = as_snapshot(data)
         self.data = snap.graph
         self.cfg = cfg or GraphServiceConfig()
+        self._ooc = getattr(snap, "ooc", None)
+        if self._ooc is not None and self.cfg.mesh is not None:
+            raise ValueError(
+                "out-of-core stores run single-host: the chunk prefilter "
+                "fetches a per-epoch restricted edge set that is not "
+                "mesh-partitioned; drop GraphServiceConfig.mesh"
+            )
+        if self._ooc is not None and snap.index is None:
+            raise ValueError(
+                "OutOfCoreGraphStore needs an attached incremental index — "
+                "its digests drive the chunk prefilter (construct the store "
+                "with index='auto')"
+            )
         if self.store is not None and self.store.degree_cap is not None:
             self.d_max = int(self.store.degree_cap)
+        elif self._ooc is not None:
+            # the snapshot graph of an out-of-core store is edge-empty on
+            # purpose; its resident degree vector carries the true bound
+            # (max_degree(snap.graph) would report 0 → wrong digests)
+            self.d_max = int(self._ooc.d_max)
+            if self.store is not None:
+                self.store.degree_cap = self.d_max
         else:
             self.d_max = max(1, max_degree(snap.graph))
             if self.store is not None:
@@ -179,6 +200,11 @@ class GraphQueryService:
         self.queue: list[_Request] = []
         self._rid = 0
         self._epochs: dict[int, _EpochEntry] = {}
+        # out-of-core bookkeeping, keyed by pinned epoch: the union of every
+        # admitted slot's prefilter seed (the restricted graph must cover all
+        # of them), and the accumulated chunk-fetch telemetry for results
+        self._ooc_cover: dict[int, np.ndarray] = {}
+        self._ooc_tel: dict[int, dict] = {}
         self._shutting_down = False
         self.planner = None
         if self.cfg.planner is not None:
@@ -229,6 +255,43 @@ class GraphQueryService:
         for ep in list(self._epochs):
             if ep not in pinned and ep != self.epoch:
                 self._epochs.pop(ep)
+        for d in (self._ooc_cover, self._ooc_tel):
+            for ep in list(d):
+                if ep not in self._epochs:
+                    del d[ep]
+
+    def _ensure_ooc_cover(self, epoch: int, alive_row: np.ndarray) -> None:
+        """Grow the epoch's restricted graph to cover one more seed mask.
+
+        The cached ``_EpochEntry`` graph for an out-of-core epoch holds only
+        the edges among the union of the prefilter seeds admitted so far.
+        Coverage is monotone: per-slot alive masks only shrink under peeling
+        and stay within their seed, so a superset edge fetch is always exact
+        (``counts_matrix_from_ords`` masks both endpoints by alive).  A
+        refetch replaces the entry — subsequent ticks and finalizes on the
+        epoch read the wider graph, which agrees with the old one on every
+        previously covered slot.
+        """
+        entry = self._epochs[epoch]
+        cover = self._ooc_cover.get(epoch)
+        if cover is not None and not np.any(alive_row & ~cover):
+            return
+        new_cover = alive_row.copy() if cover is None else (cover | alive_row)
+        restricted, tel = entry.snapshot.ooc.fetch_restricted(new_cover)
+        self._ooc_cover[epoch] = new_cover
+        agg = self._ooc_tel.setdefault(epoch, {"fetches": 0})
+        agg["fetches"] += 1
+        for k, v in tel.items():
+            if k in ("n_chunks", "peak_resident_bytes",
+                     "resident_budget_bytes"):
+                agg[k] = v  # point-in-time gauges, not counters
+            else:
+                agg[k] = agg.get(k, 0) + v
+        self._epochs[epoch] = _EpochEntry(
+            snapshot=entry.snapshot._replace(graph=restricted),
+            host_graph=to_host(restricted),
+            sharded=None,
+        )
 
     # -- public API ----------------------------------------------------------
 
@@ -423,6 +486,19 @@ class GraphQueryService:
                         entry.snapshot.index, req.query,
                         variant=self.cfg.filter_variant,
                     )
+                if entry.snapshot.ooc is not None:
+                    # fetch (or widen) this epoch's restricted edge set so
+                    # it covers the new slot's seed.  Fail closed: a chunk
+                    # I/O failure frees the slot — releasing the epoch pin —
+                    # and surfaces the typed error to the caller; the
+                    # service stays usable for subsequent submissions.
+                    try:
+                        self._ensure_ooc_cover(
+                            req.epoch, np.asarray(alive_row, dtype=bool)
+                        )
+                    except ChunkIOError:
+                        self._free(slot)
+                        raise
                 self._ords = self._ords.at[slot].set(ords)
                 self._counts = self._counts.at[slot].set(counts)
                 self._digest = jax.tree_util.tree_map(
@@ -445,6 +521,8 @@ class GraphQueryService:
             "epoch": req.epoch,
             "queue_seconds": time.perf_counter() - req.submitted_at,
         }
+        if req.epoch in self._ooc_tel:
+            stats.extras["ooc"] = dict(self._ooc_tel[req.epoch])
         emb = search_filtered(
             self._epochs[req.epoch].host_graph, req.query, alive_np, cand_np,
             stats,

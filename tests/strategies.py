@@ -104,6 +104,20 @@ def graph_chunks(g, chunk_edges: int, *, order=None):
     return chunks
 
 
+def peak_rss_bytes() -> int:
+    """Monotone high-water resident-set size of this process, in bytes.
+
+    ``ru_maxrss`` never decreases, so resident-set tests must measure a
+    *delta* across the operation under test (ideally in a fresh subprocess,
+    since a prior large allocation anywhere in the process poisons the
+    baseline).  Linux reports kilobytes; macOS reports bytes."""
+    import resource
+    import sys
+
+    rss = int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+    return rss if sys.platform == "darwin" else rss * 1024
+
+
 def edge_batch_from_ops(ops, *, elabel: int = 0) -> EdgeBatch | None:
     """(a, b, insert) op tuples → an ``EdgeBatch`` (self-loops dropped).
 

@@ -41,7 +41,12 @@ from repro.core import (
 )
 from repro.core.cni import SAT64
 from repro.core.incremental import IncrementalIndex
-from repro.graphs import GraphStore, random_labeled_graph, random_walk_query
+from repro.graphs import (
+    GraphStore,
+    OutOfCoreGraphStore,
+    random_labeled_graph,
+    random_walk_query,
+)
 from repro.graphs.csr import build_graph
 from strategies import (
     emb_set,
@@ -536,6 +541,167 @@ def test_single_vertex_query():
     for name, emb in _all_engine_results(g, q, max_embeddings=2).items():
         assert emb.shape[0] == min(2, len(truth)), name
         assert emb_set(emb) <= truth, name
+
+
+# ---------------------------------------------------------------------------
+# out-of-core store tier: bit parity against brute force and the in-memory
+# engines, across every enumeration path (graphs/ooc.py + DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+# the three enumeration paths a single-query engine can take — the OOC
+# restricted-fetch execution must be bit-identical on each of them
+_ENGINE_PATHS = (
+    {"searcher": "dfs"},
+    {"searcher": "join"},
+    {"enumerator": "device"},
+)
+
+
+def _mem_store(g, **kwargs):
+    store = GraphStore.from_graph(g, **kwargs)
+    store.attach_index(IncrementalIndex())
+    return store
+
+
+def _ooc_engine_results(store, q, *, max_embeddings=None):
+    """name → embedding table over every OOC enumeration path."""
+    snap = store.snapshot()
+    out = {}
+    for kw in _ENGINE_PATHS:
+        name = "ooc_" + "_".join(f"{k}={v}" for k, v in kw.items())
+        out[name] = SubgraphQueryEngine(snap, **kw).query(
+            q, max_embeddings=max_embeddings)[0]
+    out["ooc_batch"] = BatchQueryEngine(snap).query_batch(
+        [q], max_embeddings=max_embeddings)[0][0]
+    return out
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_differential_ooc_random(seed):
+    """Oracle sweep over the disk-backed tier: dfs / bfs-join / device-join
+    / batch all enumerate exactly the brute-force set from a restricted
+    fetch of prefilter-surviving chunks."""
+    g, q = seeded_graph_and_query(
+        seed, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    truth = brute_force_embeddings(g, q)
+    store = OutOfCoreGraphStore.from_graph(g, chunk_edges=16)
+    for name, emb in _ooc_engine_results(store, q).items():
+        assert emb_set(emb) == truth, (
+            f"{name} diverged from brute force "
+            f"({len(emb_set(emb))} vs {len(truth)} embeddings)"
+        )
+
+
+def test_differential_ooc_after_mutation_and_compaction():
+    """The LSM overlay and a compaction in the middle of a mutation stream
+    change nothing observable: every path still matches brute force on the
+    store's current edge set."""
+    g, q = seeded_graph_and_query(
+        3, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    mem = _mem_store(g)
+    ooc = OutOfCoreGraphStore.from_graph(g, chunk_edges=16)
+    lo, hi, _ = (np.asarray(a) for a in mem.alive_edges())
+    dels = np.stack([lo[:7], hi[:7]], axis=1)
+    ins = np.stack([lo[:3], (hi[:3] + 1) % _V], axis=1)
+    keep = ins[:, 0] != ins[:, 1]
+    for s in (mem, ooc):
+        s.remove_edges(dels)
+        s.add_edges(ins[keep], np.zeros(int(keep.sum()), np.int64))
+    assert ooc.overlay_edges > 0
+    truth = brute_force_embeddings(mem.snapshot().graph, q)
+    for name, emb in _ooc_engine_results(ooc, q).items():
+        assert emb_set(emb) == truth, name
+    ooc.compact()
+    assert ooc.overlay_edges == 0 and ooc.generation > 0
+    for name, emb in _ooc_engine_results(ooc, q).items():
+        assert emb_set(emb) == truth, f"{name} (post-compaction)"
+
+
+def test_ooc_truncation_bit_order_parity():
+    """Bit-for-bit table parity OOC vs in-memory under ``max_embeddings``
+    truncation — same rows, same order, wherever the cap lands — on all
+    three enumeration paths and the batch engine."""
+    g, q = seeded_graph_and_query(
+        2, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=_U,
+    )
+    total = len(brute_force_embeddings(g, q))
+    assert total >= 3
+    mem = _mem_store(g)
+    ooc = OutOfCoreGraphStore.from_graph(g, chunk_edges=16)
+    for cap in (1, total // 2, total - 1, total, total + 5):
+        for kw in _ENGINE_PATHS:
+            a = SubgraphQueryEngine(mem.snapshot(), **kw).query(
+                q, max_embeddings=cap)[0]
+            b = SubgraphQueryEngine(ooc.snapshot(), **kw).query(
+                q, max_embeddings=cap)[0]
+            np.testing.assert_array_equal(a, b, err_msg=f"{kw} cap={cap}")
+        a = BatchQueryEngine(mem.snapshot()).query_batch(
+            [q], max_embeddings=cap)[0][0]
+        b = BatchQueryEngine(ooc.snapshot()).query_batch(
+            [q], max_embeddings=cap)[0][0]
+        np.testing.assert_array_equal(a, b, err_msg=f"batch cap={cap}")
+
+
+@settings(max_examples=6, deadline=None)
+@given(graph_query_seeds(), query_sizes(3, 4))
+def test_ooc_truncation_bit_order_property(seed, n_qv):
+    """Property form of the truncation contract over the disk tier: drawn
+    seeds, every enumeration path, caps straddling the table size."""
+    g, q = seeded_graph_and_query(
+        seed, n_vertices=_V, n_edges=_E, n_labels=_L,
+        n_edge_labels=_EL, query_vertices=n_qv,
+    )
+    mem = _mem_store(g)
+    ooc = OutOfCoreGraphStore.from_graph(g, chunk_edges=32)
+    total = SubgraphQueryEngine(mem.snapshot()).query(q)[0].shape[0]
+    for cap in sorted({1, max(1, total // 2), total + 1}):
+        for kw in _ENGINE_PATHS:
+            a = SubgraphQueryEngine(mem.snapshot(), **kw).query(
+                q, max_embeddings=cap)[0]
+            b = SubgraphQueryEngine(ooc.snapshot(), **kw).query(
+                q, max_embeddings=cap)[0]
+            assert a.shape[0] == min(cap, total), (kw, cap)
+            np.testing.assert_array_equal(a, b, err_msg=f"{kw} cap={cap}")
+
+
+def test_service_ooc_store_mutating_parity():
+    """``GraphQueryService`` over an ``OutOfCoreGraphStore`` taking live
+    updates: per pinned epoch, results match the in-memory-store service
+    bit-for-bit, and each OOC result carries chunk-fetch telemetry."""
+    from repro.serve import GraphQueryService, GraphServiceConfig
+
+    g = random_labeled_graph(60, 160, 3, n_edge_labels=2, seed=21)
+    queries = [random_walk_query(g, 4, sparse=bool(i % 2), seed=30 + i)
+               for i in range(4)]
+    lo, hi, _ = (np.asarray(a) for a in _mem_store(g).alive_edges())
+    dels = np.stack([lo[:6], hi[:6]], axis=1)
+
+    def run(make_store):
+        svc = GraphQueryService(make_store(), GraphServiceConfig(
+            max_slots=2, max_query_vertices=8, max_query_labels=8,
+        ))
+        rids = [svc.submit(q) for q in queries[:2]]
+        done = {rid: (emb, st) for rid, emb, st in svc.tick()}  # pins epoch 0
+        svc.remove_edges(dels)
+        rids += [svc.submit(q, max_embeddings=5) for q in queries[2:]]
+        done.update((rid, (emb, st))
+                    for rid, emb, st in svc.run_to_completion())
+        assert sorted(done) == sorted(rids)
+        return [done[r] for r in rids]
+
+    res_mem = run(lambda: _mem_store(g, degree_cap=64))
+    res_ooc = run(lambda: OutOfCoreGraphStore.from_graph(
+        g, chunk_edges=32, degree_cap=64))
+    for (em, _), (eo, so) in zip(res_mem, res_ooc):
+        np.testing.assert_array_equal(em, eo)
+        tel = so.extras["ooc"]
+        assert tel["chunks_read"] >= 0 and tel["n_chunks"] > 0
 
 
 # ---------------------------------------------------------------------------

@@ -75,7 +75,7 @@ def test_snippet_runs(code):
 
 # single-process examples double as docs: they must keep running exactly as
 # the README advertises them (multi-device examples run as a CI step instead)
-_EXAMPLES = ["examples/query_planning.py"]
+_EXAMPLES = ["examples/query_planning.py", "examples/out_of_core.py"]
 
 
 @pytest.mark.parametrize("script", _EXAMPLES)

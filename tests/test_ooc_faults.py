@@ -1,0 +1,259 @@
+"""Fault injection for the out-of-core disk tier (graphs/ooc.py).
+
+The contract under test (DESIGN.md §14, "fail closed"): any mismatch
+between the bytes on disk and what the manifest/header promises — a
+truncated chunk, a corrupted header, a manifest entry pointing nowhere, or
+an I/O error in the middle of a prefiltered fetch — surfaces as the typed
+``ChunkIOError``, never as a silently wrong edge set.  And the failure is
+*contained*: epoch pins taken on the way in are released, the service frees
+the slot, and once the fault clears the same store answers the same query
+with the same rows.
+
+Every scenario corrupts a real chunk directory on disk (built small, a few
+records per chunk, so each file is individually addressable) and then
+drives a real query through the engine or the service — the error must
+travel the whole prefilter → manifest → chunk-read path, not be synthesized
+at the io layer.
+"""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import repro.graphs.io as gio
+import repro.graphs.ooc as ooc_mod
+from repro.core.engine import SubgraphQueryEngine
+from repro.graphs import (
+    ChunkIOError,
+    OutOfCoreGraphStore,
+    random_labeled_graph,
+    random_walk_query,
+)
+from repro.serve import GraphQueryService, GraphServiceConfig
+
+_V, _E = 36, 90
+
+
+def _mk(tmp_path, **kwargs):
+    """A persisted store + a query with a non-empty answer."""
+    g = random_labeled_graph(_V, _E, 3, n_edge_labels=2, seed=0)
+    q = random_walk_query(g, 4, seed=1)
+    store = OutOfCoreGraphStore.from_graph(
+        g, storage_dir=str(tmp_path / "store"), chunk_edges=16, **kwargs
+    )
+    assert store.n_chunks >= 3  # faults must be per-file addressable
+    return g, q, store
+
+
+def _chunk_files(store) -> list[str]:
+    gen = store._base
+    return [os.path.join(gen.path, e["file"]) for e in gen.entries]
+
+
+def _cold(store) -> None:
+    """Evict the generation from the LRU so the next fetch hits disk."""
+    store.cache.drop_generation(store.generation)
+
+
+def _backup(store, tmp_path) -> str:
+    bak = str(tmp_path / "backup-gen")
+    shutil.copytree(store._base.path, bak)
+    return bak
+
+
+def _restore(store, bak: str) -> None:
+    shutil.rmtree(store._base.path)
+    shutil.copytree(bak, store._base.path)
+    _cold(store)
+
+
+# ---------------------------------------------------------------------------
+# corrupted bytes on disk → typed error, recoverable after repair
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_chunk_fails_closed(tmp_path):
+    g, q, store = _mk(tmp_path)
+    eng = SubgraphQueryEngine(store.snapshot())
+    ref = eng.query(q)[0]
+    assert ref.shape[0] > 0
+    bak = _backup(store, tmp_path)
+    for fp in _chunk_files(store):
+        with open(fp, "r+b") as f:
+            f.truncate(os.path.getsize(fp) - 8)
+    _cold(store)
+    with pytest.raises(ChunkIOError, match="bytes"):
+        eng.query(q)
+    # repair → the same snapshot answers the same query with the same rows
+    _restore(store, bak)
+    np.testing.assert_array_equal(eng.query(q)[0], ref)
+
+
+def test_corrupted_chunk_header_fails_closed(tmp_path):
+    g, q, store = _mk(tmp_path)
+    eng = SubgraphQueryEngine(store.snapshot())
+    ref = eng.query(q)[0]
+    bak = _backup(store, tmp_path)
+    for fp in _chunk_files(store):
+        with open(fp, "r+b") as f:
+            f.write(b"\xde\xad\xbe\xef\xde\xad\xbe\xef")  # clobber the magic
+    _cold(store)
+    with pytest.raises(ChunkIOError, match="magic"):
+        eng.query(q)
+    _restore(store, bak)
+    np.testing.assert_array_equal(eng.query(q)[0], ref)
+
+
+def test_chunk_header_manifest_disagreement(tmp_path):
+    """Bytes that are *internally* valid but disagree with the manifest
+    (here: a chunk's lo_min bumped) must still fail closed."""
+    g, q, store = _mk(tmp_path)
+    eng = SubgraphQueryEngine(store.snapshot())
+    for fp in _chunk_files(store):
+        with open(fp, "r+b") as f:
+            f.seek(2 * 8)  # header word 2 = lo_min
+            f.write(np.int64(_V + 7).tobytes())
+    _cold(store)
+    with pytest.raises(ChunkIOError, match="disagrees"):
+        eng.query(q)
+
+
+def test_missing_chunk_file_fails_closed(tmp_path):
+    g, q, store = _mk(tmp_path)
+    eng = SubgraphQueryEngine(store.snapshot())
+    for fp in _chunk_files(store):
+        os.remove(fp)
+    _cold(store)
+    with pytest.raises(ChunkIOError, match="missing"):
+        eng.query(q)
+
+
+# ---------------------------------------------------------------------------
+# manifest faults → typed error at open time
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_missing_entry_field(tmp_path):
+    _g, _q, store = _mk(tmp_path)
+    mpath = os.path.join(store._base.path, gio.MANIFEST_NAME)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["chunks"][0]["n_records"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ChunkIOError, match="missing"):
+        OutOfCoreGraphStore.open(str(tmp_path / "store"))
+
+
+def test_manifest_absent_or_invalid(tmp_path):
+    _g, _q, store = _mk(tmp_path)
+    mpath = os.path.join(store._base.path, gio.MANIFEST_NAME)
+    with open(mpath, "w") as f:
+        f.write("{ not json")
+    with pytest.raises(ChunkIOError, match="JSON"):
+        OutOfCoreGraphStore.open(str(tmp_path / "store"))
+    os.remove(mpath)
+    with pytest.raises(ChunkIOError, match="manifest"):
+        OutOfCoreGraphStore.open(str(tmp_path / "store"))
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(ChunkIOError, match="no gen-"):
+        OutOfCoreGraphStore.open(str(empty))
+
+
+def test_open_rejects_mismatched_sidecars(tmp_path):
+    """A vlabels sidecar that drifted from the manifest's vertex count is a
+    corrupt store, not a different graph."""
+    _g, _q, store = _mk(tmp_path)
+    vpath = os.path.join(store._base.path, "vlabels.bin")
+    with open(vpath, "r+b") as f:
+        f.truncate(os.path.getsize(vpath) - 8)
+    with pytest.raises(ChunkIOError):
+        OutOfCoreGraphStore.open(str(tmp_path / "store"))
+
+
+# ---------------------------------------------------------------------------
+# simulated I/O failure mid-query → typed error, then full recovery
+# ---------------------------------------------------------------------------
+
+
+def test_simulated_read_failure_mid_query(tmp_path, monkeypatch):
+    """An OS-level read error *during* the prefiltered fetch (np.memmap
+    raising) surfaces as ChunkIOError; once the fault clears, the same
+    engine over the same snapshot returns the original rows."""
+    g, q, store = _mk(tmp_path)
+    eng = SubgraphQueryEngine(store.snapshot())
+    ref = eng.query(q)[0]
+    _cold(store)
+    real_memmap = np.memmap
+
+    def flaky(*args, **kw):
+        raise OSError("simulated device read failure")
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(gio.np, "memmap", flaky)
+        with pytest.raises(ChunkIOError, match="could not be mapped"):
+            eng.query(q)
+    assert np.memmap is real_memmap
+    _cold(store)
+    np.testing.assert_array_equal(eng.query(q)[0], ref)
+
+
+def test_service_releases_pins_on_chunk_failure(tmp_path):
+    """A chunk failure during admission frees the slot and releases the
+    epoch pin; the service keeps serving once the fault clears."""
+    g, q, store = _mk(tmp_path)
+    svc = GraphQueryService(store, GraphServiceConfig(
+        max_slots=2, max_query_vertices=8, max_query_labels=8,
+    ))
+    rid1 = svc.submit(q)
+    done = svc.run_to_completion()
+    assert [r for r, _, _ in done] == [rid1]
+    assert store._pins == {}
+
+    # a mutation opens a new epoch, so the next admission must refetch
+    lo, hi, _lab = (np.asarray(a) for a in store.alive_edges())
+    svc.remove_edges(np.stack([lo[:3], hi[:3]], axis=1))
+    _cold(store)
+
+    def boom(path, entry, n_vertices):
+        raise ChunkIOError("simulated chunk failure")
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(ooc_mod, "read_chunk", boom)
+        svc.submit(q)
+        with pytest.raises(ChunkIOError, match="simulated"):
+            svc.tick()
+    assert svc.n_active == 0  # the failed slot was freed...
+    assert store._pins == {}  # ...and its epoch pin released
+
+    # fault cleared: the same query on the same service now completes, and
+    # matches a fresh engine over the store's current state bit-for-bit
+    rid3 = svc.submit(q)
+    done = svc.run_to_completion()
+    assert [r for r, _, _ in done] == [rid3]
+    ref = SubgraphQueryEngine(store.snapshot()).query(q)[0]
+    np.testing.assert_array_equal(done[0][1], ref)
+    assert done[0][2].extras["ooc"]["chunks_read"] >= 0
+
+
+def test_batch_engine_fails_closed(tmp_path):
+    """The batch path fetches through the same loader — same typed error,
+    and the snapshot stays usable afterwards."""
+    from repro.core.batch_engine import BatchQueryEngine
+
+    g, q, store = _mk(tmp_path)
+    eng = BatchQueryEngine(store.snapshot())
+    ref = eng.query_batch([q])[0][0]
+    _cold(store)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(ooc_mod, "read_chunk",
+                   lambda *a: (_ for _ in ()).throw(
+                       ChunkIOError("simulated chunk failure")))
+        with pytest.raises(ChunkIOError, match="simulated"):
+            eng.query_batch([q])
+    _cold(store)
+    np.testing.assert_array_equal(eng.query_batch([q])[0][0], ref)

@@ -1,0 +1,405 @@
+"""Out-of-core store tier: on-disk format, cache, generations, resident set.
+
+Complements tests/test_differential.py (bit-parity of query *results*) and
+tests/test_ooc_faults.py (fail-closed corruption handling) with the tier's
+own mechanics:
+
+* edge-file header validation + write/read round trips in both
+  ``sorted_by_src`` modes (the bugfix for silently-short reads);
+* chunk-directory round trips, manifest interval bounds, writer validation;
+* LRU cache byte accounting and eviction under a tiny budget;
+* generation lifecycle: compaction, epoch pins keeping old generations'
+  chunk files on disk until released, then GC;
+* chunk-interval pruning: a vertex-localized query touches a strict subset
+  of chunks;
+* the streaming index/stats rebuild matching the in-memory build;
+* (slow tier) a graph ~20x larger than the resident budget queried with
+  the process resident set growing by far less than the edge table.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+
+import repro.graphs.io as gio
+from repro.core.engine import SubgraphQueryEngine
+from repro.core.incremental import IncrementalIndex
+from repro.core.stats import GraphStats
+from repro.graphs import (
+    ChunkDirWriter,
+    ChunkIOError,
+    GraphStore,
+    OutOfCoreGraphStore,
+    random_labeled_graph,
+    random_walk_query,
+    read_edge_file,
+    stream_edge_chunks,
+    write_chunk_dir,
+    write_edge_file,
+)
+from repro.graphs.csr import build_graph
+from strategies import emb_set, graph_query_seeds, peak_rss_bytes
+
+_V, _E = 36, 90
+
+
+def _graph(seed=0, n_vertices=_V, n_edges=_E):
+    return random_labeled_graph(
+        n_vertices, n_edges, 3, n_edge_labels=2, seed=seed
+    )
+
+
+def _edge_multiset(g):
+    return sorted(zip(np.asarray(g.src).tolist(),
+                      np.asarray(g.dst).tolist(),
+                      np.asarray(g.elabels).tolist()))
+
+
+# ---------------------------------------------------------------------------
+# edge-file header validation + round trip (both sorted_by_src modes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sorted_by_src", [True, False])
+def test_edge_file_round_trip(tmp_path, sorted_by_src):
+    g = _graph()
+    path = str(tmp_path / "g.bin")
+    write_edge_file(path, g, sorted_by_src=sorted_by_src)
+    back = read_edge_file(path)
+    assert np.array_equal(np.asarray(back.vlabels), np.asarray(g.vlabels))
+    assert _edge_multiset(back) == _edge_multiset(g)
+    # the streaming reader yields exactly the same records, padded
+    rows = []
+    for s, d, e, valid in stream_edge_chunks(path, 32):
+        rows += list(zip(s[valid].tolist(), d[valid].tolist(),
+                         e[valid].tolist()))
+    assert sorted(rows) == _edge_multiset(g)
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_query_seeds())
+def test_edge_file_round_trip_property(tmp_path_factory, seed):
+    """Property form: random graphs round-trip bit-exactly through the
+    edge-file format in both record orders."""
+    g = _graph(seed=seed, n_edges=40 + seed % 97)
+    path = str(tmp_path_factory.mktemp("ef") / "g.bin")
+    for sorted_by_src in (True, False):
+        write_edge_file(path, g, sorted_by_src=sorted_by_src)
+        back = read_edge_file(path)
+        assert np.array_equal(np.asarray(back.vlabels),
+                              np.asarray(g.vlabels))
+        assert _edge_multiset(back) == _edge_multiset(g)
+
+
+def test_edge_file_header_validation(tmp_path):
+    """The header used to be trusted outright — a truncated file yielded a
+    silently smaller edge set.  Every mismatch is now a typed error."""
+    g = _graph()
+    path = str(tmp_path / "g.bin")
+    write_edge_file(path, g)
+    good = os.path.getsize(path)
+
+    with open(path, "r+b") as f:        # truncated mid-record
+        f.truncate(good - 10)
+    with pytest.raises(ChunkIOError, match="requires"):
+        read_edge_file(path)
+    with pytest.raises(ChunkIOError):
+        list(stream_edge_chunks(path, 16))
+
+    write_edge_file(path, g)
+    with open(path, "ab") as f:         # trailing garbage
+        f.write(b"\x00" * 7)
+    with pytest.raises(ChunkIOError, match="requires"):
+        read_edge_file(path)
+
+    write_edge_file(path, g)
+    with open(path, "r+b") as f:        # negative count in the header
+        f.seek(8)
+        f.write(np.int64(-4).tobytes())
+    with pytest.raises(ChunkIOError, match="corrupt"):
+        read_edge_file(path)
+
+    with open(path, "wb") as f:         # too short for any header
+        f.write(b"\x01\x02")
+    with pytest.raises(ChunkIOError, match="too short"):
+        read_edge_file(path)
+
+    with pytest.raises(ChunkIOError, match="missing"):
+        read_edge_file(str(tmp_path / "nope.bin"))
+
+
+# ---------------------------------------------------------------------------
+# chunk directory format
+# ---------------------------------------------------------------------------
+
+
+def _canonical_edges(g):
+    lo = np.minimum(np.asarray(g.src), np.asarray(g.dst))
+    hi = np.maximum(np.asarray(g.src), np.asarray(g.dst))
+    keep = lo < hi
+    lo, hi = lo[keep], hi[keep]
+    lab = np.asarray(g.elabels)[keep]
+    key = lo.astype(np.int64) * g.n_vertices + hi
+    _, first = np.unique(key, return_index=True)
+    return lo[first], hi[first], lab[first]
+
+
+@pytest.mark.parametrize("chunk_edges", [7, 16, 10_000])
+def test_chunk_dir_round_trip(tmp_path, chunk_edges):
+    """write_chunk_dir → manifest + per-chunk reads recover the exact
+    record stream; manifest interval bounds are tight."""
+    g = _graph()
+    lo, hi, lab = _canonical_edges(g)
+    root = str(tmp_path / "cd")
+    manifest = write_chunk_dir(root, g.n_vertices, np.asarray(g.vlabels),
+                               lo, hi, lab, chunk_edges=chunk_edges)
+    assert manifest["n_records"] == lo.size
+    got = []
+    for entry in manifest["chunks"]:
+        rec = gio.read_chunk(root, entry, g.n_vertices)
+        assert rec.shape == (entry["n_records"], 3)
+        assert rec[:, 0].min() == entry["lo_min"]
+        assert rec[:, 0].max() == entry["lo_max"]
+        assert rec[:, 1].min() == entry["hi_min"]
+        assert rec[:, 1].max() == entry["hi_max"]
+        got.append(rec)
+    rec = np.concatenate(got) if got else np.zeros((0, 3), np.int64)
+    order = np.lexsort((hi, lo))
+    np.testing.assert_array_equal(
+        rec, np.stack([lo[order], hi[order], lab[order]], axis=1)
+    )
+    # every chunk but the last is exactly chunk_edges records
+    for entry in manifest["chunks"][:-1]:
+        assert entry["n_records"] == chunk_edges
+
+
+def test_chunk_dir_writer_validates(tmp_path):
+    w = ChunkDirWriter(str(tmp_path / "cd"), 10, np.zeros(10, np.int64))
+    w.add([0], [3], [1])
+    with pytest.raises(ValueError, match="canonical"):
+        w.add([5], [5], [0])            # lo == hi
+    with pytest.raises(ValueError, match="canonical"):
+        w.add([3], [12], [0])           # out of range
+    with pytest.raises(ValueError):
+        w.add([0], [2], [0])            # key order violated
+    w.add([0, 4], [4, 7], [0, 1])
+    m = w.close()
+    assert m["n_records"] == 3
+
+
+# ---------------------------------------------------------------------------
+# store mechanics: persistence, cache, generations, pruning
+# ---------------------------------------------------------------------------
+
+
+def test_store_persist_and_open(tmp_path):
+    g = _graph()
+    q = random_walk_query(g, 4, seed=1)
+    root = str(tmp_path / "store")
+    store = OutOfCoreGraphStore.from_graph(g, storage_dir=root,
+                                           chunk_edges=16)
+    ref = SubgraphQueryEngine(store.snapshot()).query(q)[0]
+    n_edges, chunk_edges = store.n_edges, store.chunk_edges
+    del store
+
+    back = OutOfCoreGraphStore.open(root)
+    assert back.n_edges == n_edges
+    assert back.chunk_edges == chunk_edges  # adopted from the manifest
+    np.testing.assert_array_equal(
+        SubgraphQueryEngine(back.snapshot()).query(q)[0], ref
+    )
+
+
+def test_streaming_rebuild_matches_memory():
+    """IncrementalIndex.rebuild and GraphStats.from_store consume the
+    chunked stream; digests and aggregates equal the in-memory build."""
+    g = _graph(seed=3)
+    mem = GraphStore.from_graph(g)
+    mem.attach_index(IncrementalIndex())
+    ooc = OutOfCoreGraphStore.from_graph(g, chunk_edges=16)
+    np.testing.assert_array_equal(mem.index.cni_u64, ooc.index.cni_u64)
+    s_mem = GraphStats.from_store(mem)
+    s_ooc = GraphStats.from_store(ooc)
+    assert s_mem.n_edges == s_ooc.n_edges
+    np.testing.assert_array_equal(s_mem.label_hist, s_ooc.label_hist)
+    np.testing.assert_array_equal(s_mem.deg_sum, s_ooc.deg_sum)
+    np.testing.assert_array_equal(s_mem.pair_counts, s_ooc.pair_counts)
+
+
+def test_cache_eviction_under_budget(tmp_path):
+    g = _graph(n_edges=300, n_vertices=60)
+    store = OutOfCoreGraphStore.from_graph(
+        g, storage_dir=str(tmp_path / "s"), chunk_edges=8,
+        resident_budget_bytes=3 * 8 * 24,  # ~3 chunks
+    )
+    handle = store.snapshot().ooc
+    chunk_bytes = 8 * 24
+    for _ in range(2):  # full fetches cycle every chunk through the LRU
+        graph, tel = handle.fetch_restricted(
+            np.ones(store.n_vertices, bool))
+        assert graph.src.size // 2 == store.n_edges
+    c = store.cache
+    assert c.misses > c.budget_bytes // chunk_bytes  # evictions forced reloads
+    assert c.resident_bytes <= c.budget_bytes
+    assert c.peak_resident_bytes <= c.budget_bytes + chunk_bytes
+    assert c.bytes_read > c.budget_bytes  # re-reads, not one warm pass
+
+
+def test_chunk_interval_pruning(tmp_path):
+    """A query whose candidates live on a narrow vertex range touches only
+    the chunks whose manifest intervals intersect it."""
+    n = 4000
+    v = n + 2
+    vlab = np.zeros(v, np.int64)
+    vlab[:8] = 1
+    i = np.arange(n, dtype=np.int64)
+    lo = np.repeat(i, 2)
+    hi = np.empty_like(lo)
+    hi[0::2] = i + 1
+    hi[1::2] = i + 2
+    g = build_graph(v, vlab, np.stack([lo, hi], axis=1),
+                    elabels=np.zeros(lo.size, np.int64))
+    store = OutOfCoreGraphStore.from_graph(g, chunk_edges=256)
+    assert store.n_chunks > 10
+    q = build_graph(3, [1, 1, 1], [(0, 1), (1, 2)])
+    emb, stats = SubgraphQueryEngine(store.snapshot()).query(q)
+    assert emb.shape[0] > 0
+    tel = stats.extras["ooc"]
+    assert tel["chunks_read"] < tel["n_chunks"] // 4, tel
+    assert emb_set(emb) == emb_set(
+        SubgraphQueryEngine(g).query(q)[0]
+    )
+
+
+def test_epoch_pin_keeps_generation_files(tmp_path):
+    """Compaction must not pull chunk files out from under a pinned epoch:
+    the old generation's directory survives on disk until the pin drops,
+    and queries against the pinned snapshot keep answering from it."""
+    import gc
+
+    g = _graph()
+    q = random_walk_query(g, 4, seed=1)
+    root = str(tmp_path / "store")
+    store = OutOfCoreGraphStore.from_graph(g, storage_dir=root,
+                                           chunk_edges=16)
+    snap0 = store.pin()
+    old_gen_dir = store._base.path
+    ref = SubgraphQueryEngine(snap0).query(q)[0]
+
+    lo, hi, _lab = (np.asarray(a) for a in store.alive_edges())
+    store.remove_edges(np.stack([lo[:5], hi[:5]], axis=1))
+    assert store.compact() > 0
+    assert store._base.path != old_gen_dir
+    assert os.path.isdir(old_gen_dir)  # pinned epoch still needs it
+
+    store.cache.drop_generation(snap0.ooc.base.gen_id)  # force disk reads
+    np.testing.assert_array_equal(
+        SubgraphQueryEngine(snap0).query(q)[0], ref
+    )
+
+    store.release(snap0.epoch)
+    del snap0
+    gc.collect()
+    store.snapshot()  # GC sweep runs on snapshot traffic
+    assert not os.path.isdir(old_gen_dir)
+
+
+def test_all_dead_prefilter_reads_nothing(tmp_path):
+    g = _graph()
+    store = OutOfCoreGraphStore.from_graph(g, chunk_edges=16)
+    handle = store.snapshot().ooc
+    graph, tel = handle.fetch_restricted(np.zeros(store.n_vertices, bool))
+    assert graph.src.size == 0
+    assert tel["chunks_read"] == 0 and tel["bytes_read"] == 0
+
+
+# ---------------------------------------------------------------------------
+# slow tier: resident set stays bounded on a ~20x-over-budget graph
+# ---------------------------------------------------------------------------
+
+
+_RESIDENT_SET_SCRIPT = r"""
+import os, sys, types
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # mirror tests/conftest.py's shim for strategies import
+    h = types.ModuleType("hypothesis"); h.__is_repro_shim__ = True
+    st = types.ModuleType("hypothesis.strategies"); h.strategies = st
+    sys.modules["hypothesis"] = h; sys.modules["hypothesis.strategies"] = st
+import numpy as np
+from strategies import peak_rss_bytes
+from repro.graphs import OutOfCoreGraphStore
+from repro.graphs.io import ChunkDirWriter
+from repro.graphs.csr import build_graph
+from repro.core.engine import SubgraphQueryEngine
+
+root = sys.argv[1]
+N = 450_000
+V = N + 2
+BUDGET = 1 << 20  # 1 MiB chunk-cache budget
+
+# stream a two-spine path graph to disk without materializing it: rare
+# label 1 on vertices 0..9, so a label-1 query is prunable to one chunk
+vlab = np.zeros(V, np.int64)
+vlab[:10] = 1
+w = ChunkDirWriter(os.path.join(root, "gen-00000"), V, vlab,
+                   chunk_edges=4096)
+B = 8192
+for start in range(0, N, B):
+    i = np.arange(start, min(start + B, N), dtype=np.int64)
+    lo = np.repeat(i, 2)
+    hi = np.empty_like(lo)
+    hi[0::2] = i + 1
+    hi[1::2] = i + 2
+    w.add(lo, hi, np.zeros(lo.size, np.int64))
+manifest = w.close()
+disk_bytes = 24 * manifest["n_records"]
+assert disk_bytes >= 10 * BUDGET, (disk_bytes, BUDGET)
+
+store = OutOfCoreGraphStore.open(root, resident_budget_bytes=BUDGET)
+assert store.n_edges == manifest["n_records"]
+q = build_graph(3, [1, 1, 1], [(0, 1), (1, 2)])
+eng = SubgraphQueryEngine(store.snapshot())
+# warm the jit traces and let the device allocator reach steady state
+# before taking the high-water baseline
+emb0, _ = eng.query(q)
+eng.query(q)
+base = peak_rss_bytes()
+
+emb, stats = eng.query(q)
+tel = stats.extras["ooc"]
+assert emb.shape[0] > 0 and emb.shape == emb0.shape
+assert tel["chunks_read"] < tel["n_chunks"], tel          # pruning canary
+assert tel["n_chunks"] == len(manifest["chunks"])
+assert store.cache.peak_resident_bytes <= BUDGET + 4096 * 24
+# the query's working set must be nowhere near the on-disk edge table
+delta = peak_rss_bytes() - base
+assert delta < disk_bytes // 2, (delta, disk_bytes)
+print("OK edges=%d chunks=%d/%d delta=%d" % (
+    store.n_edges, tel["chunks_read"], tel["n_chunks"], delta))
+"""
+
+
+@pytest.mark.slow
+def test_resident_set_bounded_subprocess(tmp_path):
+    """A graph ~20x the chunk-cache budget, built and queried in a fresh
+    subprocess (``ru_maxrss`` is a monotone high-water mark, so only a
+    clean process gives a meaningful delta)."""
+    assert peak_rss_bytes() > 0  # the helper itself works in-process
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([
+        os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     "src")),
+        os.path.dirname(os.path.abspath(__file__)),
+    ])
+    out = subprocess.run(
+        [sys.executable, "-c", _RESIDENT_SET_SCRIPT, str(tmp_path / "big")],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "OK" in out.stdout
