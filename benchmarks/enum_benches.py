@@ -43,6 +43,14 @@ Rows:
                            share one core, so ~1x here is expected; the
                            ≥1.5x acceptance target is for hosts where
                            shards map to real parallel silicon.
+    enum/trace_overhead  — the same join with obsv tracing disabled vs
+                           enabled; the derived field carries both times
+                           and the enabled/disabled ratio (the disabled
+                           path is the <3%-overhead CI canary)
+    enum/prometheus_canary — a registry fed from this bench must render
+                           exposition text the in-repo checker
+                           (obsv.parse_prometheus) accepts; hard-asserted
+                           in smoke mode
 
 The standard workload (few labels → large candidate sets, mid-size join
 tables) sits in the regime where the host path's numpy levels are
@@ -319,9 +327,55 @@ def bench_sharded(rows: list, *, smoke: bool = False,
     ))
 
 
+def bench_trace_overhead(rows: list, *, smoke: bool = False):
+    """Observability canaries (docs/OBSERVABILITY.md).
+
+    ``enum/trace_overhead`` times the same two-phase join with tracing
+    disabled vs enabled — the disabled path must stay free (instrumented
+    sites cost one global ``None`` check), and the enabled-vs-disabled
+    ratio is the recorded cost of span capture itself.
+    ``enum/prometheus_canary`` renders a registry fed from this bench and
+    runs it through the in-repo exposition checker.
+    """
+    from repro import obsv
+
+    if smoke:
+        v, e, u, reps = 200, 1100, 4, 3
+    else:
+        v, e, u, reps = 600, 3500, 4, 5
+    sub, q, cand = _search_inputs(v, e, 2, u)
+    t_off = _bench(lambda: device_join_search(sub, q, cand), reps=reps)
+    with obsv.tracing() as tracer:
+        t_on = _bench(lambda: device_join_search(sub, q, cand), reps=reps)
+    rows.append((
+        "enum/trace_overhead", t_off * 1e6,
+        (f"disabled_us={t_off * 1e6:.0f};enabled_us={t_on * 1e6:.0f};"
+         f"enabled_vs_disabled={t_on / t_off:.3f}x;"
+         f"spans={len(tracer.spans)}"),
+    ))
+
+    reg = obsv.MetricsRegistry()
+    h = reg.histogram("repro_bench_enum_seconds", "enum bench wall time",
+                      start=1e-6, factor=4.0, count=12)
+    h.observe(t_off, tracing="disabled")
+    h.observe(t_on, tracing="enabled")
+    reg.counter("repro_bench_enum_runs_total", "bench invocations").inc(
+        2 * (reps + 1)
+    )
+    try:
+        obsv.parse_prometheus(reg.render_prometheus())
+        status = "ok"
+    except ValueError as err:  # pragma: no cover - canary trip wire
+        status = f"INVALID:{err}"
+    if smoke:
+        assert status == "ok", status
+    rows.append(("enum/prometheus_canary", 0.0, status))
+
+
 def run_all(*, smoke: bool = False) -> list:
     rows: list = []
     bench_device_vs_host(rows, smoke=smoke)
     bench_overflow_regime(rows, smoke=smoke)
     bench_sharded(rows, smoke=smoke)
+    bench_trace_overhead(rows, smoke=smoke)
     return rows

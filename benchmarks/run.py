@@ -31,12 +31,16 @@ shard canary runs as its own CI step via ``--section shard --smoke``, and
 enum also keeps a dedicated step for its per-phase JSON artifact).
 ``--json PATH`` additionally writes the emitted rows as a JSON list —
 CI uploads these as ``BENCH_*.json`` workflow artifacts so the smoke
-trajectory is inspectable per commit.
+trajectory is inspectable per commit.  ``--trace PATH`` runs the
+selected sections under an active ``obsv`` tracer and writes the
+resulting span tree as Chrome/Perfetto trace JSON (``TRACE_*.json`` in
+CI) next to the bench rows — load it in https://ui.perfetto.dev.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 
@@ -58,8 +62,25 @@ def main() -> None:
                     help="tiny canary benches only (CI jit-regression check)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (CI workflow artifact)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run sections under an obsv tracer and write the "
+                         "span tree as Chrome/Perfetto trace JSON")
     args = ap.parse_args()
 
+    tracer_cm = contextlib.nullcontext(None)
+    if args.trace:
+        from repro import obsv
+
+        tracer_cm = obsv.tracing()
+    with tracer_cm as tracer:
+        _run_sections(args)
+    if args.trace:
+        tracer.write_chrome_trace(args.trace)
+        print(f"wrote {len(tracer.spans)} spans to {args.trace}",
+              file=sys.stderr)
+
+
+def _run_sections(args) -> None:
     print("name,us_per_call,derived")
     if args.smoke:
         if args.section in ("all", "batch"):

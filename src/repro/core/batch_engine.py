@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obsv
 from repro.configs.cni_engine import CONFIG as ENGINE_CONFIG
 from repro.core import filters as flt
 from repro.core.cni import cni_from_counts_np, default_max_p
@@ -400,11 +401,13 @@ class BatchQueryEngine:
                            1 << (remaining.bit_length() - 1))
                 chunk = idxs[pos : pos + size]
                 pos += size
-                self._run_chunk(
-                    queries, chunk, results,
-                    d_max=d_max, l_pad=l_pad, u_pad=u_pad, max_p=max_p,
-                    max_embeddings=max_embeddings,
-                )
+                with obsv.span("batch.bucket", d_max=d_max, l_pad=l_pad,
+                               u_pad=u_pad, batch_size=len(chunk)):
+                    self._run_chunk(
+                        queries, chunk, results,
+                        d_max=d_max, l_pad=l_pad, u_pad=u_pad, max_p=max_p,
+                        max_embeddings=max_embeddings,
+                    )
         return results
 
     def _query_batch_ooc(self, queries, *, max_embeddings):
@@ -482,33 +485,40 @@ class BatchQueryEngine:
         done: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
         rounds = 0
         while row_query and rounds < self.max_iters:
-            alive, cand, changed = self._ilgf_round(
-                qb, alive, l_pad=l_pad, d_max=d_max, max_p=max_p,
-            )
+            with obsv.span("batch.round", round=rounds,
+                           live=len(row_query)):
+                alive, cand, changed = self._ilgf_round(
+                    qb, alive, l_pad=l_pad, d_max=d_max, max_p=max_p,
+                )
             rounds += 1
             conv = ~np.asarray(changed)
             if not conv[: len(row_query)].any():
                 continue
-            alive_np = np.asarray(alive)
-            cand_np = np.asarray(cand)
-            keep = []
-            for r, pos in enumerate(row_query):
-                if conv[r]:
-                    done[pos] = (alive_np[r], cand_np[r], rounds)
-                else:
-                    keep.append(r)
-            row_query = [row_query[r] for r in keep]
-            if not row_query:
-                break
-            # always gather survivors to the front: batch row j must stay in
-            # lockstep with row_query[j] (retired rows also become inert)
-            new_pad = min(b_pad, ceil_pow2(len(keep)))
-            idx = np.asarray(
-                keep + [keep[0]] * (new_pad - len(keep)), np.int32
-            )
-            qb, alive = _compact_batch(
-                qb, alive, idx, np.int32(len(keep))
-            )
+            with obsv.span("batch.retire") as retire_span:
+                alive_np = np.asarray(alive)
+                cand_np = np.asarray(cand)
+                keep = []
+                for r, pos in enumerate(row_query):
+                    if conv[r]:
+                        done[pos] = (alive_np[r], cand_np[r], rounds)
+                    else:
+                        keep.append(r)
+                retire_span.set_attrs(
+                    retired=len(row_query) - len(keep), live=len(keep)
+                )
+                row_query = [row_query[r] for r in keep]
+                if not row_query:
+                    break
+                # always gather survivors to the front: batch row j must
+                # stay in lockstep with row_query[j] (retired rows also
+                # become inert)
+                new_pad = min(b_pad, ceil_pow2(len(keep)))
+                idx = np.asarray(
+                    keep + [keep[0]] * (new_pad - len(keep)), np.int32
+                )
+                qb, alive = _compact_batch(
+                    qb, alive, idx, np.int32(len(keep))
+                )
 
         if row_query:
             # max_iters hit: like the sequential engine, degrade soundly —
@@ -533,10 +543,10 @@ class BatchQueryEngine:
                 filter_seconds=filter_s / len(chunk),
                 ilgf_iterations=q_rounds,
             )
-            stats.extras["batch"] = {
-                "bucket": (d_max, l_pad, u_pad),
-                "batch_size": len(chunk),
-            }
+            stats.extras["batch"] = obsv.BatchReport(
+                bucket=(d_max, l_pad, u_pad),
+                batch_size=len(chunk),
+            ).validate()
             emb = search_filtered(
                 self._host_data, q, alive_row, cand_row[:, : q.n_vertices],
                 stats,

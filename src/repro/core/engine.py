@@ -18,12 +18,12 @@ from typing import Literal
 
 import numpy as np
 
+from repro import obsv
 from repro.core.ilgf import ilgf
 from repro.core.khop import refine_candidates_khop
 from repro.core.search import (
     bfs_join_search,
     device_join_search,
-    empty_enum_report,
     host_dfs_search,
     sharded_device_join_search,
 )
@@ -96,37 +96,37 @@ def search_filtered(
         if planner is not None:
             # keep the contract that a planner-enabled query always records
             # its plan entry: nothing survived filtering, nothing to order
-            stats.extras["plan"] = {
-                "order": (), "source": "skipped", "est_cost": 0.0,
-                "fingerprint": None, "plan_seconds": 0.0,
-            }
+            stats.extras["plan"] = obsv.PlanReport.skipped()
         if enumerator == "device" and searcher != "dfs":
             # same contract for enumeration telemetry: a device-enumerator
             # query always records the full (zeroed) phase schema, so
             # consumers never read stale or missing counters
-            stats.extras["enum"] = empty_enum_report()
+            stats.extras["enum"] = obsv.EnumReport.empty()
         return np.zeros((0, query.vlabels.shape[0]), np.int64)
 
     sub, old_ids = induced_subgraph(data, alive)
     cand = np.asarray(candidates)[alive]
     if khop > 1 and sub.n_vertices <= search_vertex_cap:
-        t_ref = time.perf_counter()
-        cand = refine_candidates_khop(sub, query, cand, k_max=khop)
-        stats.filter_seconds += time.perf_counter() - t_ref
+        with obsv.span("query.refine", khop=khop):
+            t_ref = time.perf_counter()
+            cand = refine_candidates_khop(sub, query, cand, k_max=khop)
+            stats.filter_seconds += time.perf_counter() - t_ref
     stats.candidate_pairs = int(cand.sum())
 
     order = None
     if planner is not None:
-        t_plan = time.perf_counter()
-        plan = planner.plan(query, candidate_counts=cand.sum(axis=0))
-        order = plan.order
-        stats.extras["plan"] = {
-            "order": plan.order,
-            "source": plan.source,
-            "est_cost": plan.est_cost,
-            "fingerprint": plan.fingerprint,
-            "plan_seconds": time.perf_counter() - t_plan,
-        }
+        with obsv.span("query.plan") as plan_span:
+            t_plan = time.perf_counter()
+            plan = planner.plan(query, candidate_counts=cand.sum(axis=0))
+            order = plan.order
+            stats.extras["plan"] = obsv.PlanReport(
+                order=tuple(plan.order),
+                source=plan.source,
+                est_cost=float(plan.est_cost),
+                fingerprint=plan.fingerprint,
+                plan_seconds=time.perf_counter() - t_plan,
+            ).validate()
+            plan_span.set_attrs(source=plan.source)
 
     t1 = time.perf_counter()
     if sub.n_vertices > search_vertex_cap:
@@ -135,25 +135,30 @@ def search_filtered(
             f"{search_vertex_cap}; raise search_vertex_cap or use "
             "the distributed engine"
         )
-    if searcher == "dfs":
-        emb = host_dfs_search(sub, query, cand, order=order,
-                              max_embeddings=max_embeddings)
-    elif enumerator == "device":
-        enum_report: dict = {}
-        if mesh is not None:
-            emb = sharded_device_join_search(
-                sub, query, cand, mesh=mesh, axis=shard_axis,
-                order=order, max_embeddings=max_embeddings,
-                report=enum_report,
-            )
+    with obsv.span("query.enumerate", searcher=searcher,
+                   enumerator=enumerator) as enum_span:
+        if searcher == "dfs":
+            emb = host_dfs_search(sub, query, cand, order=order,
+                                  max_embeddings=max_embeddings)
+        elif enumerator == "device":
+            enum_report: dict = {}
+            if mesh is not None:
+                emb = sharded_device_join_search(
+                    sub, query, cand, mesh=mesh, axis=shard_axis,
+                    order=order, max_embeddings=max_embeddings,
+                    report=enum_report,
+                )
+            else:
+                emb = device_join_search(sub, query, cand, order=order,
+                                         max_embeddings=max_embeddings,
+                                         report=enum_report)
+            # from_dict is the schema checkpoint: every device-enumerator
+            # exit path funnels its searcher dict through validation here
+            stats.extras["enum"] = obsv.EnumReport.from_dict(enum_report)
         else:
-            emb = device_join_search(sub, query, cand, order=order,
-                                     max_embeddings=max_embeddings,
-                                     report=enum_report)
-        stats.extras["enum"] = enum_report
-    else:
-        emb = bfs_join_search(sub, query, cand, order=order,
-                              max_embeddings=max_embeddings)
+            emb = bfs_join_search(sub, query, cand, order=order,
+                                  max_embeddings=max_embeddings)
+        enum_span.set_attrs(n_embeddings=int(emb.shape[0]))
     stats.search_seconds = time.perf_counter() - t1
     stats.n_embeddings = int(emb.shape[0])
     return old_ids[emb] if emb.size else emb
@@ -239,9 +244,19 @@ class SubgraphQueryEngine:
             self._prepared = prepare_sharded_edges(snap, mesh, shard_axis)
 
     def query(self, q: Graph, *, max_embeddings: int | None = None):
-        """Returns (embeddings (M, |V(Q)|) int64 over original ids, stats)."""
-        if self._ooc is not None:
-            return self._query_ooc(q, max_embeddings=max_embeddings)
+        """Returns (embeddings (M, |V(Q)|) int64 over original ids, stats).
+
+        With an active ``obsv`` tracer each call opens one ``query`` root
+        span (a fresh trace when called outside a service request) with
+        ``query.filter`` / ``query.plan`` / ``query.enumerate`` children.
+        """
+        with obsv.span("query", n_vertices=int(self.data.n_vertices),
+                       ooc=self._ooc is not None):
+            if self._ooc is not None:
+                return self._query_ooc(q, max_embeddings=max_embeddings)
+            return self._query_mem(q, max_embeddings=max_embeddings)
+
+    def _query_mem(self, q: Graph, *, max_embeddings: int | None):
         stats = QueryStats(vertices_before=self.data.n_vertices)
         t0 = time.perf_counter()
         alive0 = None
@@ -266,6 +281,9 @@ class SubgraphQueryEngine:
         alive = np.asarray(res.alive)
         stats.ilgf_iterations = int(res.iterations)
         stats.filter_seconds = time.perf_counter() - t0
+        obsv.span_at("query.filter", t0, t0 + stats.filter_seconds,
+                     iterations=stats.ilgf_iterations,
+                     alive=int(alive.sum()))
         emb = search_filtered(
             self._host_data,
             q,
@@ -308,6 +326,9 @@ class SubgraphQueryEngine:
         alive = np.asarray(res.alive)
         stats.ilgf_iterations = int(res.iterations)
         stats.filter_seconds = time.perf_counter() - t0
+        obsv.span_at("query.filter", t0, t0 + stats.filter_seconds,
+                     iterations=stats.ilgf_iterations,
+                     alive=int(alive.sum()))
         emb = search_filtered(
             to_host(restricted),
             q,

@@ -41,13 +41,13 @@ from __future__ import annotations
 
 import functools
 import time
-import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obsv
 from repro.graphs.csr import Graph
 
 # ---------------------------------------------------------------------------
@@ -423,23 +423,10 @@ def empty_enum_report() -> dict:
       [per-shard rows], "rebalanced", "rebalance_seconds"}`` backing the
       bench JSON's per-level rebalance timings.
     """
-    return {
-        "device_rounds": 0,
-        "host_levels": 0,
-        "count_seconds": 0.0,
-        "scan_seconds": 0.0,
-        "emit_seconds": 0.0,
-        "max_table_rows": 0,
-        "max_emit_rows": 0,
-        "scan_path": None,
-        "enum_shards": 0,
-        "emit_rows_max": 0,
-        "emit_rows_min": 0,
-        "rebalance_rounds": 0,
-        "rebalance_rows_moved": 0,
-        "rebalance_seconds": 0.0,
-        "levels": [],
-    }
+    # generated from the typed schema of record (obsv.reports.EnumReport)
+    # so the searcher-side plain dict and the stats.extras dataclass can
+    # never drift apart
+    return obsv.EnumReport.empty().to_dict()
 
 
 def _level_record(level: int, emit_rows, *, rebalanced: bool = False,
@@ -603,8 +590,6 @@ def device_join_search(
     candidates: np.ndarray,
     *,
     order: Sequence[int] | None = None,
-    device_rows: int | None = None,
-    chunk_rows: int | None = None,
     max_embeddings: int | None = None,
     use_kernel: bool | None = None,
     report: dict | None = None,
@@ -635,25 +620,19 @@ def device_join_search(
     slack), and high-cardinality levels — precisely where the old engine
     abandoned the device — stay fused.
 
-    ``device_rows`` / ``chunk_rows`` — the capacity knobs of the old
-    capacity-capped engine — are **deprecated**: the two-phase join has no
-    buffer cap left to size, so passing them emits a ``DeprecationWarning``
-    and they will be removed in the next release.  ``use_kernel``: None =
-    auto (Pallas kernels + on-device scan on TPU, oracle + host-assisted
-    scan elsewhere); True forces the kernel path (interpret mode off-TPU —
-    parity testing); False forces the oracle.  ``report``: optional dict
-    filled with the ``empty_enum_report()`` telemetry schema (phase
-    timings, exact-sizing ceilings); phase timings force a device sync per
-    phase, so pass ``report=None`` on latency-critical calls.
+    ``use_kernel``: None = auto (Pallas kernels + on-device scan on TPU,
+    oracle + host-assisted scan elsewhere); True forces the kernel path
+    (interpret mode off-TPU — parity testing); False forces the oracle.
+    ``report``: optional dict filled with the ``empty_enum_report()``
+    telemetry schema (phase timings, exact-sizing ceilings); phase timings
+    force a device sync per phase, so pass ``report=None`` on
+    latency-critical calls.  (The old capacity knobs ``device_rows`` /
+    ``chunk_rows``, deprecated when the two-phase join removed the buffer
+    cap, are gone.)
+
+    With an active ``obsv`` tracer, each level emits ``enum.count`` /
+    ``enum.scan`` / ``enum.emit`` spans carrying a ``level`` attribute.
     """
-    if device_rows is not None or chunk_rows is not None:
-        warnings.warn(
-            "device_rows/chunk_rows no longer do anything: the two-phase "
-            "device join sizes every buffer exactly and will drop both "
-            "kwargs in the next release — remove them from the call",
-            DeprecationWarning,
-            stacklevel=2,
-        )
     cand = np.asarray(candidates)
     n_q = query.vlabels.shape[0]
     n_d = data.vlabels.shape[0]
@@ -731,14 +710,18 @@ def device_join_search(
             counts = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
             if report is not None:
                 counts.block_until_ready()
-            stats["count_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["count_seconds"] += t1 - t0
+            obsv.span_at("enum.count", t0, t1, level=t, rows=n_rows)
 
             # -- scan: on-device exclusive prefix sum; one scalar syncs
             t0 = time.perf_counter()
             inclusive = jnp.cumsum(counts)
             row_off = inclusive - counts
             total = int(inclusive[-1])
-            stats["scan_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["scan_seconds"] += t1 - t0
+            obsv.span_at("enum.scan", t0, t1, level=t)
 
             if total == 0:
                 table_dev = jnp.zeros((1, t + 1), jnp.int32)
@@ -764,7 +747,9 @@ def device_join_search(
             )
             if report is not None:
                 table_dev.block_until_ready()
-            stats["emit_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["emit_seconds"] += t1 - t0
+            obsv.span_at("enum.emit", t0, t1, level=t, rows=total)
         else:
             # host-assisted scan (XLA-CPU): the validity grid is evaluated
             # in cell-budgeted fused dispatches and only the 1-byte
@@ -783,12 +768,16 @@ def device_join_search(
                 if ri.size:
                     r_list.append(ri.astype(np.int32) + np.int32(lo))
                     c_list.append(ci.astype(np.int32))
-            stats["count_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["count_seconds"] += t1 - t0
+            obsv.span_at("enum.count", t0, t1, level=t, rows=n_rows)
 
             t0 = time.perf_counter()
             total = sum(r.size for r in r_list)
             if total == 0:
-                stats["scan_seconds"] += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats["scan_seconds"] += t1 - t0
+                obsv.span_at("enum.scan", t0, t1, level=t)
                 table_dev = jnp.zeros((1, t + 1), jnp.int32)
                 n_rows = 0
                 stats["levels"].append(_level_record(t, [0]))
@@ -798,7 +787,9 @@ def device_join_search(
             c_idx = np.zeros(out_cap, np.int32)
             r_idx[:total] = np.concatenate(r_list)
             c_idx[:total] = np.concatenate(c_list)
-            stats["scan_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["scan_seconds"] += t1 - t0
+            obsv.span_at("enum.scan", t0, t1, level=t)
 
             # emit: index upload + one on-device gather into the
             # exactly-sized buffer — the table itself never crosses
@@ -809,7 +800,9 @@ def device_join_search(
             )
             if report is not None:
                 table_dev.block_until_ready()
-            stats["emit_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["emit_seconds"] += t1 - t0
+            obsv.span_at("enum.emit", t0, t1, level=t, rows=total)
 
         n_rows = total
         stats["max_table_rows"] = max(stats["max_table_rows"], total)
@@ -951,12 +944,17 @@ def sharded_device_join_search(
                 qp, ql, qv,
             )
             shard_tot = np.asarray(totals_j).astype(np.int64)
-            stats["count_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["count_seconds"] += t1 - t0
+            obsv.span_at("enum.count", t0, t1, level=t, rows=total,
+                         shards=n_shards)
 
             t0 = time.perf_counter()
             new_total = int(shard_tot.sum())
             if new_total == 0:
-                stats["scan_seconds"] += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats["scan_seconds"] += t1 - t0
+                obsv.span_at("enum.scan", t0, t1, level=t)
                 total = 0
                 sizes = np.zeros(n_shards, np.int64)
                 stats["levels"].append(_level_record(t, [0] * n_shards))
@@ -1006,7 +1004,11 @@ def sharded_device_join_search(
                     stats["rebalance_rounds"] += 1
                     stats["rebalance_rows_moved"] += moved
                     stats["rebalance_seconds"] += rebal_dt
-            stats["scan_seconds"] += time.perf_counter() - t0 - rebal_dt
+                    obsv.span_at("enum.rebalance", t_r, t_r + rebal_dt,
+                                 level=t, rows_moved=moved)
+            t1 = time.perf_counter()
+            stats["scan_seconds"] += t1 - t0 - rebal_dt
+            obsv.span_at("enum.scan", t0, t1, level=t)
 
             # -- emit: uniform exactly-sized shard blocks
             t0 = time.perf_counter()
@@ -1019,7 +1021,9 @@ def sharded_device_join_search(
             )
             if report is not None:
                 table_j.block_until_ready()
-            stats["emit_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["emit_seconds"] += t1 - t0
+            obsv.span_at("enum.emit", t0, t1, level=t, rows=new_total)
         else:
             # host-assisted scan: per-shard validity bitmasks cross back
             # (same bytes as the single-device path), numpy's nonzero is
@@ -1031,14 +1035,19 @@ def sharded_device_join_search(
                 qp, ql, qv,
             )
             valid_h = np.asarray(valid_j)  # (D, pcap, c_pad) bool
-            stats["count_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["count_seconds"] += t1 - t0
+            obsv.span_at("enum.count", t0, t1, level=t, rows=total,
+                         shards=n_shards)
 
             t0 = time.perf_counter()
             counts_rows = valid_h.sum(axis=2, dtype=np.int64)  # (D, pcap)
             shard_tot = counts_rows.sum(axis=1)
             new_total = int(shard_tot.sum())
             if new_total == 0:
-                stats["scan_seconds"] += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats["scan_seconds"] += t1 - t0
+                obsv.span_at("enum.scan", t0, t1, level=t)
                 total = 0
                 sizes = np.zeros(n_shards, np.int64)
                 stats["levels"].append(_level_record(t, [0] * n_shards))
@@ -1086,6 +1095,8 @@ def sharded_device_join_search(
                     stats["rebalance_rounds"] += 1
                     stats["rebalance_rows_moved"] += moved
                     stats["rebalance_seconds"] += rebal_dt
+                    obsv.span_at("enum.rebalance", t_r, t_r + rebal_dt,
+                                 level=t, rows_moved=moved)
 
             out_cap = _align_rows(int(shard_tot.max()))
             r_idx_h = np.zeros((n_shards, out_cap), np.int32)
@@ -1094,7 +1105,9 @@ def sharded_device_join_search(
                 ri, ci = np.nonzero(grids[i])  # flat row-major per shard
                 r_idx_h[i, : ri.size] = ri
                 c_idx_h[i, : ci.size] = ci
-            stats["scan_seconds"] += time.perf_counter() - t0 - rebal_dt
+            t1 = time.perf_counter()
+            stats["scan_seconds"] += t1 - t0 - rebal_dt
+            obsv.span_at("enum.scan", t0, t1, level=t)
 
             # emit: index upload + one sharded gather, table never crosses
             t0 = time.perf_counter()
@@ -1106,7 +1119,9 @@ def sharded_device_join_search(
             )
             if report is not None:
                 table_j.block_until_ready()
-            stats["emit_seconds"] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stats["emit_seconds"] += t1 - t0
+            obsv.span_at("enum.emit", t0, t1, level=t, rows=new_total)
 
         # advance: children become the next level's contiguous blocks
         sizes = shard_tot.astype(np.int64)

@@ -48,6 +48,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro import obsv
 from repro.graphs.csr import Graph, build_graph
 from repro.graphs.io import (
     ChunkDirWriter,
@@ -88,9 +89,16 @@ class ChunkCache:
         if rec is not None:
             self.hits += 1
             self._entries.move_to_end(key)
+            if obsv.enabled():  # zero-duration marker: resident, no IO
+                now = time.perf_counter()
+                obsv.span_at("ooc.chunk", now, now,
+                             gen=key[0], chunk=key[1], hit=True)
             return rec
         self.misses += 1
-        rec = loader()
+        with obsv.span("ooc.chunk", gen=key[0], chunk=key[1],
+                       hit=False) as sp:
+            rec = loader()
+            sp.set_attrs(bytes=int(rec.nbytes))
         self.bytes_read += rec.nbytes
         self._entries[key] = rec
         self.resident_bytes += rec.nbytes
@@ -203,13 +211,33 @@ class OocSnapshot:
     def n_chunks(self) -> int:
         return self.base.n_chunks
 
-    def fetch_restricted(self, alive0) -> tuple[Graph, dict]:
+    def _tel(self, before: dict, t0: float, edges_fetched: int,
+             partial: bool) -> "obsv.OocReport":
+        after = self.cache.counters()
+        return obsv.OocReport(
+            chunks_read=after["chunks_read"] - before["chunks_read"],
+            cache_hits=after["cache_hits"] - before["cache_hits"],
+            cache_misses=after["cache_misses"] - before["cache_misses"],
+            bytes_read=after["bytes_read"] - before["bytes_read"],
+            n_chunks=self.base.n_chunks,
+            edges_fetched=int(edges_fetched),
+            peak_resident_bytes=self.cache.peak_resident_bytes,
+            resident_budget_bytes=self.cache.budget_bytes,
+            fetch_seconds=time.perf_counter() - t0,
+            partial=partial,
+        ).validate()
+
+    def fetch_restricted(self, alive0) -> tuple[Graph, "obsv.OocReport"]:
         """Edges with *both* endpoints in ``alive0``, as a full-V ``Graph``.
 
         Chunk selection is interval pruning on the manifest: a chunk is
         touched only when the alive set intersects both its ``lo`` and its
-        ``hi`` range.  Returns ``(graph, telemetry)`` — the telemetry dict
-        is what engines surface as ``stats.extras["ooc"]``.
+        ``hi`` range.  Returns ``(graph, telemetry)`` — the telemetry is a
+        typed ``obsv.OocReport`` (a Mapping; engines surface it as
+        ``stats.extras["ooc"]``).  On a disk fault the raised
+        ``ChunkIOError`` carries a *partial* report (``err.tel``,
+        ``partial=True``) covering the IO done before the failure, so the
+        service's failure path still surfaces telemetry.
         """
         t0 = time.perf_counter()
         alive0 = np.asarray(alive0, dtype=bool)
@@ -219,38 +247,47 @@ class OocSnapshot:
                 f"got shape {alive0.shape}"
             )
         before = self.cache.counters()
-        psum = np.zeros(self.n_vertices + 1, np.int64)
-        np.cumsum(alive0, out=psum[1:])
-        hit_lo = psum[self.base.lo_max + 1] > psum[self.base.lo_min]
-        hit_hi = psum[self.base.hi_max + 1] > psum[self.base.hi_min]
-        parts = []
-        for cid in np.nonzero(hit_lo & hit_hi)[0]:
-            rec = self.base.chunk(int(cid), self.cache)
-            keep = alive0[rec[:, 0]] & alive0[rec[:, 1]]
-            if self._ov_keys.size:
-                keys = rec[:, 0] * np.int64(self.n_vertices) + rec[:, 1]
-                pos = np.searchsorted(self._ov_keys, keys)
-                pos_c = np.minimum(pos, self._ov_keys.size - 1)
-                keep &= ~(self._ov_keys[pos_c] == keys)
-            if keep.any():
-                parts.append(rec[keep])
-        if self._ov_edges.shape[0]:
-            ov = self._ov_edges
-            keep = alive0[ov[:, 0]] & alive0[ov[:, 1]]
-            if keep.any():
-                parts.append(ov[keep])
-        rows = (np.concatenate(parts, axis=0) if parts
-                else np.zeros((0, 3), np.int64))
-        g = build_graph(self.n_vertices, self.vlabels, rows[:, :2], rows[:, 2])
-        after = self.cache.counters()
-        tel = {k: after[k] - before[k] for k in after}
-        tel.update(
-            n_chunks=self.base.n_chunks,
-            edges_fetched=int(rows.shape[0]),
-            peak_resident_bytes=self.cache.peak_resident_bytes,
-            resident_budget_bytes=self.cache.budget_bytes,
-            fetch_seconds=time.perf_counter() - t0,
-        )
+        with obsv.span("ooc.fetch") as fetch_span:
+            with obsv.span("ooc.manifest") as man_span:
+                psum = np.zeros(self.n_vertices + 1, np.int64)
+                np.cumsum(alive0, out=psum[1:])
+                hit_lo = psum[self.base.lo_max + 1] > psum[self.base.lo_min]
+                hit_hi = psum[self.base.hi_max + 1] > psum[self.base.hi_min]
+                touched = np.nonzero(hit_lo & hit_hi)[0]
+                man_span.set_attrs(chunks_touched=int(touched.size),
+                                   n_chunks=self.base.n_chunks)
+            parts = []
+            try:
+                for cid in touched:
+                    rec = self.base.chunk(int(cid), self.cache)
+                    keep = alive0[rec[:, 0]] & alive0[rec[:, 1]]
+                    if self._ov_keys.size:
+                        keys = (rec[:, 0] * np.int64(self.n_vertices)
+                                + rec[:, 1])
+                        pos = np.searchsorted(self._ov_keys, keys)
+                        pos_c = np.minimum(pos, self._ov_keys.size - 1)
+                        keep &= ~(self._ov_keys[pos_c] == keys)
+                    if keep.any():
+                        parts.append(rec[keep])
+            except ChunkIOError as err:
+                # fail closed, but not silent: the typed error carries the
+                # IO counters accumulated before the fault
+                err.tel = self._tel(before, t0, edges_fetched=0,
+                                    partial=True)
+                raise
+            if self._ov_edges.shape[0]:
+                ov = self._ov_edges
+                keep = alive0[ov[:, 0]] & alive0[ov[:, 1]]
+                if keep.any():
+                    parts.append(ov[keep])
+            rows = (np.concatenate(parts, axis=0) if parts
+                    else np.zeros((0, 3), np.int64))
+            g = build_graph(self.n_vertices, self.vlabels, rows[:, :2],
+                            rows[:, 2])
+            tel = self._tel(before, t0, edges_fetched=rows.shape[0],
+                            partial=False)
+            fetch_span.set_attrs(chunks_read=tel["chunks_read"],
+                                 edges_fetched=tel["edges_fetched"])
         return g, tel
 
 

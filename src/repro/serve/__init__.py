@@ -1,6 +1,7 @@
 from repro.serve.engine import ServeEngine, ServeConfig
 from repro.serve.graph_service import (
     CancelledRequest,
+    FailedRequest,
     GraphQueryService,
     GraphServiceConfig,
 )
@@ -9,6 +10,7 @@ __all__ = [
     "ServeEngine",
     "ServeConfig",
     "CancelledRequest",
+    "FailedRequest",
     "GraphQueryService",
     "GraphServiceConfig",
 ]

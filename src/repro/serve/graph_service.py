@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obsv
 from repro.core import filters as flt
 from repro.core.batch_engine import (
     BatchedQueries,
@@ -115,14 +116,37 @@ class _Request:
     rounds: int = 0
     slot: int = -1
     epoch: int = -1
+    span: object = None  # obsv.Span root, open from admit to finalize
 
 
 class CancelledRequest(NamedTuple):
-    """A request the service gave up on — reported, never silently dropped."""
+    """A request the service gave up on — reported, never silently dropped.
+
+    ``ooc``: the pinned epoch's accumulated chunk-IO telemetry
+    (``obsv.OocReport``) for requests cancelled *after* admission on an
+    out-of-core store; ``None`` for never-admitted requests (no epoch, no
+    IO done on their behalf).
+    """
 
     rid: int
     reason: str
     queued_seconds: float
+    ooc: object = None
+
+
+class FailedRequest(NamedTuple):
+    """A request that died on the fail-closed path (e.g. ``ChunkIOError``).
+
+    Appended to ``GraphQueryService.failures`` *before* the typed error
+    propagates, so queue-wait and the partial chunk-IO telemetry
+    (``obsv.OocReport`` with ``partial=True``, when available) survive the
+    exception instead of vanishing with the freed slot.
+    """
+
+    rid: int
+    reason: str
+    queued_seconds: float
+    ooc: object = None
 
 
 class _EpochEntry(NamedTuple):
@@ -204,8 +228,63 @@ class GraphQueryService:
         # admitted slot's prefilter seed (the restricted graph must cover all
         # of them), and the accumulated chunk-fetch telemetry for results
         self._ooc_cover: dict[int, np.ndarray] = {}
-        self._ooc_tel: dict[int, dict] = {}
+        self._ooc_tel: dict[int, obsv.OocReport] = {}
         self._shutting_down = False
+        self.failures: list[FailedRequest] = []
+        # Always-on service metrics (negligible cost: plain dict/bisect
+        # updates on the host path).  Scrape via ``metrics_text()``.
+        self.metrics = obsv.MetricsRegistry()
+        m = self.metrics
+        self._m_queue_wait = m.histogram(
+            "repro_service_queue_wait_seconds",
+            "Submit-to-admission wait per request",
+            start=1e-5, factor=4.0, count=14,
+        )
+        self._m_stage = m.histogram(
+            "repro_service_stage_seconds",
+            "Per-stage latency (label stage: filter|plan|enumerate|total)",
+            start=1e-5, factor=4.0, count=14,
+        )
+        self._m_requests = m.counter(
+            "repro_service_requests_total",
+            "Requests by terminal status (completed|failed|cancelled)",
+        )
+        self._m_ticks = m.counter(
+            "repro_service_ticks_total", "Scheduler ticks run"
+        )
+        self._m_admitted = m.counter(
+            "repro_service_admitted_total", "Requests admitted into slots"
+        )
+        self._m_embeddings = m.counter(
+            "repro_service_embeddings_total", "Embeddings emitted to callers"
+        )
+        self._m_rounds = m.counter(
+            "repro_service_rounds_total", "Batched peeling rounds dispatched"
+        )
+        self._m_active = m.gauge(
+            "repro_service_active_slots", "Currently occupied query slots"
+        )
+        self._m_ooc_chunks = m.counter(
+            "repro_ooc_chunks_read_total",
+            "Chunk accesses during restricted fetches",
+        )
+        self._m_ooc_bytes = m.counter(
+            "repro_ooc_bytes_read_total", "Bytes read from chunk files"
+        )
+        self._m_ooc_hits = m.counter(
+            "repro_ooc_cache_hits_total", "Chunk-cache hits"
+        )
+        self._m_ooc_misses = m.counter(
+            "repro_ooc_cache_misses_total", "Chunk-cache misses (disk reads)"
+        )
+        self._m_hit_ratio = m.gauge(
+            "repro_ooc_cache_hit_ratio",
+            "Lifetime chunk-cache hit ratio of the backing store",
+        )
+        self._m_rss = m.gauge(
+            "repro_process_peak_rss_bytes",
+            "Host-level canary: process peak resident set size",
+        )
         self.planner = None
         if self.cfg.planner is not None:
             self.planner = self.cfg.planner
@@ -279,14 +358,15 @@ class GraphQueryService:
         new_cover = alive_row.copy() if cover is None else (cover | alive_row)
         restricted, tel = entry.snapshot.ooc.fetch_restricted(new_cover)
         self._ooc_cover[epoch] = new_cover
-        agg = self._ooc_tel.setdefault(epoch, {"fetches": 0})
-        agg["fetches"] += 1
-        for k, v in tel.items():
-            if k in ("n_chunks", "peak_resident_bytes",
-                     "resident_budget_bytes"):
-                agg[k] = v  # point-in-time gauges, not counters
-            else:
-                agg[k] = agg.get(k, 0) + v
+        # ``tel`` is a typed obsv.OocReport (fetches=1); merge() sums the
+        # counters and carries the point-in-time gauges forward, so the
+        # per-epoch aggregate stays a validated report.
+        agg = self._ooc_tel.get(epoch)
+        self._ooc_tel[epoch] = tel if agg is None else agg.merge(tel)
+        self._m_ooc_chunks.inc(tel.chunks_read)
+        self._m_ooc_bytes.inc(tel.bytes_read)
+        self._m_ooc_hits.inc(tel.cache_hits)
+        self._m_ooc_misses.inc(tel.cache_misses)
         self._epochs[epoch] = _EpochEntry(
             snapshot=entry.snapshot._replace(graph=restricted),
             host_graph=to_host(restricted),
@@ -362,6 +442,12 @@ class GraphQueryService:
         after a mutation, old and new queries coexist on their own epochs
         until the old ones drain.
         """
+        self._m_ticks.inc()
+        with obsv.span("service.tick", active=self.n_active,
+                       queued=len(self.queue)):
+            return self._tick()
+
+    def _tick(self) -> list[tuple[int, np.ndarray, QueryStats]]:
         self._admit()
         live = [r for r in self.active if r is not None]
         if not live:
@@ -381,6 +467,7 @@ class GraphQueryService:
                 counts=self._counts, digest=self._digest, mnd=self._mnd,
             )
             entry = self._epochs[epoch]
+            t_round = time.perf_counter()
             if entry.sharded is not None:
                 from repro.core.distributed import sharded_batched_ilgf_round
 
@@ -402,8 +489,16 @@ class GraphQueryService:
                 )
             converged = ~np.asarray(changed)
             alive_merged = jnp.where(mask[:, None], new_alive, alive_merged)
+            self._m_rounds.inc()
+            t_round_end = time.perf_counter()
             for req in group:
                 req.rounds += 1
+                # one fused dispatch serves the whole epoch group; the
+                # shared round is mirrored into each member's request trace
+                # (flagged ``shared`` so durations aren't summed naively)
+                obsv.span_at("service.filter_round", t_round, t_round_end,
+                             parent=req.span, round=req.rounds,
+                             epoch=epoch, shared=len(group) > 1)
                 if (converged[req.slot]
                         or req.rounds >= self.cfg.max_rounds_per_query):
                     finished.append(self._finalize(req, new_alive, cand))
@@ -439,10 +534,16 @@ class GraphQueryService:
                 finished.extend(self.tick())
         else:
             for req in [r for r in self.active if r is not None]:
+                # the partial work done on the request's behalf is not lost:
+                # its epoch's accumulated chunk-IO telemetry rides along
                 cancelled.append(CancelledRequest(
                     req.rid, "shutdown before completion",
                     now - req.submitted_at,
+                    ooc=self._ooc_tel.get(req.epoch),
                 ))
+                if req.span is not None:
+                    req.span.set_attrs(cancelled=True)
+                    obsv.end(req.span)
                 self._free(req.slot)
         for req in self.queue:
             cancelled.append(CancelledRequest(
@@ -450,7 +551,34 @@ class GraphQueryService:
                 now - req.submitted_at,
             ))
         self.queue.clear()
+        self._m_requests.inc(len(cancelled), status="cancelled")
         return finished, cancelled
+
+    def metrics_snapshot(self) -> dict:
+        """Point-in-time value of every registered metric (plain dict)."""
+        self._refresh_gauges()
+        return self.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Render the registry in Prometheus exposition format."""
+        self._refresh_gauges()
+        return self.metrics.render_prometheus()
+
+    def _refresh_gauges(self) -> None:
+        self._m_active.set(self.n_active)
+        if self._ooc is not None:
+            cache = self._ooc.cache
+            acc = cache.hits + cache.misses
+            self._m_hit_ratio.set(cache.hits / acc if acc else 0.0)
+        try:
+            import resource
+
+            # ru_maxrss is KiB on Linux
+            self._m_rss.set(
+                resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+            )
+        except Exception:  # pragma: no cover - platforms without getrusage
+            pass
 
     @property
     def n_active(self) -> int:
@@ -469,44 +597,77 @@ class GraphQueryService:
             if self.active[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 req.slot = slot
-                entry = self._pin_current()
-                req.epoch = entry.snapshot.epoch
-                self.active[slot] = req
-                ords, counts, digest, mnd = prepare_padded_query(
-                    req.query, entry.host_graph.vlabels, self.d_max,
-                    self.max_p, self.cfg.max_query_vertices,
-                    self.cfg.max_query_labels,
-                )
-                alive_row = ords > 0
-                if entry.snapshot.index is not None:
-                    # maintained store digests stand in for round one
-                    from repro.core.incremental import store_prefilter
-
-                    alive_row = alive_row & store_prefilter(
-                        entry.snapshot.index, req.query,
-                        variant=self.cfg.filter_variant,
+                now = time.perf_counter()
+                queue_s = now - req.submitted_at
+                self._m_queue_wait.observe(queue_s)
+                self._m_admitted.inc()
+                # One detached root span per request: it stays open across
+                # ticks until finalize/cancel, so the whole lifetime —
+                # queue-wait, admission, every peeling round's tick, and the
+                # finalize search — lands in a single per-request trace tree.
+                req.span = obsv.start_detached("service.request", rid=req.rid)
+                obsv.span_at("service.queue_wait", req.submitted_at, now,
+                             parent=req.span, rid=req.rid)
+                with obsv.activate(req.span), \
+                        obsv.span("service.admit", slot=slot) as admit_span:
+                    with obsv.span("service.epoch_pin"):
+                        entry = self._pin_current()
+                    req.epoch = entry.snapshot.epoch
+                    admit_span.set_attrs(epoch=req.epoch)
+                    self.active[slot] = req
+                    ords, counts, digest, mnd = prepare_padded_query(
+                        req.query, entry.host_graph.vlabels, self.d_max,
+                        self.max_p, self.cfg.max_query_vertices,
+                        self.cfg.max_query_labels,
                     )
-                if entry.snapshot.ooc is not None:
-                    # fetch (or widen) this epoch's restricted edge set so
-                    # it covers the new slot's seed.  Fail closed: a chunk
-                    # I/O failure frees the slot — releasing the epoch pin —
-                    # and surfaces the typed error to the caller; the
-                    # service stays usable for subsequent submissions.
-                    try:
-                        self._ensure_ooc_cover(
-                            req.epoch, np.asarray(alive_row, dtype=bool)
+                    alive_row = ords > 0
+                    if entry.snapshot.index is not None:
+                        # maintained store digests stand in for round one
+                        from repro.core.incremental import store_prefilter
+
+                        alive_row = alive_row & store_prefilter(
+                            entry.snapshot.index, req.query,
+                            variant=self.cfg.filter_variant,
                         )
-                    except ChunkIOError:
-                        self._free(slot)
-                        raise
-                self._ords = self._ords.at[slot].set(ords)
-                self._counts = self._counts.at[slot].set(counts)
-                self._digest = jax.tree_util.tree_map(
-                    lambda acc, row: acc.at[slot].set(row),
-                    self._digest, digest,
-                )
-                self._mnd = self._mnd.at[slot].set(mnd)
-                self._alive = self._alive.at[slot].set(jnp.asarray(alive_row))
+                    if entry.snapshot.ooc is not None:
+                        # fetch (or widen) this epoch's restricted edge set
+                        # so it covers the new slot's seed.  Fail closed: a
+                        # chunk I/O failure frees the slot — releasing the
+                        # epoch pin — and surfaces the typed error to the
+                        # caller; the service stays usable for subsequent
+                        # submissions.  The request's queue-wait and the
+                        # fetch's partial IO telemetry are recorded in
+                        # ``self.failures`` first, not lost with the slot.
+                        try:
+                            self._ensure_ooc_cover(
+                                req.epoch, np.asarray(alive_row, dtype=bool)
+                            )
+                        except ChunkIOError as err:
+                            tel = getattr(err, "tel", None)
+                            prior = self._ooc_tel.get(req.epoch)
+                            if prior is not None and tel is not None:
+                                tel = prior.merge(tel)
+                            elif tel is None:
+                                tel = prior
+                            self.failures.append(FailedRequest(
+                                req.rid, str(err), queue_s, ooc=tel,
+                            ))
+                            self._m_requests.inc(1, status="failed")
+                            if req.span is not None:
+                                req.span.set_attrs(failed=True)
+                                obsv.end(req.span)
+                            self._free(slot)
+                            raise
+                    self._ords = self._ords.at[slot].set(ords)
+                    self._counts = self._counts.at[slot].set(counts)
+                    self._digest = jax.tree_util.tree_map(
+                        lambda acc, row: acc.at[slot].set(row),
+                        self._digest, digest,
+                    )
+                    self._mnd = self._mnd.at[slot].set(mnd)
+                    self._alive = self._alive.at[slot].set(
+                        jnp.asarray(alive_row)
+                    )
 
     def _finalize(self, req: _Request, alive, cand):
         u_q = req.query.n_vertices
@@ -516,25 +677,43 @@ class GraphQueryService:
             vertices_before=self.n_vertices,
             ilgf_iterations=req.rounds,
         )
-        stats.extras["service"] = {
-            "slot": req.slot,
-            "epoch": req.epoch,
-            "queue_seconds": time.perf_counter() - req.submitted_at,
-        }
+        stats.extras["service"] = obsv.ServiceReport(
+            slot=req.slot,
+            epoch=req.epoch,
+            queue_seconds=time.perf_counter() - req.submitted_at,
+            rounds=req.rounds,
+            trace_id=req.span.trace_id if req.span is not None else None,
+        ).validate()
         if req.epoch in self._ooc_tel:
-            stats.extras["ooc"] = dict(self._ooc_tel[req.epoch])
-        emb = search_filtered(
-            self._epochs[req.epoch].host_graph, req.query, alive_np, cand_np,
-            stats,
-            khop=self.cfg.khop,
-            searcher=self.cfg.searcher,
-            search_vertex_cap=self.cfg.search_vertex_cap,
-            max_embeddings=req.max_embeddings,
-            planner=self.planner,
-            enumerator=self.cfg.enumerator,
-            mesh=self.cfg.mesh,
-            shard_axis=self.cfg.shard_axis,
-        )
+            # the accumulated (typed, Mapping-compatible) epoch report —
+            # reports are never mutated in place, so sharing is safe
+            stats.extras["ooc"] = self._ooc_tel[req.epoch]
+        t0 = time.perf_counter()
+        with obsv.activate(req.span), \
+                obsv.span("service.finalize", rid=req.rid, rounds=req.rounds):
+            emb = search_filtered(
+                self._epochs[req.epoch].host_graph, req.query, alive_np,
+                cand_np, stats,
+                khop=self.cfg.khop,
+                searcher=self.cfg.searcher,
+                search_vertex_cap=self.cfg.search_vertex_cap,
+                max_embeddings=req.max_embeddings,
+                planner=self.planner,
+                enumerator=self.cfg.enumerator,
+                mesh=self.cfg.mesh,
+                shard_axis=self.cfg.shard_axis,
+            )
+        if req.span is not None:
+            req.span.set_attrs(n_embeddings=len(emb), rounds=req.rounds)
+            obsv.end(req.span)
+        self._m_requests.inc(1, status="completed")
+        self._m_embeddings.inc(len(emb))
+        self._m_stage.observe(stats.filter_seconds, stage="filter")
+        plan = stats.extras.get("plan")
+        if plan is not None:
+            self._m_stage.observe(float(plan["plan_seconds"]), stage="plan")
+        self._m_stage.observe(stats.search_seconds, stage="enumerate")
+        self._m_stage.observe(time.perf_counter() - t0, stage="total")
         return req.rid, emb, stats
 
     def _free(self, slot: int):

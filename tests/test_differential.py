@@ -250,17 +250,12 @@ def test_max_embeddings_truncation_parity():
         a = bfs_join_search(g, q, cand, max_embeddings=cap)
         b = device_join_search(g, q, cand, max_embeddings=cap)
         np.testing.assert_array_equal(a, b)  # incl. row order
-        # the legacy capacity knobs (device_rows / chunk_rows) are on
-        # their removal path: still accepted for one release, but now
-        # warn — and a value that used to force the chunked host fallback
-        # on every level must still change nothing
-        with pytest.warns(DeprecationWarning, match="device_rows"):
-            c = device_join_search(g, q, cand, max_embeddings=cap,
-                                   device_rows=8)
-        np.testing.assert_array_equal(a, c)
-        with pytest.warns(DeprecationWarning):
+        # the legacy capacity knobs (device_rows / chunk_rows) completed
+        # their removal path: passing them is now a TypeError, same as any
+        # unknown keyword — the two-phase join has no capacity to configure
+        with pytest.raises(TypeError):
             device_join_search(g, q, cand, max_embeddings=cap,
-                               chunk_rows=4096)
+                               device_rows=8)
         for name, emb in _all_engine_results(
                 g, q, max_embeddings=cap).items():
             assert emb.shape[0] == min(cap, total), (name, cap)

@@ -240,6 +240,62 @@ def test_service_releases_pins_on_chunk_failure(tmp_path):
     assert done[0][2].extras["ooc"]["chunks_read"] >= 0
 
 
+def test_failure_telemetry_survives_chunk_fault(tmp_path):
+    """Regression: the ChunkIOError slot-release path used to drop all
+    telemetry (ooc counters were only attached to *successful* results).
+    The service must record a ``FailedRequest`` carrying the queue wait
+    and the fetch's partial ``OocReport`` before the error propagates,
+    and ``shutdown(drain=False)`` must attach each in-flight request's
+    accumulated epoch IO telemetry to its ``CancelledRequest``."""
+    from repro import obsv
+    from repro.serve import FailedRequest
+
+    g, q, store = _mk(tmp_path)
+    svc = GraphQueryService(store, GraphServiceConfig(
+        max_slots=2, max_query_vertices=8, max_query_labels=8,
+    ))
+    _cold(store)
+
+    def boom(path, entry, n_vertices):
+        raise ChunkIOError("simulated chunk failure")
+
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(ooc_mod, "read_chunk", boom)
+        rid = svc.submit(q)
+        with pytest.raises(ChunkIOError, match="simulated"):
+            svc.tick()
+    assert [f.rid for f in svc.failures] == [rid]
+    fail = svc.failures[0]
+    assert isinstance(fail, FailedRequest)
+    assert "simulated chunk failure" in fail.reason
+    assert fail.queued_seconds >= 0.0
+    # the partial report covers the work done before the fault: the cold
+    # cache meant the very first chunk access failed — one attempted read,
+    # zero bytes and zero edges actually landed
+    assert isinstance(fail.ooc, obsv.OocReport)
+    assert fail.ooc["partial"] is True
+    assert fail.ooc["chunks_read"] == 1
+    assert fail.ooc["bytes_read"] == 0
+    assert fail.ooc["edges_fetched"] == 0
+    assert fail.ooc["fetch_seconds"] >= 0.0
+    counts = svc.metrics_snapshot()["repro_service_requests_total"]
+    assert counts["series"][(("status", "failed"),)] == 1
+
+    # fault cleared: admit a request (epoch fetch succeeds, telemetry
+    # accumulates), then cancel it in-flight — the partial IO work done on
+    # its behalf must surface on the CancelledRequest, not vanish
+    _cold(store)
+    rid2 = svc.submit(q)
+    svc._admit()
+    assert svc.n_active == 1
+    _finished, cancelled = svc.shutdown(drain=False)
+    by_rid = {c.rid: c for c in cancelled}
+    assert by_rid[rid2].reason == "shutdown before completion"
+    assert isinstance(by_rid[rid2].ooc, obsv.OocReport)
+    assert by_rid[rid2].ooc["chunks_read"] > 0
+    assert by_rid[rid2].ooc["partial"] is False
+
+
 def test_batch_engine_fails_closed(tmp_path):
     """The batch path fetches through the same loader — same typed error,
     and the snapshot stays usable afterwards."""
