@@ -21,12 +21,18 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
                regime with a hard bit-parity canary, plus a graph ~10-20x
                the resident chunk-cache budget (prefiltered chunk access,
                cache high-water vs cap in the derived column)
+    serve    — admission-controlled service saturation: 10x-overload waves
+               against the bounded submit path (queue depth must stay
+               under max_queue_depth, excess surfaces as typed
+               rejections), per-stage queue/filter/search/e2e p50+p99,
+               and the durable-snapshot overhead on the mutation path
     kernels  — kernel-path microbenchmarks
     roofline — derived terms from the dry-run artifacts (if present)
 
 ``--smoke`` shrinks the selected sections to tiny regression canaries for
-CI (``--smoke`` alone = batch + update + planner + enum + ooc canaries on
-every push — the enum canary hard-asserts bit parity and host_levels == 0; the
+CI (``--smoke`` alone = batch + update + planner + enum + ooc + serve
+canaries on every push — the enum canary hard-asserts bit parity and
+host_levels == 0, the serve canary hard-asserts the queue-depth bound; the
 shard canary runs as its own CI step via ``--section shard --smoke``, and
 enum also keeps a dedicated step for its per-phase JSON artifact).
 ``--json PATH`` additionally writes the emitted rows as a JSON list —
@@ -57,7 +63,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "graph", "batch", "update", "planner",
-                             "enum", "ooc", "shard", "kernels", "roofline"])
+                             "enum", "ooc", "serve", "shard", "kernels",
+                             "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny canary benches only (CI jit-regression check)")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -103,6 +110,10 @@ def _run_sections(args) -> None:
             from benchmarks.ooc_benches import run_all as ooc_all
 
             _emit(ooc_all(smoke=True))
+        if args.section in ("all", "serve"):
+            from benchmarks.serve_benches import run_all as serve_all
+
+            _emit(serve_all(smoke=True))
         if args.section == "shard":  # opt-in: spawns one process per D
             from benchmarks.shard_benches import run_all as shard_all
 
@@ -129,6 +140,10 @@ def _run_sections(args) -> None:
         from benchmarks.ooc_benches import run_all as ooc_all
 
         _emit(ooc_all())
+    if args.section in ("all", "serve"):
+        from benchmarks.serve_benches import run_all as serve_all
+
+        _emit(serve_all())
     if args.section in ("all", "shard"):
         from benchmarks.shard_benches import run_all as shard_all
 

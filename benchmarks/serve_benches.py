@@ -1,0 +1,203 @@
+"""Serving saturation: admission-controlled throughput at 10x overload.
+
+The hardening claim behind the bounded ``submit`` path
+(serve/graph_service.py): when offered load exceeds capacity the service
+*backpressures* — queue depth stays bounded by ``max_queue_depth``, the
+excess surfaces as typed ``AdmissionRejected`` (counted, attributable),
+and the latency of the requests it DOES admit stays predictable instead
+of growing with an unbounded backlog.  Rows:
+
+    serve/steady          — offered load within capacity (baseline qps)
+    serve/overload_10x    — 10x ``max_queue_depth`` offered in waves;
+                            derived: admitted/rejected split + the max
+                            queue depth ever observed (must stay <= bound)
+    serve/stage=queue|search|e2e
+                          — per-stage p50/p99 (seconds) across admitted
+                            requests of the overload run, from QueryStats
+                            + the typed ServiceReport (filter cost is a
+                            shared batched round, so it shows up as
+                            ``serve/stage=rounds`` — peeling rounds per
+                            request — rather than a per-request wall time)
+
+``run_all(smoke=True)`` is the CI canary (tiny graph, small bound, one
+wave pattern) — its JSON lands in the ``BENCH_serve_smoke.json`` workflow
+artifact, so the saturation trajectory is inspectable per commit.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.serve import (
+    AdmissionRejected,
+    GraphQueryService,
+    GraphServiceConfig,
+)
+
+
+def _mixed_queries(g, n: int, *, lo: int = 6, hi: int = 10, seed: int = 100):
+    rng = np.random.default_rng(seed)
+    return [
+        random_walk_query(g, int(rng.integers(lo, hi + 1)), sparse=True,
+                          seed=seed + i)
+        for i in range(n)
+    ]
+
+
+def _pctl(xs: list, p: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), p))
+
+
+def _collect(triples, stages, t_submit):
+    for rid, _, st in triples:
+        rep = st.extras["service"]
+        stages["queue"].append(rep["queue_seconds"])
+        stages["rounds"].append(float(rep["rounds"]))
+        stages["search"].append(st.search_seconds)
+        stages["e2e"].append(time.perf_counter() - t_submit[rid])
+    return stages
+
+
+def bench_saturation(rows: list, *, smoke: bool = False):
+    if smoke:
+        g = random_labeled_graph(192, 512, 8, n_edge_labels=2, seed=2)
+        slots, bound, waves = 2, 8, 4
+    else:
+        g = random_labeled_graph(256, 640, 8, n_edge_labels=2, seed=2)
+        slots, bound, waves = 4, 32, 8
+    pool = _mixed_queries(g, 16, seed=400)
+    cfg = GraphServiceConfig(max_slots=slots, max_query_vertices=16,
+                             max_query_labels=8, max_queue_depth=bound)
+    svc = GraphQueryService(g, cfg)
+    # warm the round trace so jit compilation doesn't pollute the waves
+    svc.submit(pool[0], max_embeddings=10)
+    svc.run_to_completion()
+
+    # -- steady state: offered load fits the queue bound --------------------
+    stages = {"queue": [], "rounds": [], "search": [], "e2e": []}
+    t_submit: dict[int, float] = {}
+    n_steady = bound
+    t0 = time.perf_counter()
+    for i in range(n_steady):
+        rid = svc.submit(pool[i % len(pool)], max_embeddings=100)
+        t_submit[rid] = time.perf_counter()
+    _collect(svc.run_to_completion(), stages, t_submit)
+    dt = time.perf_counter() - t0
+    rows.append((
+        "serve/steady", dt * 1e6,
+        f"qps={n_steady / dt:.1f};n={n_steady}",
+    ))
+
+    # -- 10x overload: waves of submissions racing the scheduler ------------
+    offered = 10 * bound
+    stages = {"queue": [], "rounds": [], "search": [], "e2e": []}
+    t_submit = {}
+    admitted = rejected = 0
+    depth_max = 0
+    t0 = time.perf_counter()
+    per_wave = max(1, offered // waves)
+    sent = 0
+    while sent < offered:
+        for _ in range(min(per_wave, offered - sent)):
+            q = pool[sent % len(pool)]
+            sent += 1
+            try:
+                rid = svc.submit(q, max_embeddings=100)
+                t_submit[rid] = time.perf_counter()
+                admitted += 1
+            except AdmissionRejected:
+                rejected += 1
+            depth_max = max(depth_max, len(svc.queue))
+        # one scheduler step between waves: overload, not a closed loop
+        _collect(svc.tick(), stages, t_submit)
+    _collect(svc.run_to_completion(), stages, t_submit)
+    dt = time.perf_counter() - t0
+    assert admitted + rejected == offered
+    assert depth_max <= bound, (
+        f"queue depth {depth_max} escaped the max_queue_depth={bound} bound"
+    )
+    assert len(stages["e2e"]) == admitted, "admitted requests leaked"
+    rej_counted = sum(
+        svc.metrics_snapshot()["repro_service_rejected_total"]
+        ["series"].values()
+    )
+    assert rej_counted == rejected, "rejections not all counted in metrics"
+    rows.append((
+        "serve/overload_10x", dt * 1e6,
+        f"offered={offered};admitted={admitted};rejected={rejected};"
+        f"depth_max={depth_max};bound={bound};"
+        f"qps={admitted / dt:.1f}",
+    ))
+    for stage, xs in stages.items():
+        if stage == "rounds":
+            rows.append((
+                f"serve/stage={stage}", 0.0,
+                f"p50={_pctl(xs, 50):.1f};p99={_pctl(xs, 99):.1f};"
+                f"n={len(xs)}",
+            ))
+            continue
+        rows.append((
+            f"serve/stage={stage}", _pctl(xs, 50) * 1e6,
+            f"p50_s={_pctl(xs, 50):.6f};p99_s={_pctl(xs, 99):.6f};"
+            f"n={len(xs)}",
+        ))
+    svc.shutdown()
+    return rows
+
+
+def bench_checkpoint_overhead(rows: list, *, smoke: bool = False):
+    """Mutation throughput with the durable-snapshot stream on vs off —
+    the cost of crash safety on the write path (async writer overlaps
+    the serve loop, so the delta should stay small)."""
+    import shutil
+    import tempfile
+
+    from repro.core.incremental import IncrementalIndex
+    from repro.graphs import GraphStore, random_update_batches
+
+    g = random_labeled_graph(192 if smoke else 256, 512 if smoke else 640, 8,
+                             n_edge_labels=2, seed=5)
+    n_batches = 4 if smoke else 16
+
+    def run(ckpt_dir):
+        store = GraphStore.from_graph(g, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        svc = GraphQueryService(store, GraphServiceConfig(
+            max_slots=2, max_query_vertices=16, max_query_labels=8,
+            checkpoint_dir=ckpt_dir, checkpoint_every=1))
+        batches = random_update_batches(store, n_batches, 16,
+                                        delete_frac=0.3, seed=6)
+        t0 = time.perf_counter()
+        for b in batches:
+            store.apply(b)
+            if ckpt_dir is not None:
+                svc.checkpoint_now()
+        svc.wait_for_checkpoints()
+        dt = time.perf_counter() - t0
+        svc.shutdown()
+        return dt
+
+    base = run(None)
+    d = tempfile.mkdtemp(prefix="serve_bench_ckpt_")
+    try:
+        durable = run(d)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    rows.append((
+        "serve/ckpt_overhead", durable * 1e6,
+        f"base_us={base * 1e6:.0f};overhead={durable / base:.2f}x;"
+        f"batches={n_batches}",
+    ))
+    return rows
+
+
+def run_all(*, smoke: bool = False) -> list:
+    rows: list = []
+    bench_saturation(rows, smoke=smoke)
+    bench_checkpoint_overhead(rows, smoke=smoke)
+    return rows

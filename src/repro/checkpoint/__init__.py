@@ -1,13 +1,19 @@
 from repro.checkpoint.ckpt import (
+    CheckpointError,
     CheckpointManager,
     latest_step,
+    load_leaves,
+    load_manifest,
     restore_checkpoint,
     save_checkpoint,
 )
 
 __all__ = [
+    "CheckpointError",
     "CheckpointManager",
     "latest_step",
+    "load_leaves",
+    "load_manifest",
     "restore_checkpoint",
     "save_checkpoint",
 ]

@@ -12,6 +12,13 @@ step; partially-written .tmp directories are garbage-collected.  The data
 pipeline cursor and RNG key ride in the manifest so resume replays exactly.
 Async mode hands the (host-transferred) arrays to a writer thread — training
 continues while the previous step persists (overlap trick, DESIGN.md §6).
+
+Failure model (DESIGN.md §15): every read validates bytes-on-disk against
+the manifest and raises the typed ``CheckpointError`` — a truncated leaf,
+a missing file, a shape/dtype drift, or an unparseable manifest never
+restores as silently wrong state.  Async writes capture their exception
+and re-raise it on ``wait()`` or the next ``save()``: a failed write is
+*reported*, never mistaken for a durable checkpoint.
 """
 
 from __future__ import annotations
@@ -24,6 +31,12 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint directory whose bytes disagree with its manifest (or a
+    failed write surfacing on ``CheckpointManager.wait``) — the durable
+    tier fails closed, never with silently wrong restored state."""
 
 
 def _leaf_paths(d: str, n: int):
@@ -64,19 +77,85 @@ def save_checkpoint(
     return final
 
 
+def load_manifest(directory: str, step: int) -> dict:
+    """Parse + sanity-check one committed step's manifest (fail closed)."""
+    d = os.path.join(directory, f"step_{step:09d}")
+    mpath = os.path.join(d, "manifest.json")
+    if not os.path.exists(mpath):
+        raise CheckpointError(f"checkpoint {d} has no manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as err:
+        raise CheckpointError(
+            f"checkpoint manifest {mpath} is not valid JSON: {err}"
+        ) from err
+    for key in ("step", "n_leaves", "shapes", "dtypes", "extra"):
+        if key not in manifest:
+            raise CheckpointError(
+                f"checkpoint manifest {mpath} is missing key {key!r}"
+            )
+    n = manifest["n_leaves"]
+    if len(manifest["shapes"]) != n or len(manifest["dtypes"]) != n:
+        raise CheckpointError(
+            f"checkpoint manifest {mpath}: shapes/dtypes length disagrees "
+            f"with n_leaves={n}"
+        )
+    return manifest
+
+
+def load_leaves(directory: str, step: int) -> tuple[list[np.ndarray], dict]:
+    """Load one committed step's raw leaf arrays + manifest.
+
+    The ``like``-free read path: every leaf is validated against the
+    manifest (existence, loadability, shape, dtype) and any mismatch
+    raises ``CheckpointError`` — a partially-written or corrupted snapshot
+    directory fails closed instead of restoring wrong state.
+    """
+    manifest = load_manifest(directory, step)
+    d = os.path.join(directory, f"step_{step:09d}")
+    out: list[np.ndarray] = []
+    for i, path in enumerate(_leaf_paths(d, manifest["n_leaves"])):
+        if not os.path.exists(path):
+            raise CheckpointError(
+                f"checkpoint {d} is missing leaf file {os.path.basename(path)}"
+            )
+        try:
+            arr = np.load(path)
+        except Exception as err:  # noqa: BLE001 — np.load raises many types
+            raise CheckpointError(
+                f"checkpoint leaf {path} could not be loaded "
+                f"(truncated/corrupt): {err}"
+            ) from err
+        if list(arr.shape) != list(manifest["shapes"][i]):
+            raise CheckpointError(
+                f"checkpoint leaf {path}: shape {list(arr.shape)} disagrees "
+                f"with manifest {manifest['shapes'][i]}"
+            )
+        if str(arr.dtype) != manifest["dtypes"][i]:
+            raise CheckpointError(
+                f"checkpoint leaf {path}: dtype {arr.dtype} disagrees with "
+                f"manifest {manifest['dtypes'][i]}"
+            )
+        out.append(arr)
+    return out, manifest
+
+
 def restore_checkpoint(directory: str, step: int, like: Any):
     """Restore into the structure of ``like`` (shape/dtype validated)."""
-    d = os.path.join(directory, f"step_{step:09d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    leaves_raw, manifest = load_leaves(directory, step)
     leaves, treedef = jax.tree.flatten(like)
-    assert manifest["n_leaves"] == len(leaves), "pytree structure changed"
-    out = []
-    for i, (path, ref) in enumerate(zip(_leaf_paths(d, len(leaves)), leaves)):
-        arr = np.load(path)
-        assert list(arr.shape) == list(ref.shape), (
-            f"leaf {i}: shape {arr.shape} != {ref.shape}"
+    if manifest["n_leaves"] != len(leaves):
+        raise CheckpointError(
+            f"pytree structure changed: checkpoint has "
+            f"{manifest['n_leaves']} leaves, `like` has {len(leaves)}"
         )
+    out = []
+    for i, (arr, ref) in enumerate(zip(leaves_raw, leaves)):
+        if list(arr.shape) != list(ref.shape):
+            raise CheckpointError(
+                f"leaf {i}: shape {arr.shape} != {ref.shape}"
+            )
         out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
     return treedef.unflatten(out), manifest["extra"]
 
@@ -99,18 +178,38 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 class CheckpointManager:
-    """Keep-last-k manager with optional async writes."""
+    """Keep-last-k manager with optional async writes.
+
+    Async failure contract: the writer thread's exception is captured and
+    re-raised (wrapped in ``CheckpointError``) by the next ``wait()`` or
+    ``save()`` call — a failed ``save_checkpoint`` is never silently
+    mistaken for a durable checkpoint (regression:
+    tests/test_checkpoint_recovery.py).
+    """
 
     def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
         self.directory = directory
         self.keep = keep
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._error_step: Optional[int] = None
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, step = self._error, self._error_step
+            self._error = None
+            self._error_step = None
+            raise CheckpointError(
+                f"async checkpoint write for step {step} failed: {err}"
+            ) from err
 
     def wait(self):
+        """Join the in-flight async write; re-raises its failure, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
     def save(self, step: int, tree: Any, *, extra: Optional[dict] = None):
         self.wait()
@@ -121,14 +220,19 @@ class CheckpointManager:
         host_tree = jax.tree.map(lambda x: np.array(x, copy=True), tree)
 
         def work():
-            save_checkpoint(self.directory, step, host_tree, extra=extra)
-            self._gc()
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as err:  # noqa: BLE001 — surfaced on wait()
+                self._error = err
+                self._error_step = step
 
         if self.async_write:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
             work()
+            self._raise_pending()
 
     def restore_latest(self, like: Any):
         step = latest_step(self.directory)
@@ -136,6 +240,16 @@ class CheckpointManager:
             return None, None, None
         tree, extra = restore_checkpoint(self.directory, step, like)
         return step, tree, extra
+
+    def load_latest_leaves(self):
+        """Newest committed step's raw ``(step, leaves, manifest)`` — the
+        shape-flexible read used by the graph-store snapshot tier (leaf
+        shapes vary across epochs, so there is no static ``like``)."""
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        leaves, manifest = load_leaves(self.directory, step)
+        return step, leaves, manifest
 
     def _gc(self):
         steps = sorted(

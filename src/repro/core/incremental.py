@@ -242,6 +242,79 @@ class IncrementalIndex:
         self.cni_u64[rows] = u64
         self.cni_log[rows] = log
 
+    # -- durable snapshots ---------------------------------------------------
+
+    def checkpoint_state(self):
+        """(leaves, meta) capturing the maintained state exactly — a warm
+        restore skips the O(V·L + E) rebuild.  The planner's ``GraphStats``
+        rides along under a ``stats_`` leaf prefix."""
+        leaves = {
+            "universe": self.universe,
+            "vlabels": self.vlabels,
+            "counts": self.counts,   # sharded: merged-copy property
+            "deg": self.deg,
+            "cni_u64": self.cni_u64,
+            "cni_log": self.cni_log,
+        }
+        meta = {
+            "type": type(self).__name__,
+            "d_max": int(self.d_max),
+            "d_max_arg": self._d_max_arg,
+            "max_p": int(self.max_p),
+            "epoch": int(self._epoch),
+            "use_kernel": bool(self.use_kernel),
+            "stats": None,
+        }
+        if self.graph_stats is not None:
+            s_leaves, s_meta = self.graph_stats.checkpoint_state()
+            leaves.update({f"stats_{k}": v for k, v in s_leaves.items()})
+            meta["stats"] = s_meta
+        return leaves, meta
+
+    @classmethod
+    def from_checkpoint_state(cls, leaves, meta, *, store=None):
+        """Rebuild the maintained state from ``checkpoint_state()`` output
+        (validated against itself; the store argument is unused here but
+        required by the sharded twin, which needs its partition plan)."""
+        from repro.checkpoint import CheckpointError
+
+        for k in ("universe", "vlabels", "counts", "deg", "cni_u64",
+                  "cni_log"):
+            if k not in leaves:
+                raise CheckpointError(f"index snapshot is missing leaf {k!r}")
+        idx = cls(d_max=None, use_kernel=bool(meta.get("use_kernel", False)))
+        idx._d_max_arg = meta.get("d_max_arg")
+        idx.universe = np.asarray(leaves["universe"])
+        idx.vlabels = np.asarray(leaves["vlabels"], dtype=np.int32)
+        idx.d_max = int(meta["d_max"])
+        idx.max_p = int(meta["max_p"])
+        idx._col = {int(l): i for i, l in enumerate(idx.universe)}
+        v, lu = int(idx.vlabels.size), int(idx.universe.size)
+        counts = np.asarray(leaves["counts"], dtype=np.int32)
+        if counts.shape != (v, lu):
+            raise CheckpointError(
+                f"index snapshot counts shape {counts.shape} disagrees with "
+                f"(V, Lu) = ({v}, {lu})"
+            )
+        idx.counts = counts
+        idx.deg = np.asarray(leaves["deg"], dtype=np.int32)
+        idx.cni_u64 = np.asarray(leaves["cni_u64"], dtype=np.uint64)
+        idx.cni_log = np.asarray(leaves["cni_log"], dtype=np.float32)
+        for name in ("deg", "cni_u64", "cni_log"):
+            if getattr(idx, name).shape != (v,):
+                raise CheckpointError(
+                    f"index snapshot {name} shape "
+                    f"{getattr(idx, name).shape} disagrees with V={v}"
+                )
+        idx._epoch = int(meta["epoch"])
+        if meta.get("stats") is not None:
+            idx.graph_stats = GraphStats.from_checkpoint_state(
+                {k[len("stats_"):]: val for k, val in leaves.items()
+                 if k.startswith("stats_")},
+                meta["stats"],
+            )
+        return idx
+
     # -- views ---------------------------------------------------------------
 
     def freeze(self) -> IndexSnapshot:
@@ -394,6 +467,37 @@ class ShardedIncrementalIndex(IncrementalIndex):
             "ShardedIncrementalIndex state is per-shard; mutate through "
             "apply_batch/rebuild, not the flat-array encoders"
         )
+
+    # -- durable snapshots ---------------------------------------------------
+
+    def checkpoint_state(self):
+        """Merged-state snapshot + the shard count; restore re-splits along
+        the restored store's partition plan (bit-identical — the merged
+        arrays *are* the authoritative per-shard slices concatenated)."""
+        leaves, meta = super().checkpoint_state()
+        meta["n_shards"] = int(self._plan.n_shards)
+        return leaves, meta
+
+    @classmethod
+    def from_checkpoint_state(cls, leaves, meta, *, store=None):
+        from repro.checkpoint import CheckpointError
+
+        plan = getattr(store, "plan", None)
+        if plan is None:
+            raise CheckpointError(
+                "sharded index restore needs the restored ShardedGraphStore "
+                "(its partition plan) passed as store="
+            )
+        if int(plan.n_shards) != int(meta["n_shards"]):
+            raise CheckpointError(
+                f"index snapshot has n_shards={meta['n_shards']} but the "
+                f"store plan has {plan.n_shards}"
+            )
+        idx = super().from_checkpoint_state(leaves, meta, store=store)
+        idx._n_shards_arg = int(meta["n_shards"])
+        idx._plan = plan
+        idx._split_state()
+        return idx
 
     def shard_state(self, s: int) -> ShardState:
         return ShardState(

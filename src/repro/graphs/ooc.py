@@ -307,7 +307,7 @@ class OutOfCoreGraphStore(BaseGraphStore):
     def __init__(self, n_vertices, vlabels, *, storage_dir: str | None = None,
                  chunk_edges: int = 2048,
                  resident_budget_bytes: int = 16 << 20,
-                 index="auto", **kwargs):
+                 index="auto", generation: int | None = None, **kwargs):
         super().__init__(n_vertices, vlabels, **kwargs)
         if storage_dir is None:
             storage_dir = tempfile.mkdtemp(prefix="ooc-store-")
@@ -320,6 +320,18 @@ class OutOfCoreGraphStore(BaseGraphStore):
         self._overlay: dict[tuple[int, int], int | None] = {}
         self._gen_refs: dict[int, int] = {}
         gens = self._list_generations()
+        if generation is not None:
+            # durable-snapshot restore adopts the *exact* generation the
+            # snapshot references — newer generations on disk are
+            # post-snapshot state and roll back on the next GC; a missing
+            # one fails closed (never silently adopt a different edge set)
+            gens = [g for g in gens if g[0] == int(generation)]
+            if not gens:
+                raise ChunkIOError(
+                    f"generation gen-{int(generation):05d} not found under "
+                    f"{self._root} (snapshot references a deleted or "
+                    "never-written generation)"
+                )
         if gens:
             gen_id, gpath = gens[-1]
             manifest = load_manifest(gpath)
@@ -610,6 +622,100 @@ class OutOfCoreGraphStore(BaseGraphStore):
     @property
     def n_chunks(self) -> int:
         return self._base.n_chunks
+
+    # -- durable snapshots ----------------------------------------------------
+
+    _CKPT_KIND = "ooc"
+
+    def checkpoint_state(self):
+        """Resident state only: the overlay (with tombstone mask), degrees
+        and labels.  The base edge table is *referenced* by
+        ``(storage_root, generation)`` — its chunk files are already
+        durable on disk; ``from_checkpoint_state`` re-adopts exactly that
+        generation and fails closed if it is gone."""
+        ov = sorted(self._overlay.items())
+        leaves = {
+            "vlabels": self.vlabels,
+            "deg": self._deg,
+            "ov_lo": np.asarray([k[0] for k, _ in ov], dtype=np.int64),
+            "ov_hi": np.asarray([k[1] for k, _ in ov], dtype=np.int64),
+            "ov_lab": np.asarray(
+                [0 if v is None else v for _, v in ov], dtype=np.int64
+            ),
+            "ov_tomb": np.asarray([v is None for _, v in ov], dtype=bool),
+        }
+        meta = {
+            "kind": self._CKPT_KIND,
+            "n_vertices": self.n_vertices,
+            "epoch": self.epoch,
+            "degree_cap": self.degree_cap,
+            "compact_every": self.compact_every,
+            "storage_root": os.path.abspath(self._root),
+            "generation": self._base.gen_id,
+            "chunk_edges": self.chunk_edges,
+            "resident_budget_bytes": self.resident_budget_bytes,
+            "n_alive": int(self._n_alive),
+        }
+        return leaves, meta
+
+    @classmethod
+    def from_checkpoint_state(cls, leaves, meta, *,
+                              storage_dir: str | None = None):
+        """Rebuild from ``checkpoint_state()`` output + the on-disk chunk
+        directory; ``storage_dir`` overrides the recorded root when the
+        store moved.  Raises the durable tier's ``CheckpointError`` when
+        the referenced generation is gone or the resident leaves disagree
+        with the sidecars."""
+        from repro.checkpoint import CheckpointError
+
+        for k in ("vlabels", "deg", "ov_lo", "ov_hi", "ov_lab", "ov_tomb"):
+            if k not in leaves:
+                raise CheckpointError(f"ooc snapshot is missing leaf {k!r}")
+        n = int(meta["n_vertices"])
+        root = storage_dir if storage_dir is not None else meta["storage_root"]
+        try:
+            store = cls(
+                n, np.asarray(leaves["vlabels"], dtype=np.int32),
+                storage_dir=root,
+                chunk_edges=int(meta["chunk_edges"]),
+                resident_budget_bytes=int(meta["resident_budget_bytes"]),
+                index=None,
+                generation=int(meta["generation"]),
+                degree_cap=meta.get("degree_cap"),
+                compact_every=int(meta.get("compact_every", 64)),
+            )
+        except ChunkIOError as err:
+            raise CheckpointError(
+                f"ooc snapshot restore failed: {err}"
+            ) from err
+        ov_lo = np.asarray(leaves["ov_lo"], dtype=np.int64)
+        ov_hi = np.asarray(leaves["ov_hi"], dtype=np.int64)
+        ov_lab = np.asarray(leaves["ov_lab"], dtype=np.int64)
+        ov_tomb = np.asarray(leaves["ov_tomb"], dtype=bool)
+        if not (ov_lo.shape == ov_hi.shape == ov_lab.shape == ov_tomb.shape):
+            raise CheckpointError(
+                "ooc snapshot overlay arrays disagree in length"
+            )
+        if ov_lo.size and (ov_lo.min() < 0 or ov_hi.max() >= n
+                           or not (ov_lo < ov_hi).all()):
+            raise CheckpointError(
+                f"ooc snapshot overlay is not canonical (need 0 <= lo < hi "
+                f"< {n})"
+            )
+        deg = np.asarray(leaves["deg"], dtype=np.int64)
+        if deg.shape != (n,):
+            raise CheckpointError(
+                f"ooc snapshot deg shape {deg.shape} disagrees with "
+                f"n_vertices={n}"
+            )
+        store._overlay = {
+            (int(a), int(b)): (None if t else int(l))
+            for a, b, l, t in zip(ov_lo, ov_hi, ov_lab, ov_tomb)
+        }
+        store._deg = deg.copy()
+        store._n_alive = int(meta["n_alive"])
+        store.epoch = int(meta["epoch"])
+        return store
 
     # -- snapshots ------------------------------------------------------------
 

@@ -224,18 +224,60 @@ class BaseGraphStore:
         self.epoch = 0
         self._snapshots.pop(1, None)
 
-    def attach_index(self, index) -> None:
+    def attach_index(self, index, *, rebuild: bool = True) -> None:
         """Attach an incremental-index listener (see core/incremental.py).
 
         The index is rebuilt from the current edge set on attach, then kept
-        in sync by ``apply``.
+        in sync by ``apply``.  ``rebuild=False`` attaches an index whose
+        state is *already* current for this store — the warm-restore path
+        (serve/persist.py) — and only checks epoch agreement; state parity
+        beyond that is the caller's contract.
         """
+        if not rebuild and getattr(index, "_epoch", None) != self.epoch:
+            raise ValueError(
+                f"attach_index(rebuild=False): index epoch "
+                f"{getattr(index, '_epoch', None)} != store epoch "
+                f"{self.epoch}"
+            )
         self._index = index
-        index.rebuild(self)
+        if rebuild:
+            index.rebuild(self)
 
     @property
     def index(self):
         return self._index
+
+    # -- durable snapshots (checkpoint/ckpt.py leaves + JSON meta) -----------
+
+    _CKPT_KIND = "graph"
+
+    def checkpoint_state(self):
+        """Logical store state as ``(leaves, meta)`` for the durable tier.
+
+        ``leaves`` is a dict of host arrays (the alive canonical edge set +
+        vertex labels), ``meta`` is JSON-serializable reconstruction info.
+        Concrete stores with their own durable substrate (graphs/ooc.py)
+        override this to persist only their resident state.
+        """
+        lo, hi, lab = self.alive_edges()
+        leaves = {
+            "vlabels": self.vlabels,
+            "edge_lo": np.asarray(lo, dtype=np.int64),
+            "edge_hi": np.asarray(hi, dtype=np.int64),
+            "edge_lab": np.asarray(lab, dtype=np.int64),
+        }
+        meta = {
+            "kind": self._CKPT_KIND,
+            "n_vertices": self.n_vertices,
+            "epoch": self.epoch,
+            "degree_cap": self.degree_cap,
+            "compact_every": self.compact_every,
+        }
+        meta.update(self._checkpoint_extra_meta())
+        return leaves, meta
+
+    def _checkpoint_extra_meta(self) -> dict:
+        return {}
 
     # -- mutation ------------------------------------------------------------
 
@@ -373,6 +415,35 @@ class BaseGraphStore:
         raise NotImplementedError
 
 
+def _ckpt_restore_arrays(leaves: dict, meta: dict):
+    """Validate a store snapshot's edge leaves against its meta (fail
+    closed with the durable tier's typed error — a truncated or tampered
+    snapshot never restores as a silently wrong edge set)."""
+    from repro.checkpoint import CheckpointError
+
+    for k in ("vlabels", "edge_lo", "edge_hi", "edge_lab"):
+        if k not in leaves:
+            raise CheckpointError(f"store snapshot is missing leaf {k!r}")
+    n = int(meta["n_vertices"])
+    vlab = np.asarray(leaves["vlabels"], dtype=np.int32)
+    if vlab.shape != (n,):
+        raise CheckpointError(
+            f"store snapshot vlabels shape {vlab.shape} disagrees with "
+            f"n_vertices={n}"
+        )
+    lo = np.asarray(leaves["edge_lo"], dtype=np.int64)
+    hi = np.asarray(leaves["edge_hi"], dtype=np.int64)
+    lab = np.asarray(leaves["edge_lab"], dtype=np.int64)
+    if not (lo.shape == hi.shape == lab.shape):
+        raise CheckpointError("store snapshot edge arrays disagree in length")
+    if lo.size and (lo.min() < 0 or hi.max() >= n or not (lo < hi).all()):
+        raise CheckpointError(
+            "store snapshot edge table is not canonical (need 0 <= lo < hi "
+            f"< {n})"
+        )
+    return n, vlab, lo, hi, lab
+
+
 class GraphStore(BaseGraphStore):
     """Mutable vertex-labeled graph with epoch-versioned snapshots."""
 
@@ -384,6 +455,24 @@ class GraphStore(BaseGraphStore):
         self._lab = np.zeros(0, dtype=np.int64)
         self._alive = np.zeros(0, dtype=bool)
         self._pos: dict[tuple[int, int], int] = {}
+
+    @classmethod
+    def from_checkpoint_state(cls, leaves, meta) -> "GraphStore":
+        """Rebuild a store from ``checkpoint_state()`` output (validated)."""
+        n, vlab, lo, hi, lab = _ckpt_restore_arrays(leaves, meta)
+        store = cls(
+            n, vlab,
+            degree_cap=meta.get("degree_cap"),
+            compact_every=int(meta.get("compact_every", 64)),
+        )
+        store._append_rows(lo, hi, lab)
+        store._pos = {
+            (int(a), int(b)): i for i, (a, b) in enumerate(zip(lo, hi))
+        }
+        np.add.at(store._deg, lo, 1)
+        np.add.at(store._deg, hi, 1)
+        store.epoch = int(meta["epoch"])
+        return store
 
     def _append_rows(self, lo, hi, lab):
         self._lo = np.concatenate([self._lo, lo])
@@ -593,6 +682,29 @@ class ShardedGraphStore(BaseGraphStore):
         self._shards = [_ShardTable() for _ in range(self.n_shards)]
         self._n_boundary_alive = 0   # alive cross-shard edges right now
         self._n_boundary_records = 0  # cumulative boundary records applied
+
+    _CKPT_KIND = "sharded"
+
+    def _checkpoint_extra_meta(self) -> dict:
+        return {"n_shards": self.n_shards}
+
+    @classmethod
+    def from_checkpoint_state(cls, leaves, meta) -> "ShardedGraphStore":
+        """Rebuild from ``checkpoint_state()`` output: the global canonical
+        edge set re-buckets through one seeding ``apply`` (same path as
+        ``from_graph``), so ghosts/boundary bookkeeping are rebuilt exactly."""
+        n, vlab, lo, hi, lab = _ckpt_restore_arrays(leaves, meta)
+        store = cls(
+            n, vlab,
+            n_shards=int(meta["n_shards"]),
+            degree_cap=meta.get("degree_cap"),
+            compact_every=int(meta.get("compact_every", 64)),
+        )
+        if lo.size:
+            store.apply(make_edge_batch(np.stack([lo, hi], axis=1), lab))
+            store._seed_reset()
+        store.epoch = int(meta["epoch"])
+        return store
 
     def _owner(self, v: int) -> int:
         return v // self.plan.v_local

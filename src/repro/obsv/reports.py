@@ -337,13 +337,23 @@ class BatchReport(Report):
 
 @dataclass(eq=False)
 class ServiceReport(Report):
-    """``stats.extras["service"]`` — scheduling facts for one request."""
+    """``stats.extras["service"]`` — scheduling facts for one request.
+
+    The admission-control fields default to the single-tenant/no-deadline
+    values so pre-admission-control report dicts still round-trip through
+    ``from_dict``.  ``deadline_missed`` records a request that *completed*
+    after its deadline passed (admission expires still-queued ones
+    instead; see serve/graph_service.py).
+    """
 
     slot: int
     epoch: int
     queue_seconds: float
     rounds: int = 0
     trace_id: "int | None" = None
+    tenant: str = "default"
+    priority: int = 0
+    deadline_missed: bool = False
 
 
 REPORT_TYPES: dict[str, type] = {

@@ -1,16 +1,26 @@
 from repro.serve.engine import ServeEngine, ServeConfig
 from repro.serve.graph_service import (
+    AdmissionRejected,
     CancelledRequest,
+    DrainTimeout,
     FailedRequest,
     GraphQueryService,
     GraphServiceConfig,
+    RejectedRequest,
 )
+from repro.serve.persist import ServiceCheckpointer
+from repro.serve.replicas import ReplicatedGraphService
 
 __all__ = [
     "ServeEngine",
     "ServeConfig",
+    "AdmissionRejected",
     "CancelledRequest",
+    "DrainTimeout",
     "FailedRequest",
     "GraphQueryService",
     "GraphServiceConfig",
+    "RejectedRequest",
+    "ReplicatedGraphService",
+    "ServiceCheckpointer",
 ]

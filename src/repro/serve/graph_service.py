@@ -24,7 +24,21 @@ jit traces of ``batched_ilgf_round``:
   released when their last pinned query finishes.
 * ``shutdown()`` drains (or cancels) active slots and **reports every
   queued-but-unstarted request as cancelled** — nothing is silently
-  dropped.
+  dropped.  An exhausted drain (``max_ticks`` spent with slots still
+  active) cancels-and-reports the leftovers under the same contract.
+* **Admission control** (DESIGN.md §15): the queue is bounded
+  (``max_queue_depth``), per-tenant quotas cap a single tenant's
+  queued+active load, and free slots admit by (priority desc, deadline
+  asc, FIFO) instead of plain FIFO.  Overload backpressures with the
+  *typed* ``AdmissionRejected`` (recorded in ``rejections`` + the
+  ``repro_service_rejected_total`` counter) — never a silent drop — and
+  queued requests whose deadline lapses expire into ``expired`` with the
+  same reporting discipline.
+* **Durable snapshots** (serve/persist.py): with
+  ``GraphServiceConfig(checkpoint_dir=…)`` the store + incremental index
+  persist through the keep-last-k ``CheckpointManager`` every
+  ``checkpoint_every`` epochs; ``GraphQueryService.restore`` warm-starts
+  a service from the newest committed snapshot after a crash.
 * **Sharded operation** is transparent: the backing store may be a
   ``ShardedGraphStore`` (same epoch/pin/mutation contract), and setting
   ``GraphServiceConfig(mesh=…)`` runs each tick's peeling round
@@ -105,6 +119,57 @@ class GraphServiceConfig:
     # service.
     plan_queries: bool = False
     planner: object = None
+    # admission control (DESIGN.md §15).  ``max_queue_depth`` bounds the
+    # submit queue (None = unbounded, the legacy behavior); over-depth
+    # submissions raise the typed ``AdmissionRejected``.  ``tenant_quota``
+    # caps one tenant's queued+active requests (None = no per-tenant cap).
+    max_queue_depth: int | None = 1024
+    tenant_quota: int | None = None
+    # durable snapshots (serve/persist.py): set a directory to persist the
+    # store + incremental index through the keep-last-k CheckpointManager —
+    # at construction (base state) and every ``checkpoint_every`` epochs
+    # after a mutation.  ``GraphQueryService.restore(dir)`` warm-starts.
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+    checkpoint_keep: int = 3
+    checkpoint_async: bool = True
+
+
+class AdmissionRejected(RuntimeError):
+    """Typed backpressure from ``submit`` — the request was *not* enqueued.
+
+    ``reason`` is machine-readable (``"queue_full"`` | ``"tenant_quota"``);
+    ``rid`` identifies the rejection in ``GraphQueryService.rejections``.
+    Callers should retry after draining or shed load; the service never
+    silently drops work to shed it for them.
+    """
+
+    def __init__(self, message: str, *, rid: int, reason: str, tenant: str):
+        super().__init__(message)
+        self.rid = rid
+        self.reason = reason
+        self.tenant = tenant
+
+
+class DrainTimeout(RuntimeError):
+    """``run_to_completion`` exhausted ``max_ticks`` with work remaining.
+
+    The triples finished before the timeout ride on ``err.finished`` — an
+    incomplete drain is an *error carrying partial results*, no longer a
+    partial list indistinguishable from success.
+    """
+
+    def __init__(self, message: str, *, finished: list):
+        super().__init__(message)
+        self.finished = finished
+
+
+class RejectedRequest(NamedTuple):
+    """One admission rejection — recorded, never silently dropped."""
+
+    rid: int
+    reason: str   # "queue_full" | "tenant_quota"
+    tenant: str
 
 
 @dataclasses.dataclass
@@ -117,6 +182,9 @@ class _Request:
     slot: int = -1
     epoch: int = -1
     span: object = None  # obsv.Span root, open from admit to finalize
+    tenant: str = "default"
+    priority: int = 0
+    deadline: Optional[float] = None  # absolute perf_counter() time
 
 
 class CancelledRequest(NamedTuple):
@@ -231,6 +299,8 @@ class GraphQueryService:
         self._ooc_tel: dict[int, obsv.OocReport] = {}
         self._shutting_down = False
         self.failures: list[FailedRequest] = []
+        self.rejections: list[RejectedRequest] = []
+        self.expired: list[CancelledRequest] = []
         # Always-on service metrics (negligible cost: plain dict/bisect
         # updates on the host path).  Scrape via ``metrics_text()``.
         self.metrics = obsv.MetricsRegistry()
@@ -264,6 +334,25 @@ class GraphQueryService:
         self._m_active = m.gauge(
             "repro_service_active_slots", "Currently occupied query slots"
         )
+        self._m_rejected = m.counter(
+            "repro_service_rejected_total",
+            "Admission rejections by reason (queue_full|tenant_quota)",
+        )
+        self._m_deadline_miss = m.counter(
+            "repro_service_deadline_missed_total",
+            "Requests expired in queue or completed past their deadline",
+        )
+        self._m_queue_depth = m.gauge(
+            "repro_service_queue_depth", "Currently queued requests"
+        )
+        self._m_queue_depth_hist = m.histogram(
+            "repro_service_queue_depth_ticks",
+            "Queue depth sampled at each scheduler tick",
+            start=1.0, factor=2.0, count=16,
+        )
+        self._m_ckpts = m.counter(
+            "repro_service_checkpoints_total", "Durable snapshots written"
+        )
         self._m_ooc_chunks = m.counter(
             "repro_ooc_chunks_read_total",
             "Chunk accesses during restricted fetches",
@@ -296,7 +385,57 @@ class GraphQueryService:
             self.planner = QueryPlanner.for_data(
                 self.store if self.store is not None else snap
             )
+        self._ckpt = None
+        self._ckpt_last_epoch: int | None = None
+        if self.cfg.checkpoint_dir is not None:
+            if self.store is None:
+                raise ValueError(
+                    "checkpoint_dir needs a store-backed service — an "
+                    "immutable Graph has no durable state to snapshot"
+                )
+            from repro.serve.persist import ServiceCheckpointer
+
+            self._ckpt = ServiceCheckpointer(
+                self.cfg.checkpoint_dir,
+                keep=self.cfg.checkpoint_keep,
+                async_write=self.cfg.checkpoint_async,
+            )
+            # the base state is durable from construction: a crash before
+            # the first post-mutation save still restores something real
+            self._ckpt_last_epoch = self._ckpt.save(self.store)
+            self._m_ckpts.inc()
         self._cache_epoch(snap)
+
+    @classmethod
+    def restore(cls, directory: str,
+                cfg: "GraphServiceConfig | None" = None, *,
+                storage_dir: str | None = None) -> "GraphQueryService":
+        """Warm-start a service from the newest durable snapshot.
+
+        Rebuilds the store + incremental index (+ planner stats) from the
+        latest committed step under ``directory`` and constructs a service
+        over them — no index rebuild, same epoch, same digests.  Raises
+        the typed ``CheckpointError`` when the directory holds no committed
+        snapshot or the snapshot fails validation (truncated/partial
+        directories fail closed).  ``storage_dir`` relocates an
+        out-of-core snapshot's chunk-directory root.  Unless ``cfg`` says
+        otherwise, the restored service keeps checkpointing into the same
+        directory.
+        """
+        from repro.checkpoint import CheckpointError
+        from repro.serve.persist import ServiceCheckpointer
+
+        step, store = ServiceCheckpointer(directory).restore_latest(
+            storage_dir=storage_dir
+        )
+        if store is None:
+            raise CheckpointError(
+                f"{directory} holds no committed service snapshot"
+            )
+        cfg = cfg if cfg is not None else GraphServiceConfig()
+        if cfg.checkpoint_dir is None:
+            cfg = dataclasses.replace(cfg, checkpoint_dir=directory)
+        return cls(store, cfg)
 
     # -- epoch/snapshot management -------------------------------------------
 
@@ -376,12 +515,21 @@ class GraphQueryService:
     # -- public API ----------------------------------------------------------
 
     def submit(self, query: Graph,
-               max_embeddings: int | None = None) -> int:
+               max_embeddings: int | None = None, *,
+               tenant: str = "default", priority: int = 0,
+               deadline_seconds: float | None = None) -> int:
         """Enqueue a query; returns its request id.
 
         Rejects queries that exceed the service's static slot shapes — size
         the caps from the workload, or route oversize queries to a
         ``BatchQueryEngine`` with per-bucket shapes.
+
+        Admission control: a full queue (``max_queue_depth``) or an
+        over-quota tenant (``tenant_quota``) raises the typed
+        ``AdmissionRejected`` (also recorded in ``rejections``) — bounded
+        backpressure, never a silent drop.  ``priority`` (higher first)
+        and ``deadline_seconds`` (sooner first; lapsed-in-queue requests
+        expire into ``expired``) shape the slot-admission order.
         """
         if self._shutting_down:
             raise RuntimeError("service is shut down; no new submissions")
@@ -398,10 +546,39 @@ class GraphQueryService:
                 f"{self.cfg.max_query_labels}"
             )
         self._rid += 1
-        self.queue.append(
-            _Request(self._rid, query, max_embeddings, time.perf_counter())
-        )
+        if (self.cfg.max_queue_depth is not None
+                and len(self.queue) >= self.cfg.max_queue_depth):
+            raise self._reject(
+                self._rid, "queue_full", tenant,
+                f"queue depth {len(self.queue)} is at max_queue_depth="
+                f"{self.cfg.max_queue_depth}; tick/drain and retry",
+            )
+        if self.cfg.tenant_quota is not None:
+            load = sum(r.tenant == tenant for r in self.queue) + sum(
+                r is not None and r.tenant == tenant for r in self.active
+            )
+            if load >= self.cfg.tenant_quota:
+                raise self._reject(
+                    self._rid, "tenant_quota", tenant,
+                    f"tenant {tenant!r} has {load} queued+active requests "
+                    f">= tenant_quota={self.cfg.tenant_quota}",
+                )
+        now = time.perf_counter()
+        self.queue.append(_Request(
+            self._rid, query, max_embeddings, now,
+            tenant=tenant, priority=int(priority),
+            deadline=(now + float(deadline_seconds)
+                      if deadline_seconds is not None else None),
+        ))
+        self._m_queue_depth.set(len(self.queue))
         return self._rid
+
+    def _reject(self, rid: int, reason: str, tenant: str,
+                message: str) -> AdmissionRejected:
+        self.rejections.append(RejectedRequest(rid, reason, tenant))
+        self._m_rejected.inc(1, reason=reason)
+        return AdmissionRejected(message, rid=rid, reason=reason,
+                                 tenant=tenant)
 
     def add_edges(self, edges, elabels=None):
         """Insert edges into the backing store (between ticks).
@@ -421,18 +598,56 @@ class GraphQueryService:
                 "service was constructed from an immutable Graph; build it "
                 "from a GraphStore to take live updates"
             )
+        if getattr(self, "_read_only", False):
+            raise RuntimeError(
+                "this service is a read replica; route mutations through "
+                "the router's writer (serve/replicas.py)"
+            )
         if op == "add_edges":
             res = self.store.add_edges(edges, elabels)
         else:
             res = self.store.remove_edges(edges)
         # unreachable when degree_cap <= d_max (apply validates atomically);
-        # guards a store whose cap was widened behind the service's back
-        assert self.store.max_degree <= self.d_max, (
-            f"store max degree {self.store.max_degree} exceeds the service's "
-            f"static d_max={self.d_max}"
-        )
+        # guards a store whose cap was widened behind the service's back.
+        # A real raise, not an assert: this invariant protects result
+        # soundness (slot digests are encoded against d_max) and must hold
+        # under ``python -O`` too.
+        if self.store.max_degree > self.d_max:
+            raise RuntimeError(
+                f"store max degree {self.store.max_degree} exceeds the "
+                f"service's static d_max={self.d_max}"
+            )
+        self._maybe_checkpoint()
         self._gc_epochs()
         return res
+
+    def _maybe_checkpoint(self) -> None:
+        if self._ckpt is None:
+            return
+        if self.epoch - self._ckpt_last_epoch >= self.cfg.checkpoint_every:
+            self._ckpt.save(self.store)
+            self._ckpt_last_epoch = self.epoch
+            self._m_ckpts.inc()
+
+    def checkpoint_now(self) -> int:
+        """Force a durable snapshot of the current epoch; returns the step."""
+        if self._ckpt is None:
+            raise RuntimeError(
+                "no checkpoint_dir configured on this service"
+            )
+        step = self._ckpt.save(self.store)
+        self._ckpt_last_epoch = self.epoch
+        self._m_ckpts.inc()
+        return step
+
+    def wait_for_checkpoints(self) -> None:
+        """Block until the in-flight async snapshot write commits.
+
+        Re-raises a failed write as ``CheckpointError`` — the async-write
+        contract of ``CheckpointManager`` surfaces here.
+        """
+        if self._ckpt is not None:
+            self._ckpt.wait()
 
     def tick(self) -> list[tuple[int, np.ndarray, QueryStats]]:
         """One scheduler step = one batched peeling round per pinned epoch.
@@ -443,6 +658,8 @@ class GraphQueryService:
         until the old ones drain.
         """
         self._m_ticks.inc()
+        self._m_queue_depth_hist.observe(float(len(self.queue)))
+        self._m_queue_depth.set(len(self.queue))
         with obsv.span("service.tick", active=self.n_active,
                        queued=len(self.queue)):
             return self._tick()
@@ -507,13 +724,26 @@ class GraphQueryService:
         return finished
 
     def run_to_completion(self, max_ticks: int = 100_000):
-        """Drain queue + slots; returns all finished triples."""
+        """Drain queue + slots; returns all finished triples.
+
+        Raises ``DrainTimeout`` when ``max_ticks`` is exhausted with
+        requests still queued or in flight — the triples that did finish
+        ride on ``err.finished``, so an incomplete drain is never
+        indistinguishable from success.
+        """
         done = []
         for _ in range(max_ticks):
             done.extend(self.tick())
             if not self.queue and all(a is None for a in self.active):
-                break
-        return done
+                return done
+        if not self.queue and all(a is None for a in self.active):
+            return done
+        raise DrainTimeout(
+            f"run_to_completion: {len(self.queue)} queued and "
+            f"{self.n_active} in-flight requests remain after "
+            f"{max_ticks} ticks",
+            finished=done,
+        )
 
     def shutdown(self, *, drain: bool = True, max_ticks: int = 100_000):
         """Stop the service: returns ``(finished, cancelled)``.
@@ -521,30 +751,35 @@ class GraphQueryService:
         ``drain=True`` finishes every already-admitted (in-slot) query
         first; queued-but-unstarted requests are *always* cancelled and
         reported — never silently dropped.  ``drain=False`` also cancels
-        the in-flight slots.  ``submit`` raises afterwards.
+        the in-flight slots.  A drain that exhausts ``max_ticks`` with
+        slots still active cancels-and-reports the leftovers (reason
+        ``"shutdown drain exhausted"``) instead of leaking them.  With a
+        ``checkpoint_dir``, the final state is persisted and the write is
+        waited on before returning.  ``submit`` raises afterwards.
         """
         self._shutting_down = True  # _admit is disabled from here on
         finished: list = []
         cancelled: list[CancelledRequest] = []
-        now = time.perf_counter()
         if drain:
             for _ in range(max_ticks):
                 if all(a is None for a in self.active):
                     break
                 finished.extend(self.tick())
-        else:
-            for req in [r for r in self.active if r is not None]:
-                # the partial work done on the request's behalf is not lost:
-                # its epoch's accumulated chunk-IO telemetry rides along
-                cancelled.append(CancelledRequest(
-                    req.rid, "shutdown before completion",
-                    now - req.submitted_at,
-                    ooc=self._ooc_tel.get(req.epoch),
-                ))
-                if req.span is not None:
-                    req.span.set_attrs(cancelled=True)
-                    obsv.end(req.span)
-                self._free(req.slot)
+        now = time.perf_counter()
+        reason = ("shutdown drain exhausted" if drain
+                  else "shutdown before completion")
+        for req in [r for r in self.active if r is not None]:
+            # the partial work done on the request's behalf is not lost:
+            # its epoch's accumulated chunk-IO telemetry rides along
+            cancelled.append(CancelledRequest(
+                req.rid, reason,
+                now - req.submitted_at,
+                ooc=self._ooc_tel.get(req.epoch),
+            ))
+            if req.span is not None:
+                req.span.set_attrs(cancelled=True)
+                obsv.end(req.span)
+            self._free(req.slot)
         for req in self.queue:
             cancelled.append(CancelledRequest(
                 req.rid, "shutdown before admission",
@@ -552,6 +787,12 @@ class GraphQueryService:
             ))
         self.queue.clear()
         self._m_requests.inc(len(cancelled), status="cancelled")
+        if self._ckpt is not None:
+            if self._ckpt_last_epoch != self.epoch:
+                self._ckpt.save(self.store)
+                self._ckpt_last_epoch = self.epoch
+                self._m_ckpts.inc()
+            self._ckpt.wait()
         return finished, cancelled
 
     def metrics_snapshot(self) -> dict:
@@ -566,6 +807,7 @@ class GraphQueryService:
 
     def _refresh_gauges(self) -> None:
         self._m_active.set(self.n_active)
+        self._m_queue_depth.set(len(self.queue))
         if self._ooc is not None:
             cache = self._ooc.cache
             acc = cache.hits + cache.misses
@@ -590,12 +832,44 @@ class GraphQueryService:
 
     # -- internals -----------------------------------------------------------
 
+    def _expire_queued(self, now: float) -> None:
+        """Expire queued requests whose deadline already lapsed — reported
+        in ``expired`` (and the deadline-miss counter), never silently
+        dropped, and never admitted into a slot they can't meet."""
+        keep: list[_Request] = []
+        for r in self.queue:
+            if r.deadline is not None and now >= r.deadline:
+                self.expired.append(CancelledRequest(
+                    r.rid, "deadline expired before admission",
+                    now - r.submitted_at,
+                ))
+                self._m_deadline_miss.inc()
+                self._m_requests.inc(1, status="expired")
+            else:
+                keep.append(r)
+        self.queue[:] = keep
+
+    def _pick_queued(self) -> _Request:
+        """Admission order: priority desc, then deadline asc (undeadlined
+        last), then FIFO — a stable total order over the queue."""
+        i = min(
+            range(len(self.queue)),
+            key=lambda j: (
+                -self.queue[j].priority,
+                self.queue[j].deadline
+                if self.queue[j].deadline is not None else float("inf"),
+                self.queue[j].submitted_at,
+            ),
+        )
+        return self.queue.pop(i)
+
     def _admit(self):
         if self._shutting_down:
             return
+        self._expire_queued(time.perf_counter())
         for slot in range(self.cfg.max_slots):
             if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self._pick_queued()
                 req.slot = slot
                 now = time.perf_counter()
                 queue_s = now - req.submitted_at
@@ -677,12 +951,19 @@ class GraphQueryService:
             vertices_before=self.n_vertices,
             ilgf_iterations=req.rounds,
         )
+        deadline_missed = (req.deadline is not None
+                           and time.perf_counter() > req.deadline)
+        if deadline_missed:
+            self._m_deadline_miss.inc()
         stats.extras["service"] = obsv.ServiceReport(
             slot=req.slot,
             epoch=req.epoch,
             queue_seconds=time.perf_counter() - req.submitted_at,
             rounds=req.rounds,
             trace_id=req.span.trace_id if req.span is not None else None,
+            tenant=req.tenant,
+            priority=req.priority,
+            deadline_missed=deadline_missed,
         ).validate()
         if req.epoch in self._ooc_tel:
             # the accumulated (typed, Mapping-compatible) epoch report —

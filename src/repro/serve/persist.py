@@ -1,0 +1,171 @@
+"""Durable service snapshots: store + CNI index + planner stats per epoch.
+
+``ServiceCheckpointer`` is the glue between the mutable serving tier
+(serve/graph_service.py) and the fault-tolerance substrate
+(checkpoint/ckpt.py): one checkpoint *step* per saved store epoch, holding
+
+* the store's logical state (``BaseGraphStore.checkpoint_state()`` —
+  the alive canonical edge set for RAM stores; the resident overlay plus a
+  ``(storage_root, generation)`` reference for the out-of-core store, whose
+  chunk files are already durable), and
+* the maintained incremental-index state (counts, CNI digests, degrees)
+  with the planner's ``GraphStats`` riding along — so a restore is *warm*:
+  no O(V·L + E) rebuild, the first admitted query prefilters against the
+  same digests the original service maintained.
+
+Layout reuses ``CheckpointManager`` unchanged (atomic tmp-dir + rename
+commit, keep-last-k GC, async writer with captured-error re-raise).  Leaf
+arrays vary in shape across epochs, so the read side is the ``like``-free
+``load_latest_leaves`` path; leaves are keyed ``store/...`` / ``index/...``
+and the key list is recorded in the manifest (``jax.tree.flatten`` of a
+dict emits values in sorted-key order, which makes the mapping exact).
+
+Failure model (DESIGN.md §15): every restore validates leaves against the
+manifest *and* the component metas against each other (edge-table
+canonicality, index/store epoch agreement, shard-plan agreement, the OOC
+generation's existence) and raises the typed ``CheckpointError`` — a
+truncated, partial, or torn snapshot directory fails closed, never as a
+silently wrong warm service.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.checkpoint import CheckpointError, CheckpointManager
+
+SCHEMA_VERSION = 1
+
+
+def _store_kinds() -> dict:
+    from repro.graphs.ooc import OutOfCoreGraphStore
+    from repro.graphs.store import GraphStore, ShardedGraphStore
+
+    return {
+        "graph": GraphStore,
+        "sharded": ShardedGraphStore,
+        "ooc": OutOfCoreGraphStore,
+    }
+
+
+def _index_types() -> dict:
+    from repro.core.incremental import (
+        IncrementalIndex,
+        ShardedIncrementalIndex,
+    )
+
+    return {
+        "IncrementalIndex": IncrementalIndex,
+        "ShardedIncrementalIndex": ShardedIncrementalIndex,
+    }
+
+
+class ServiceCheckpointer:
+    """Keep-last-k durable snapshots of one store (+ attached index).
+
+    ``save`` is asynchronous by default (the writer thread persists while
+    the service keeps ticking); a failed write re-raises as
+    ``CheckpointError`` on ``wait()`` or the next ``save()`` — never
+    silently mistaken for a durable snapshot.
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_write: bool = True):
+        self.directory = directory
+        self.manager = CheckpointManager(
+            directory, keep=keep, async_write=async_write
+        )
+
+    # -- write side ----------------------------------------------------------
+
+    def save(self, store) -> int:
+        """Snapshot the store (+ index) at its current epoch; returns the
+        step (== the epoch).  Re-saving the same epoch is idempotent."""
+        leaves: dict = {}
+        meta: dict = {"schema": SCHEMA_VERSION}
+        s_leaves, s_meta = store.checkpoint_state()
+        leaves.update({f"store/{k}": v for k, v in s_leaves.items()})
+        meta["store"] = s_meta
+        if store.index is not None:
+            i_leaves, i_meta = store.index.checkpoint_state()
+            leaves.update({f"index/{k}": v for k, v in i_leaves.items()})
+            meta["index"] = i_meta
+        else:
+            meta["index"] = None
+        meta["leaf_keys"] = sorted(leaves)
+        step = int(store.epoch)
+        self.manager.save(step, leaves, extra=meta)
+        return step
+
+    def wait(self) -> None:
+        """Block until the in-flight async write commits (re-raises its
+        failure, if any)."""
+        self.manager.wait()
+
+    # -- read side -----------------------------------------------------------
+
+    def restore_latest(self, *, storage_dir: Optional[str] = None):
+        """Rebuild ``(step, store)`` from the newest committed snapshot.
+
+        Returns ``(None, None)`` when the directory holds no committed
+        step.  ``storage_dir`` overrides an out-of-core snapshot's recorded
+        chunk-directory root (for restores on a different path).
+        """
+        step, leaf_list, manifest = self.manager.load_latest_leaves()
+        if step is None:
+            return None, None
+        meta = manifest["extra"]
+        keys = meta.get("leaf_keys")
+        if not isinstance(keys, list) or len(keys) != len(leaf_list):
+            raise CheckpointError(
+                f"service snapshot step {step}: leaf_keys "
+                f"({'missing' if keys is None else len(keys)}) disagrees "
+                f"with {len(leaf_list)} stored leaves"
+            )
+        leaves = dict(zip(keys, leaf_list))
+        store_meta = meta.get("store")
+        if not isinstance(store_meta, dict) or "kind" not in store_meta:
+            raise CheckpointError(
+                f"service snapshot step {step} has no store meta"
+            )
+        cls = _store_kinds().get(store_meta["kind"])
+        if cls is None:
+            raise CheckpointError(
+                f"service snapshot has unknown store kind "
+                f"{store_meta['kind']!r}"
+            )
+        store_leaves = {
+            k.split("/", 1)[1]: v for k, v in leaves.items()
+            if k.startswith("store/")
+        }
+        if store_meta["kind"] == "ooc":
+            store = cls.from_checkpoint_state(
+                store_leaves, store_meta, storage_dir=storage_dir
+            )
+        else:
+            store = cls.from_checkpoint_state(store_leaves, store_meta)
+        idx_meta = meta.get("index")
+        if idx_meta is not None:
+            icls = _index_types().get(idx_meta.get("type"))
+            if icls is None:
+                raise CheckpointError(
+                    f"service snapshot has unknown index type "
+                    f"{idx_meta.get('type')!r}"
+                )
+            idx_leaves = {
+                k.split("/", 1)[1]: v for k, v in leaves.items()
+                if k.startswith("index/")
+            }
+            idx = icls.from_checkpoint_state(idx_leaves, idx_meta,
+                                             store=store)
+            try:
+                store.attach_index(idx, rebuild=False)
+            except ValueError as err:  # epoch disagreement: torn snapshot
+                raise CheckpointError(str(err)) from err
+        elif store_meta["kind"] == "ooc":
+            # the OOC query path requires resident digests; a store saved
+            # without an index gets a fresh one (cold rebuild, still exact)
+            from repro.core.incremental import IncrementalIndex
+
+            store.attach_index(IncrementalIndex())
+        return int(step), store

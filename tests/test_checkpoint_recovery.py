@@ -1,0 +1,393 @@
+"""Durable snapshots + crash recovery (serve/persist.py, checkpoint/ckpt.py).
+
+The contract under test (DESIGN.md §15): a service configured with a
+``checkpoint_dir`` persists its store + incremental index every
+``checkpoint_every`` epochs through the atomic tmp-dir + rename commit of
+``save_checkpoint``, so a process killed at an arbitrary point in a
+mutation stream restores to *some committed epoch E* — and the restored
+state is bit-identical to an unkilled twin that replayed the same first E
+mutations.  The flip side is fail-closed reads: a truncated leaf, a
+missing file, a torn store/index pair, or a vanished out-of-core
+generation raises the typed ``CheckpointError``, never a silently wrong
+warm service.  Async writes surface their failure on ``wait()`` or the
+next ``save()`` (satellite regression: the error used to die with the
+writer thread).
+
+The kill test drives a *real* subprocess (SIGKILL, not an in-process
+simulation) so the commit point is the filesystem rename, with the write
+actually racing the kill.
+"""
+
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.checkpoint import CheckpointError, CheckpointManager
+from repro.core.engine import SubgraphQueryEngine
+from repro.core.incremental import IncrementalIndex
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.graphs.store import GraphStore, ShardedGraphStore
+from repro.serve import (
+    GraphQueryService,
+    GraphServiceConfig,
+    ServiceCheckpointer,
+)
+
+_SRC = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+
+
+def _eset(emb):
+    emb = np.asarray(emb)
+    if emb.size == 0:
+        return set()
+    return set(map(tuple, emb.reshape(emb.shape[0], -1).tolist()))
+
+
+# The mutation workload both the child process and the parent's replay twin
+# derive independently from the same seed — determinism is the test's axle.
+_WORKLOAD = '''
+import numpy as np
+from repro.graphs import random_labeled_graph
+from repro.graphs.generators import random_update_batches
+
+
+def make_graph():
+    return random_labeled_graph(60, 150, 4, n_edge_labels=2, seed=21)
+
+
+def mutation_calls(g, n_batches=18, batch_edges=6):
+    calls = []
+    for b in random_update_batches(g, n_batches, batch_edges,
+                                   delete_frac=0.4, n_edge_labels=2, seed=5):
+        ins = np.asarray(b.insert) & np.asarray(b.valid)
+        dele = ~np.asarray(b.insert) & np.asarray(b.valid)
+        src = np.asarray(b.src)
+        dst = np.asarray(b.dst)
+        lab = np.asarray(b.elabels)
+        if dele.any():
+            calls.append(("remove_edges",
+                          np.stack([src[dele], dst[dele]], 1).tolist(),
+                          None))
+        if ins.any():
+            calls.append(("add_edges",
+                          np.stack([src[ins], dst[ins]], 1).tolist(),
+                          lab[ins].tolist()))
+    return calls
+'''
+
+_CHILD = _WORKLOAD + '''
+import sys
+from repro.core.incremental import IncrementalIndex
+from repro.graphs.store import GraphStore
+from repro.serve import GraphQueryService, GraphServiceConfig
+
+ckpt_dir = sys.argv[1]
+g = make_graph()
+store = GraphStore.from_graph(g, degree_cap=64)
+store.attach_index(IncrementalIndex())
+svc = GraphQueryService(store, GraphServiceConfig(
+    max_slots=2, max_query_vertices=8, max_query_labels=8,
+    checkpoint_dir=ckpt_dir, checkpoint_every=1, checkpoint_async=True))
+print("READY", flush=True)
+for k, (op, edges, labs) in enumerate(mutation_calls(g)):
+    if op == "add_edges":
+        svc.add_edges(edges, labs)
+    else:
+        svc.remove_edges(edges)
+    print("MUT", k, "epoch", store.epoch, flush=True)
+print("DONE", flush=True)
+'''
+
+
+def _workload_ns() -> dict:
+    ns: dict = {}
+    exec(_WORKLOAD, ns)  # noqa: S102 — the same source the child runs
+    return ns
+
+
+class TestCrashRecovery:
+    def test_sigkill_mid_stream_restores_committed_epoch(self, tmp_path):
+        """SIGKILL the service mid-mutation-stream; the restored service
+        must equal an unkilled twin replayed to the recovered epoch."""
+        ckpt = tmp_path / "ckpt"
+        script = tmp_path / "child.py"
+        script.write_text(_CHILD)
+        env = {**os.environ, "PYTHONPATH": _SRC}
+        proc = subprocess.Popen(
+            [sys.executable, str(script), str(ckpt)],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+            text=True, env=env,
+        )
+        try:
+            seen = -1
+            for line in proc.stdout:
+                if line.startswith("MUT"):
+                    seen = int(line.split()[1])
+                    if seen >= 6:  # mid-stream, writes still in flight
+                        break
+                if line.startswith("DONE"):
+                    break
+            assert seen >= 6, "child never reached the kill point"
+            os.kill(proc.pid, signal.SIGKILL)
+        finally:
+            proc.stdout.close()
+            proc.wait(timeout=60)
+
+        restored = GraphQueryService.restore(str(ckpt))
+        e = restored.store.epoch
+        assert e >= 1, "no post-mutation snapshot committed before the kill"
+
+        # unkilled twin: same graph, same call sequence, first E calls
+        ns = _workload_ns()
+        g = ns["make_graph"]()
+        calls = ns["mutation_calls"](g)
+        assert e <= len(calls)
+        twin = GraphStore.from_graph(g, degree_cap=64)
+        twin.attach_index(IncrementalIndex())
+        for op, edges, labs in calls[:e]:
+            if op == "add_edges":
+                twin.add_edges(edges, labs)
+            else:
+                twin.remove_edges(edges)
+
+        # store parity: alive canonical edge multiset + vertex labels
+        rl, rm = restored.store.checkpoint_state()
+        tl, tm = twin.checkpoint_state()
+        assert rm["epoch"] == tm["epoch"] == e
+        np.testing.assert_array_equal(rl["vlabels"], tl["vlabels"])
+        r_edges = sorted(zip(rl["edge_lo"].tolist(), rl["edge_hi"].tolist(),
+                             rl["edge_lab"].tolist()))
+        t_edges = sorted(zip(tl["edge_lo"].tolist(), tl["edge_hi"].tolist(),
+                             tl["edge_lab"].tolist()))
+        assert r_edges == t_edges
+
+        # index parity: the restore is WARM — digests equal the twin's
+        il, im = restored.store.index.checkpoint_state()
+        jl, jm = twin.index.checkpoint_state()
+        assert im["epoch"] == jm["epoch"] == e
+        for key in ("counts", "deg", "cni_u64", "cni_log"):
+            np.testing.assert_array_equal(il[key], jl[key], err_msg=key)
+
+        # behavioural parity: same query, same embeddings, via the service
+        # (prefer a seed with a non-empty answer so the check isn't vacuous)
+        eng = SubgraphQueryEngine(twin.snapshot().graph)
+        for seed in range(9, 15):
+            q = random_walk_query(g, 4, seed=seed)
+            ref, _ = eng.query(q)
+            if np.asarray(ref).shape[0] > 0:
+                break
+        rid = restored.submit(q)
+        done = {r: emb for r, emb, _ in restored.run_to_completion()}
+        assert _eset(done[rid]) == _eset(ref)
+        restored.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# snapshot roundtrips per store kind
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotRoundtrip:
+    def _graph(self):
+        return random_labeled_graph(50, 130, 4, n_edge_labels=2, seed=3)
+
+    def _check(self, store, directory, g, **restore_kw):
+        ckpt = ServiceCheckpointer(str(directory), async_write=False)
+        step = ckpt.save(store)
+        assert step == store.epoch
+        step2, store2 = ckpt.restore_latest(**restore_kw)
+        assert step2 == step and store2.epoch == store.epoch
+        q = random_walk_query(g, 4, seed=4)
+        ref, _ = SubgraphQueryEngine(store.snapshot()).query(q)
+        got, _ = SubgraphQueryEngine(store2.snapshot()).query(q)
+        assert _eset(got) == _eset(ref)
+        return store2
+
+    def test_graph_store_roundtrip_after_mutations(self, tmp_path):
+        g = self._graph()
+        store = GraphStore.from_graph(g, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        store.add_edges([[0, 17], [3, 44]])
+        store.remove_edges([[int(np.asarray(g.src)[0]),
+                            int(np.asarray(g.dst)[0])]])
+        store2 = self._check(store, tmp_path / "c", g)
+        assert store2.index is not None
+        assert store2.index._epoch == store.epoch  # warm, not rebuilt
+
+    def test_sharded_store_roundtrip(self, tmp_path):
+        g = self._graph()
+        store = ShardedGraphStore.from_graph(g, n_shards=2, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        store.add_edges([[1, 30]])
+        store2 = self._check(store, tmp_path / "c", g)
+        assert isinstance(store2, ShardedGraphStore)
+
+    def test_ooc_store_roundtrip_and_missing_generation(self, tmp_path):
+        from repro.graphs import OutOfCoreGraphStore
+
+        g = self._graph()
+        store = OutOfCoreGraphStore.from_graph(
+            g, storage_dir=str(tmp_path / "chunks"), chunk_edges=16,
+        )
+        store.add_edges([[0, 21]])
+        store2 = self._check(store, tmp_path / "c", g)
+        assert store2.generation == store.generation
+        # the snapshot references on-disk chunks: a vanished generation
+        # directory must fail closed, not restore an empty graph
+        shutil.rmtree(store._base.path)
+        ckpt = ServiceCheckpointer(str(tmp_path / "c"))
+        with pytest.raises(CheckpointError, match="generation"):
+            ckpt.restore_latest()
+
+
+# ---------------------------------------------------------------------------
+# fail-closed reads: truncated / partial / torn snapshots
+# ---------------------------------------------------------------------------
+
+
+def _committed_service_dir(tmp_path):
+    g = random_labeled_graph(40, 90, 3, seed=6)
+    store = GraphStore.from_graph(g, degree_cap=32)
+    store.attach_index(IncrementalIndex())
+    svc = GraphQueryService(store, GraphServiceConfig(
+        max_slots=1, max_query_vertices=8, max_query_labels=8,
+        checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_async=False))
+    svc.add_edges([[0, 11]])
+    svc.shutdown()
+    d = tmp_path / "ckpt"
+    steps = sorted(p for p in os.listdir(d) if p.startswith("step_"))
+    return d, d / steps[-1]
+
+
+class TestFailClosed:
+    def test_restore_empty_dir_raises(self, tmp_path):
+        with pytest.raises(CheckpointError, match="no committed"):
+            GraphQueryService.restore(str(tmp_path / "nothing"))
+
+    def test_truncated_leaf_fails_closed(self, tmp_path):
+        d, step_dir = _committed_service_dir(tmp_path)
+        leaf = step_dir / "leaf_00000.npy"
+        data = leaf.read_bytes()
+        leaf.write_bytes(data[: len(data) // 2])
+        with pytest.raises(CheckpointError):
+            GraphQueryService.restore(str(d))
+
+    def test_missing_leaf_fails_closed(self, tmp_path):
+        d, step_dir = _committed_service_dir(tmp_path)
+        os.remove(step_dir / "leaf_00003.npy")
+        with pytest.raises(CheckpointError, match="missing leaf"):
+            GraphQueryService.restore(str(d))
+
+    def test_leaf_keys_manifest_disagreement(self, tmp_path):
+        d, step_dir = _committed_service_dir(tmp_path)
+        mpath = step_dir / "manifest.json"
+        m = json.loads(mpath.read_text())
+        m["extra"]["leaf_keys"] = m["extra"]["leaf_keys"][:-1]
+        mpath.write_text(json.dumps(m))
+        with pytest.raises(CheckpointError, match="leaf_keys"):
+            GraphQueryService.restore(str(d))
+
+    def test_torn_store_index_pair_fails_closed(self, tmp_path):
+        """A snapshot whose index epoch disagrees with its store epoch is
+        torn — warm-attaching it would serve digests for a different edge
+        set."""
+        d, step_dir = _committed_service_dir(tmp_path)
+        mpath = step_dir / "manifest.json"
+        m = json.loads(mpath.read_text())
+        m["extra"]["index"]["epoch"] += 1
+        mpath.write_text(json.dumps(m))
+        with pytest.raises(CheckpointError, match="epoch"):
+            GraphQueryService.restore(str(d))
+
+    def test_warm_attach_validates_epoch(self):
+        g = random_labeled_graph(30, 60, 3, seed=8)
+        store = GraphStore.from_graph(g, degree_cap=32)
+        idx = IncrementalIndex()
+        with pytest.raises(ValueError, match="epoch"):
+            store.attach_index(idx, rebuild=False)
+
+
+# ---------------------------------------------------------------------------
+# async-write failure surfacing (satellite regression: the writer thread
+# used to swallow its exception — a failed write looked durable)
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncWriteFailure:
+    def _tree(self):
+        return {"a": np.arange(4), "b": np.ones((2, 2))}
+
+    def test_async_failure_reraises_on_wait(self, tmp_path, monkeypatch):
+        import repro.checkpoint.ckpt as ckpt_mod
+
+        mgr = CheckpointManager(str(tmp_path / "c"), async_write=True)
+        mgr.save(0, self._tree())
+        mgr.wait()  # healthy write commits
+
+        def boom(*a, **k):
+            raise OSError("disk full (injected)")
+
+        monkeypatch.setattr(ckpt_mod, "save_checkpoint", boom)
+        mgr.save(1, self._tree())
+        with pytest.raises(CheckpointError, match="disk full"):
+            mgr.wait()
+        # the error is consumed once reported; the manager recovers
+        monkeypatch.undo()
+        mgr.save(2, self._tree())
+        mgr.wait()
+        from repro.checkpoint import latest_step
+
+        assert latest_step(str(tmp_path / "c")) == 2
+
+    def test_async_failure_reraises_on_next_save(self, tmp_path, monkeypatch):
+        import repro.checkpoint.ckpt as ckpt_mod
+
+        mgr = CheckpointManager(str(tmp_path / "c"), async_write=True)
+
+        def boom(*a, **k):
+            raise OSError("device offline (injected)")
+
+        monkeypatch.setattr(ckpt_mod, "save_checkpoint", boom)
+        mgr.save(0, self._tree())
+        with pytest.raises(CheckpointError, match="device offline"):
+            mgr.save(1, self._tree())
+
+    def test_sync_failure_raises_immediately(self, tmp_path, monkeypatch):
+        import repro.checkpoint.ckpt as ckpt_mod
+
+        mgr = CheckpointManager(str(tmp_path / "c"), async_write=False)
+
+        def boom(*a, **k):
+            raise OSError("read-only fs (injected)")
+
+        monkeypatch.setattr(ckpt_mod, "save_checkpoint", boom)
+        with pytest.raises(CheckpointError, match="read-only fs"):
+            mgr.save(0, self._tree())
+
+    def test_service_surfaces_failed_snapshot(self, tmp_path, monkeypatch):
+        """The service path: a failed async snapshot raises out of
+        ``wait_for_checkpoints`` as ``CheckpointError``."""
+        import repro.checkpoint.ckpt as ckpt_mod
+
+        g = random_labeled_graph(30, 70, 3, seed=9)
+        store = GraphStore.from_graph(g, degree_cap=32)
+        store.attach_index(IncrementalIndex())
+        svc = GraphQueryService(store, GraphServiceConfig(
+            max_slots=1, max_query_vertices=8, max_query_labels=8,
+            checkpoint_dir=str(tmp_path / "ckpt"), checkpoint_async=True))
+        svc.wait_for_checkpoints()  # construction snapshot commits
+
+        def boom(*a, **k):
+            raise OSError("no space (injected)")
+
+        monkeypatch.setattr(ckpt_mod, "save_checkpoint", boom)
+        svc.add_edges([[0, 5]])
+        with pytest.raises(CheckpointError, match="no space"):
+            svc.wait_for_checkpoints()

@@ -1,0 +1,368 @@
+"""Admission control, drain accounting, and replica routing
+(serve/graph_service.py, serve/replicas.py).
+
+Three contracts:
+
+* **Admission is bounded and typed** — ``submit`` past ``max_queue_depth``
+  or a tenant's quota raises ``AdmissionRejected`` (reason, rid, tenant)
+  and records the rejection (list + counter); it never silently drops or
+  silently grows the queue.  Queued requests whose deadline lapses before
+  admission are expired with a report, admitted ones run
+  priority-desc / deadline-asc / FIFO.
+* **Nothing leaks through shutdown** — every submitted rid comes back as
+  finished or cancelled even when the drain budget exhausts with requests
+  still in flight (satellite regression: those used to vanish), and
+  ``run_to_completion`` signals an incomplete drain with ``DrainTimeout``
+  carrying the partial results instead of returning them as if complete.
+* **The d_max soundness guard survives ``python -O``** — the degree
+  invariant is a real RuntimeError, not an assert (satellite regression:
+  it used to vanish under optimized bytecode).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.engine import SubgraphQueryEngine
+from repro.core.incremental import IncrementalIndex
+from repro.graphs import random_labeled_graph, random_walk_query
+from repro.graphs.store import GraphStore
+from repro.serve import (
+    AdmissionRejected,
+    DrainTimeout,
+    GraphQueryService,
+    GraphServiceConfig,
+    ReplicatedGraphService,
+)
+
+_SRC = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+
+
+def _eset(emb):
+    emb = np.asarray(emb)
+    if emb.size == 0:
+        return set()
+    return set(map(tuple, emb.reshape(emb.shape[0], -1).tolist()))
+
+
+def _service(g_or_store, **kw):
+    cfg = dict(max_slots=1, max_query_vertices=8, max_query_labels=8)
+    cfg.update(kw)
+    return GraphQueryService(g_or_store, GraphServiceConfig(**cfg))
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return random_labeled_graph(60, 150, 4, seed=3)
+
+
+@pytest.fixture(scope="module")
+def queries(graph):
+    return [random_walk_query(graph, 4, seed=40 + i) for i in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_queue_full_rejects_typed(self, graph, queries):
+        svc = _service(graph, max_queue_depth=2)
+        svc.submit(queries[0])
+        svc.submit(queries[1])
+        with pytest.raises(AdmissionRejected) as exc:
+            svc.submit(queries[2])
+        assert exc.value.reason == "queue_full"
+        assert exc.value.tenant == "default"
+        # the rejection is recorded, not just raised
+        assert svc.rejections[-1].reason == "queue_full"
+        assert svc.rejections[-1].rid == exc.value.rid
+        fam = svc.metrics_snapshot()["repro_service_rejected_total"]
+        assert fam["series"][(("reason", "queue_full"),)] == 1
+        # the queue did NOT grow past the bound
+        assert len(svc.queue) == 2
+        # draining frees capacity: the same query is admissible again
+        svc.run_to_completion()
+        svc.submit(queries[2])
+
+    def test_tenant_quota_isolates_tenants(self, graph, queries):
+        svc = _service(graph, tenant_quota=1)
+        svc.submit(queries[0], tenant="a")
+        with pytest.raises(AdmissionRejected) as exc:
+            svc.submit(queries[1], tenant="a")
+        assert exc.value.reason == "tenant_quota"
+        assert exc.value.tenant == "a"
+        # another tenant's slice is untouched by a's backpressure
+        svc.submit(queries[1], tenant="b")
+        done = svc.run_to_completion()
+        tenants = {s.extras["service"]["tenant"] for _, _, s in done}
+        assert tenants == {"a", "b"}
+
+    def test_quota_counts_inflight_requests(self, graph, queries):
+        svc = _service(graph, tenant_quota=1, max_slots=2)
+        svc.submit(queries[0], tenant="a")
+        svc.tick()  # admitted: queued count is 0, active count is 1
+        if svc.n_active:
+            with pytest.raises(AdmissionRejected, match="tenant"):
+                svc.submit(queries[1], tenant="a")
+        svc.run_to_completion()
+
+    def test_unbounded_when_disabled(self, graph, queries):
+        svc = _service(graph, max_queue_depth=None)
+        for q in queries:
+            svc.submit(q)
+        assert len(svc.queue) == len(queries)
+        svc.run_to_completion()
+
+
+# ---------------------------------------------------------------------------
+# priority / deadline scheduling
+# ---------------------------------------------------------------------------
+
+
+class TestScheduling:
+    def test_priority_order(self, graph, queries):
+        svc = _service(graph, max_slots=1)
+        rlo = svc.submit(queries[0], priority=0)
+        rhi = svc.submit(queries[1], priority=5)
+        order = [r for r, _, _ in svc.run_to_completion()]
+        assert order.index(rhi) < order.index(rlo)
+
+    def test_deadline_breaks_priority_ties(self, graph, queries):
+        svc = _service(graph, max_slots=1)
+        r_late = svc.submit(queries[0], deadline_seconds=60.0)
+        r_soon = svc.submit(queries[1], deadline_seconds=5.0)
+        order = [r for r, _, _ in svc.run_to_completion()]
+        assert order.index(r_soon) < order.index(r_late)
+
+    def test_lapsed_deadline_expires_before_admission(self, graph, queries):
+        svc = _service(graph, max_slots=1)
+        rex = svc.submit(queries[0], deadline_seconds=-1.0)
+        rok = svc.submit(queries[1])
+        done = [r for r, _, _ in svc.run_to_completion()]
+        assert done == [rok]
+        assert [c.rid for c in svc.expired] == [rex]
+        assert "deadline" in svc.expired[0].reason
+        snap = svc.metrics_snapshot()
+        miss = snap["repro_service_deadline_missed_total"]
+        assert sum(miss["series"].values()) == 1
+        reqs = snap["repro_service_requests_total"]["series"]
+        assert reqs[(("status", "expired"),)] == 1
+
+    def test_completed_late_flags_deadline_missed(self, graph, queries):
+        svc = _service(graph, max_slots=1)
+        rid = svc.submit(queries[0], deadline_seconds=30.0)
+        svc.tick()  # admit while the deadline is comfortably in the future
+        req = next(r for r in svc.active if r is not None and r.rid == rid)
+        req.deadline = time.perf_counter() - 1.0  # lapse it mid-flight
+        done = {r: s for r, _, s in svc.run_to_completion()}
+        assert done[rid].extras["service"]["deadline_missed"] is True
+
+    def test_report_carries_admission_fields(self, graph, queries):
+        svc = _service(graph)
+        svc.submit(queries[0], tenant="t9", priority=3)
+        (_, _, stats), = svc.run_to_completion()
+        rep = stats.extras["service"]
+        assert rep["tenant"] == "t9"
+        assert rep["priority"] == 3
+        assert rep["deadline_missed"] is False
+
+
+# ---------------------------------------------------------------------------
+# drain accounting (shutdown leak + DrainTimeout)
+# ---------------------------------------------------------------------------
+
+
+class TestDrainAccounting:
+    def test_exhausted_drain_cancels_inflight(self, graph, queries):
+        """Regression: drain=True with an exhausted tick budget used to
+        return with in-flight requests neither finished nor cancelled."""
+        svc = _service(graph, max_slots=2)
+        rids = [svc.submit(q) for q in queries[:4]]
+        svc.tick()
+        finished, cancelled = svc.shutdown(drain=True, max_ticks=0)
+        fin = {r for r, _, _ in finished}
+        can = {c.rid for c in cancelled}
+        assert fin | can == set(rids), "requests leaked through shutdown"
+        reasons = {c.reason for c in cancelled}
+        assert "shutdown drain exhausted" in reasons
+        assert svc.n_active == 0 and not svc.queue
+
+    def test_run_to_completion_raises_drain_timeout(self, graph, queries):
+        svc = _service(graph, max_slots=1)
+        rids = [svc.submit(q) for q in queries[:3]]
+        with pytest.raises(DrainTimeout) as exc:
+            svc.run_to_completion(max_ticks=1)
+        # partial results ride on the exception, not dropped
+        assert isinstance(exc.value.finished, list)
+        assert {r for r, _, _ in exc.value.finished} <= set(rids)
+        # the service is still live: draining afterwards completes the rest
+        rest = svc.run_to_completion()
+        got = {r for r, _, _ in exc.value.finished} | {r for r, _, _ in rest}
+        assert got == set(rids)
+
+
+# ---------------------------------------------------------------------------
+# d_max invariant: a real error, not an assert
+# ---------------------------------------------------------------------------
+
+
+class TestDegreeInvariant:
+    def test_widened_cap_raises_runtime_error(self, graph):
+        store = GraphStore.from_graph(graph)
+        svc = _service(store)
+        # widen the cap behind the service's back, then blow past d_max
+        store.degree_cap = svc.d_max + 64
+        hub = int(np.argmax(store.degrees()))
+        extra = [v for v in range(store.n_vertices)
+                 if v != hub and not store.has_edge(hub, v)]
+        need = svc.d_max - int(store.degrees()[hub]) + 1
+        with pytest.raises(RuntimeError, match="static d_max"):
+            svc.add_edges([[hub, v] for v in extra[:need]])
+
+    def test_invariant_survives_python_O(self):
+        """The old ``assert`` vanished under ``python -O``; the RuntimeError
+        must not.  Drives the same scenario in an optimized subprocess."""
+        prog = textwrap.dedent("""
+            import numpy as np
+            from repro.graphs import random_labeled_graph
+            from repro.graphs.store import GraphStore
+            from repro.serve import GraphQueryService, GraphServiceConfig
+
+            assert False is True or True  # -O proof: asserts are stripped
+            g = random_labeled_graph(60, 150, 4, seed=3)
+            store = GraphStore.from_graph(g)
+            svc = GraphQueryService(store, GraphServiceConfig(
+                max_slots=1, max_query_vertices=8, max_query_labels=8))
+            store.degree_cap = svc.d_max + 64
+            hub = int(np.argmax(store.degrees()))
+            extra = [v for v in range(store.n_vertices)
+                     if v != hub and not store.has_edge(hub, v)]
+            need = svc.d_max - int(store.degrees()[hub]) + 1
+            try:
+                svc.add_edges([[hub, v] for v in extra[:need]])
+            except RuntimeError as err:
+                assert_ok = "static d_max" in str(err)
+                print("GUARD_HELD" if assert_ok else f"WRONG_ERROR {err}")
+            else:
+                print("GUARD_VANISHED")
+        """)
+        out = subprocess.run(
+            [sys.executable, "-O", "-c", prog],
+            capture_output=True, text=True, timeout=300,
+            env={**os.environ, "PYTHONPATH": _SRC},
+        )
+        assert out.returncode == 0, out.stderr
+        assert "GUARD_HELD" in out.stdout, (out.stdout, out.stderr)
+
+
+# ---------------------------------------------------------------------------
+# replica routing
+# ---------------------------------------------------------------------------
+
+
+class TestReplicas:
+    def _router(self, graph, n_replicas=3, **kw):
+        store = GraphStore.from_graph(graph, degree_cap=64)
+        store.attach_index(IncrementalIndex())
+        cfg = dict(max_slots=2, max_query_vertices=8, max_query_labels=8)
+        cfg.update(kw)
+        return store, ReplicatedGraphService(
+            store, GraphServiceConfig(**cfg), n_replicas=n_replicas)
+
+    def test_requires_mutable_store(self, graph):
+        with pytest.raises(TypeError, match="BaseGraphStore"):
+            ReplicatedGraphService(graph)
+
+    def test_submit_spreads_load_and_rids_are_global(self, graph, queries):
+        store, rs = self._router(graph)
+        rids = [rs.submit(q) for q in queries[:6]]
+        assert len(set(rids)) == 6
+        loaded = sum(1 for r in rs.replicas if r.queue or r.n_active)
+        assert loaded == 3, "least-loaded routing left replicas idle"
+        done = {r for r, _, _ in rs.run_to_completion()}
+        assert done == set(rids)
+        rs.shutdown()
+
+    def test_results_match_single_service_with_mutations(self, graph,
+                                                         queries):
+        store, rs = self._router(graph)
+        gr = [rs.submit(q) for q in queries[:6]]
+        done = dict()
+        for r, e, s in rs.tick():
+            done[r] = (e, s)
+        rs.add_edges([[i, (i + 13) % 60] for i in range(0, 30, 3)])
+        for r, e, s in rs.run_to_completion():
+            done[r] = (e, s)
+        assert sorted(done) == sorted(gr)
+        latest = store.snapshot().graph
+        for rid, q in zip(gr, queries[:6]):
+            emb, st = done[rid]
+            if st.extras["service"]["epoch"] == store.epoch:
+                ref, _ = SubgraphQueryEngine(latest).query(q)
+                assert _eset(emb) == _eset(ref)
+        rs.shutdown()
+
+    def test_read_replicas_reject_direct_mutation(self, graph):
+        store, rs = self._router(graph)
+        with pytest.raises(RuntimeError, match="read replica"):
+            rs.replicas[1].add_edges([[0, 1]])
+        # the router's write path works and bumps the shared epoch
+        e0 = rs.epoch
+        rs.add_edges([[0, 7]])
+        assert rs.epoch == e0 + 1
+        assert all(r.store.epoch == rs.epoch for r in rs.replicas)
+        rs.shutdown()
+
+    def test_inflight_queries_pin_epochs_across_replicas(self, graph,
+                                                         queries):
+        """A query admitted on ANY replica pins its epoch on the SHARED
+        store — the writer's mutations must not tear it down."""
+        store, rs = self._router(graph, max_slots=1)
+        for q in queries[:3]:
+            rs.submit(q)
+        rs.tick()  # admits one per replica at epoch 0
+        pinned = store.epoch
+        rs.add_edges([[1, 44]])
+        # the old epoch stays cached while any replica still holds a pin
+        assert any(
+            pinned in r._epochs for r in rs.replicas
+        ) or all(r.n_active == 0 for r in rs.replicas)
+        rs.run_to_completion()
+        # after the drain only the latest epoch may remain cached
+        for r in rs.replicas:
+            assert set(r._epochs) <= {store.epoch}
+        rs.shutdown()
+
+    def test_shutdown_translates_rids(self, graph, queries):
+        store, rs = self._router(graph, n_replicas=2, max_slots=1)
+        rids = [rs.submit(q) for q in queries[:4]]
+        first = rs.tick()
+        finished, cancelled = rs.shutdown(drain=False)
+        fin = {r for r, _, _ in first + finished}
+        can = {c.rid for c in cancelled}
+        assert fin | can == set(rids), "router leaked or mistranslated rids"
+
+    def test_single_replica_degenerates_to_service(self, graph, queries):
+        store, rs = self._router(graph, n_replicas=1)
+        rid = rs.submit(queries[0])
+        done = {r for r, _, _ in rs.run_to_completion()}
+        assert done == {rid}
+        assert rs.writer is rs.replicas[0]
+        rs.shutdown()
+
+    def test_metrics_keyed_per_replica(self, graph, queries):
+        store, rs = self._router(graph, n_replicas=2)
+        rs.submit(queries[0])
+        rs.run_to_completion()
+        snap = rs.metrics_snapshot()
+        assert set(snap) == {"replica_0", "replica_1"}
+        assert "repro_service_requests_total" in snap["replica_0"]
+        rs.shutdown()
